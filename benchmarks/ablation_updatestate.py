@@ -1,0 +1,43 @@
+"""Paper Fig. 9: updateState on/off while the query range grows.
+
+With updateState the probe stops at the per-category convergence radius R2;
+without it, execution time grows with R1."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import BenchEnv, Row, timeit
+
+SQL = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= {K}
+"""
+
+# growing ranges: average match counts per query (R1 growing, paper's
+# thresholds 0.8 -> 0.5)
+MATCH_TARGETS = (120, 500, 2000, 8000)
+
+
+def run(env: BenchEnv, rows: list):
+    K = env.cfg.k_category
+    sql = SQL.replace("{K}", str(K))
+    probe = env.cfg.probe
+    for target in MATCH_TARGETS:
+        t = min(target, env.cfg.n_rows - 2)
+        kth = np.partition(env.sims, -t, axis=1)[:, -t]
+        radius = float(np.median(kth))
+        for engine, label in (("chase", "with_updateState"),
+                              ("chase_no_updatestate", "without")):
+            q = compile_query(sql, env.catalog,
+                              EngineOptions(engine=engine, probe=probe))
+            ms = timeit(lambda: q(qv=env.qvecs[0], r=radius), repeats=3)
+            out = q(qv=env.qvecs[0], r=radius)
+            rows.append(Row(f"fig9_range{target}_{label}", ms,
+                            probes=int(out["stats"]["probes"]),
+                            evals=int(out["stats"]["distance_evals"])))

@@ -1,0 +1,50 @@
+"""Paper Table 5 analogue: execution-engine counters.
+
+The paper measures branch misses / instructions via perf; the architecture-
+neutral analogues measurable here:
+  * interpreter: Next() virtual-call count, per-tuple distance evals,
+    per-tuple predicate evals (the overhead §6 removes),
+  * compiled: ONE executable invocation, HLO instruction count (static),
+    distance evals (from the index scan stats).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+from repro.core.interpreter import run_interpreted
+from repro.data import make_laion_catalog
+
+from .common import BenchEnv, Row
+
+SQL = ("SELECT sample_id FROM products WHERE price < ${p} "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 50")
+
+
+def run(env: BenchEnv, rows: list, n_rows: int = 2000):
+    small = make_laion_catalog(n_rows=n_rows, n_queries=2, dim=env.cfg.dim,
+                               n_modes=16, seed=env.cfg.seed)
+    from repro.index import build_ivf
+    import jax
+    idx = build_ivf(jax.random.key(0), small.table("laion")["vec"],
+                    nlist=32, metric=env.cfg.metric, iters=3)
+    small.register_index("products", "embedding", idx)
+    qv = np.asarray(small.table("queries")["embedding"][0])
+    thr = float(np.quantile(np.asarray(small.table("laion")["price"]), 0.5))
+
+    _, counters = run_interpreted(SQL, small, {"p": thr, "qv": qv})
+    rows.append(Row("t5_interpreted_next_calls", 0.0,
+                    next_calls=counters.next_calls,
+                    distance_evals=counters.distance_evals,
+                    predicate_evals=counters.predicate_evals,
+                    tuples_materialized=counters.tuples_materialized))
+
+    q = compile_query(SQL, small, EngineOptions(engine="chase",
+                                                probe=env.cfg.probe))
+    out = q(p=thr, qv=qv)
+    hlo_lines = sum(1 for line in q.lower(p=thr, qv=qv).as_text()
+                    .splitlines() if "=" in line)
+    rows.append(Row("t5_chase_compiled", 0.0,
+                    executable_invocations=1,
+                    hlo_instructions_static=hlo_lines,
+                    distance_evals=int(out["stats"]["distance_evals"])))

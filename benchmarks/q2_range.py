@@ -1,0 +1,53 @@
+"""Paper Table 4: Q2 (DR-SF) — time + recall × selectivities × engines.
+PASE/pgvector cannot route range queries to the ANN index (§2.3) => their
+engine mode falls back to the compiled brute scan, as in the paper."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import SELECTIVITIES, BenchEnv, Row, recall_sets, timeit
+
+SQL_FILTERED = ("SELECT sample_id FROM images "
+                "WHERE DISTANCE(embedding, ${qv}) <= ${r} "
+                "AND price < ${p}")
+SQL_PLAIN = ("SELECT sample_id FROM images "
+             "WHERE DISTANCE(embedding, ${qv}) <= ${r}")
+
+ENGINES = ("chase", "vbase", "pase")
+
+
+def run(env: BenchEnv, rows: list, n_queries: int = 16):
+    n_queries = min(n_queries, env.qvecs.shape[0])
+    probe = env.cfg.probe
+    radius = env.radius_topk
+    for sel in SELECTIVITIES:
+        thr = env.price_thresholds[sel]
+        sql = SQL_PLAIN if sel == 1.0 else SQL_FILTERED
+        mask = None if sel == 1.0 else (env.price < thr)
+        gt_sets = []
+        for qi in range(n_queries):
+            hit = env.sims[qi] >= radius
+            if mask is not None:
+                hit &= mask
+            gt_sets.append(np.flatnonzero(hit))
+        for engine in ENGINES:
+            q = compile_query(sql, env.catalog,
+                              EngineOptions(engine=engine, probe=probe))
+
+            def call(qi=0):
+                binds = {"qv": env.qvecs[qi], "r": radius}
+                if sel < 1.0:
+                    binds["p"] = thr
+                return q(**binds)
+
+            ms = timeit(lambda: call(0), repeats=3)
+            recalls = []
+            for qi in range(n_queries):
+                out = call(qi)
+                recalls.append(recall_sets(out["ids"], out["valid"],
+                                           gt_sets[qi]))
+            rows.append(Row(f"q2_sel{sel}_{engine}", ms,
+                            recall=round(float(np.mean(recalls)), 4),
+                            evals=int(out["stats"]["distance_evals"])))

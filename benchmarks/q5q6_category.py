@@ -1,0 +1,77 @@
+"""Paper Fig. 8: Q5 (category partition) and Q6 (category join)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import BenchEnv, Row, recall_sets, timeit
+
+SQL_Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes
+ WHERE DISTANCE(embedding, ${qv}) <= ${r} AND cuisine <> ${ex}
+) AS ranked WHERE ranked.rank <= {K}
+"""
+
+SQL_Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= {K}
+"""
+
+ENGINES = ("chase", "vbase", "brute")
+
+
+def run(env: BenchEnv, rows: list, n_queries: int = 8):
+    n_queries = min(n_queries, env.qvecs.shape[0])
+    K = env.cfg.k_category
+    probe = env.cfg.probe
+    cats = np.asarray(env.catalog.table("laion")["calorie_level"])
+    cuisine = np.asarray(env.catalog.table("laion")["cuisine"])
+    radius = env.radius_topk
+
+    sql5 = SQL_Q5.replace("{K}", str(K))
+    for engine in ENGINES:
+        q = compile_query(sql5, env.catalog,
+                          EngineOptions(engine=engine, probe=probe))
+
+        def call(qi=0):
+            return q(qv=env.qvecs[qi], r=radius, ex=3)
+
+        ms = timeit(lambda: call(0), repeats=3)
+        recalls = []
+        for qi in range(n_queries):
+            out = call(qi)
+            hit = (env.sims[qi] >= radius) & (cuisine != 3)
+            ok = 0.0
+            C = env.cfg.num_categories
+            for c in range(C):
+                rows_c = np.flatnonzero(hit & (cats == c))
+                want = set(rows_c[np.argsort(-env.sims[qi][rows_c])][:K]
+                           .tolist())
+                got = set(np.asarray(out["ids"])[c][
+                    np.asarray(out["valid"])[c]].tolist())
+                ok += len(got & want) / max(len(want), 1)
+            recalls.append(ok / C)
+        rows.append(Row(f"q5_{engine}", ms,
+                        recall=round(float(np.mean(recalls)), 4),
+                        probes=int(out["stats"]["probes"])))
+
+    sql6 = SQL_Q6.replace("{K}", str(K))
+    for engine in ENGINES:
+        q = compile_query(sql6, env.catalog,
+                          EngineOptions(engine=engine, probe=probe))
+        ms = timeit(lambda: q(r=radius), repeats=3)
+        out = q(r=radius)
+        rows.append(Row(f"q6_{engine}", ms,
+                        valid=int(np.asarray(out["valid"]).sum())))

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--smoke] [--only q1,q4,...]
+
+Prints ``name,us_per_call,derived`` CSV (derived carries recall / counters).
+Engine modes reproduce the paper's comparison systems as query plans
+(DESIGN.md §3); 'interpreted' rows are measured on a subsample and scaled
+(flagged in the derived column).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from . import (ablation_updatestate, counters, q1_vknn, q2_range,
+               q3_distjoin, q4_knnjoin, q5q6_category)
+from .common import Row, get_env
+
+BENCHES = {
+    "q1": q1_vknn.run,
+    "q2": q2_range.run,
+    "q3": q3_distjoin.run,
+    "q4": q4_knnjoin.run,
+    "q5q6": q5q6_category.run,
+    "fig9": ablation_updatestate.run,
+    "t5": counters.run,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny corpus (CI-scale)")
+    ap.add_argument("--only", default=None,
+                    help="comma list of bench keys: " + ",".join(BENCHES))
+    args = ap.parse_args(argv)
+    env = get_env(smoke=args.smoke)
+    keys = list(BENCHES) if not args.only else args.only.split(",")
+    rows: list[Row] = []
+    print("name,us_per_call,derived")
+    for key in keys:
+        before = len(rows)
+        BENCHES[key](env, rows)
+        for r in rows[before:]:
+            print(r.csv(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

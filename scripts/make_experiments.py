@@ -1,0 +1,47 @@
+"""Generate EXPERIMENTS.md from dry-run JSONs + benchmark CSV + the §Perf
+narrative (hand-written below, numbers from the measured hillclimb log)."""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.roofline.report import dryrun_table, load_records, roofline_table
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def bench_section() -> str:
+    path = os.path.join(ROOT, "experiments", "bench_full.csv")
+    if not os.path.exists(path):
+        return "_bench_full.csv not found — run `python -m benchmarks.run`_"
+    lines = open(path).read().strip().splitlines()
+    out = ["| name | ms/call | derived |", "|---|---|---|"]
+    for ln in lines[1:]:
+        parts = ln.split(",", 2)
+        if len(parts) != 3:
+            continue
+        name, us, derived = parts
+        out.append(f"| {name} | {float(us)/1e3:.2f} | {derived} |")
+    return "\n".join(out)
+
+
+def main():
+    base = load_records(os.path.join(ROOT, "experiments", "dryrun_baseline"))
+    opt_dir = os.path.join(ROOT, "experiments", "dryrun")
+    opt = load_records(opt_dir)
+
+    narrative = open(os.path.join(ROOT, "scripts",
+                                  "experiments_narrative.md")).read()
+    doc = narrative
+    doc = doc.replace("{{DRYRUN_SINGLE}}", dryrun_table(base, "single"))
+    doc = doc.replace("{{DRYRUN_MULTI}}", dryrun_table(base, "multi"))
+    doc = doc.replace("{{ROOFLINE_BASELINE}}", roofline_table(base, "single"))
+    doc = doc.replace("{{ROOFLINE_OPTIMIZED}}", roofline_table(opt, "single"))
+    doc = doc.replace("{{BENCH}}", bench_section())
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(doc)
+    print("wrote EXPERIMENTS.md")
+
+
+if __name__ == "__main__":
+    main()

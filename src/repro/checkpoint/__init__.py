@@ -1,0 +1,3 @@
+from .checkpointer import Checkpointer, latest_step, restore, save
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save"]

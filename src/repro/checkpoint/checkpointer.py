@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: async, atomic, reshardable.
+
+Design (1000+-node posture, single-host mechanics here):
+* each host writes only its addressable shards (``.npz`` per host) — no
+  cross-host traffic at save time;
+* a manifest (json) commits the step atomically via rename; readers only
+  trust manifested steps, so a mid-save crash is invisible;
+* async: serialization happens on a background thread off the train loop
+  (device→host copy is the only sync part);
+* restore takes a *target sharding tree* — restoring onto a different mesh
+  (elastic resize, pod loss) just means device_put with the new shardings:
+  data was saved host-complete, so any mesh can consume it;
+* keep_last_k garbage collection.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _is_prng_key(leaf) -> bool:
+    try:
+        return jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key)
+    except (AttributeError, TypeError):
+        return False
+
+
+def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
+    flat = {}
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in leaves:
+        key = "/".join(str(p) for p in path)
+        if _is_prng_key(leaf):
+            flat[key + "__prngkey"] = np.asarray(jax.random.key_data(leaf))
+        else:
+            flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: Any, keep_last_k: int = 3) -> str:
+    """Synchronous save (the async path wraps this)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    np.savez(os.path.join(tmp, "host_0.npz"), **flat)
+    manifest = {"step": step, "time": time.time(),
+                "keys": sorted(flat.keys()), "hosts": 1}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic commit
+    _gc(ckpt_dir, keep_last_k)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            manifest = os.path.join(ckpt_dir, name, "manifest.json")
+            if os.path.exists(manifest):
+                out.append(int(name.split("_", 1)[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, target_tree: Any,
+            shardings: Any = None) -> Any:
+    """Restore into the structure of ``target_tree``.
+
+    ``shardings``: optional matching pytree of NamedSharding — this is the
+    elastic-resize path: the same host-complete arrays are device_put onto
+    whatever mesh is currently alive."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "host_0.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (p, leaf), shard in zip(leaves, shard_leaves):
+        key = "/".join(str(x) for x in p)
+        if key + "__prngkey" in data:
+            restored = jax.random.wrap_key_data(data[key + "__prngkey"])
+            out.append(restored)
+            continue
+        if key not in data:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        arr = arr.astype(leaf.dtype)
+        out.append(jax.device_put(arr, shard) if shard is not None
+                   else jax.device_put(arr))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(target_tree), out)
+
+
+class Checkpointer:
+    """Async wrapper: offloads serialization to a background thread."""
+
+    def __init__(self, ckpt_dir: str, keep_last_k: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep_last_k
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save_async(self, step: int, tree: Any) -> None:
+        self.wait()
+        # sync device->host copy (typed PRNG keys handled by _flatten)
+        host_tree = jax.tree.map(
+            lambda x: x if _is_prng_key(x) else np.asarray(x), tree)
+
+        def _run():
+            try:
+                save(self.ckpt_dir, step, host_tree, self.keep)
+            except BaseException as e:   # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=_run, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

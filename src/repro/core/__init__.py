@@ -1,0 +1,17 @@
+"""CHASE core: native hybrid-query engine (the paper's contribution)."""
+from .compiler import CompiledQuery, compile_query
+from .expr import Bindings, Column, Const, Distance, Param
+from .physical import EngineOptions
+from .schema import (Catalog, ColumnKind, ColumnType, Metric, Schema, Table,
+                     bool_col, category_col, float_col, int_col, vector_col)
+from .semantics import Analysis, QueryClass, analyze
+from .sql import parse_sql
+from .rewriter import rewrite
+
+__all__ = [
+    "CompiledQuery", "compile_query", "Bindings", "Column", "Const",
+    "Distance", "Param", "EngineOptions", "Catalog", "ColumnKind",
+    "ColumnType", "Metric", "Schema", "Table", "bool_col", "category_col",
+    "float_col", "int_col", "vector_col", "Analysis", "QueryClass", "analyze",
+    "parse_sql", "rewrite",
+]

@@ -1,0 +1,253 @@
+"""Scalar / vector expression IR for predicates and projections.
+
+Mirrors CHASE §6's db-dialect extensions: distance functions
+(``L2Distance`` / ``InnerProduct``) are expression nodes over a first-class
+vector column, so the optimizer can *see* them — the prerequisite for the map
+operator rewrite (R1) and for routing a predicate ``DISTANCE(...) <= r`` to the
+ANN range-scan physical operator instead of a brute-force filter.
+
+Expressions evaluate columnar over a Table (every node returns an (N,) array,
+or (N, dim) for vector-valued nodes), so the compiled plan is pure vectorized
+JAX — this *is* the data-centric codegen analogue.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax.numpy as jnp
+
+from .schema import Metric, Table
+
+
+class Expr:
+    def children(self) -> Sequence["Expr"]:
+        return ()
+
+    # -- convenience builders -------------------------------------------------
+    def __lt__(self, o): return Cmp("<", self, wrap(o))
+    def __le__(self, o): return Cmp("<=", self, wrap(o))
+    def __gt__(self, o): return Cmp(">", self, wrap(o))
+    def __ge__(self, o): return Cmp(">=", self, wrap(o))
+    def eq(self, o): return Cmp("=", self, wrap(o))
+    def ne(self, o): return Cmp("<>", self, wrap(o))
+    def __and__(self, o): return BoolOp("and", (self, wrap(o)))
+    def __or__(self, o): return BoolOp("or", (self, wrap(o)))
+    def __invert__(self): return BoolOp("not", (self,))
+    def __add__(self, o): return Arith("+", self, wrap(o))
+    def __sub__(self, o): return Arith("-", self, wrap(o))
+    def __mul__(self, o): return Arith("*", self, wrap(o))
+
+
+def wrap(v) -> Expr:
+    return v if isinstance(v, Expr) else Const(v)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Column(Expr):
+    name: str
+    table: str | None = None   # qualifier, e.g. "users.embedding"
+
+    def __repr__(self):
+        return f"{self.table}.{self.name}" if self.table else self.name
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Const(Expr):
+    value: Any
+
+    def __repr__(self):
+        return repr(self.value)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Param(Expr):
+    """A `${name}` placeholder bound at execution time (query vector, radius...)."""
+    name: str
+
+    def __repr__(self):
+        return f"${{{self.name}}}"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Cmp(Expr):
+    op: str  # < <= > >= = <>
+    lhs: Expr
+    rhs: Expr
+
+    def children(self):
+        return (self.lhs, self.rhs)
+
+    def __repr__(self):
+        return f"({self.lhs!r} {self.op} {self.rhs!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class BoolOp(Expr):
+    op: str  # and / or / not
+    operands: tuple[Expr, ...]
+
+    def children(self):
+        return self.operands
+
+    def __repr__(self):
+        if self.op == "not":
+            return f"(not {self.operands[0]!r})"
+        return "(" + f" {self.op} ".join(map(repr, self.operands)) + ")"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Arith(Expr):
+    op: str  # + - * /
+    lhs: Expr
+    rhs: Expr
+
+    def children(self):
+        return (self.lhs, self.rhs)
+
+    def __repr__(self):
+        return f"({self.lhs!r} {self.op} {self.rhs!r})"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class Distance(Expr):
+    """DISTANCE(vector_expr, vector_expr) — the hybrid-query pivot node.
+
+    ``metric`` resolves from the column's declared metric at bind time.
+    Under similarity metrics (IP/cosine) the paper's convention is that
+    ``ORDER BY DISTANCE(...)`` ranks most-similar first and
+    ``DISTANCE(...) <= r`` means similarity >= r (LAION uses inner product with
+    threshold 0.8); the engine normalizes both through :meth:`score`.
+    """
+    lhs: Expr
+    rhs: Expr
+    metric: Metric | None = None
+
+    def children(self):
+        return (self.lhs, self.rhs)
+
+    def __repr__(self):
+        return f"DISTANCE({self.lhs!r}, {self.rhs!r})"
+
+
+# ---------------------------------------------------------------------------
+# Evaluation
+# ---------------------------------------------------------------------------
+
+def distance_values(metric: Metric, x: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Rowwise distance/similarity between (N,d) x and (d,) or (N,d) q."""
+    if q.ndim == 1:
+        q = jnp.broadcast_to(q, x.shape)
+    x = x.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    if metric == Metric.L2:
+        d = x - q
+        return jnp.sum(d * d, axis=-1)
+    if metric == Metric.INNER_PRODUCT:
+        return jnp.sum(x * q, axis=-1)
+    if metric == Metric.COSINE:
+        num = jnp.sum(x * q, axis=-1)
+        den = jnp.linalg.norm(x, axis=-1) * jnp.linalg.norm(q, axis=-1) + 1e-12
+        return num / den
+    raise ValueError(metric)
+
+
+def order_key(metric: Metric, values: jnp.ndarray) -> jnp.ndarray:
+    """Map raw distance/similarity to an ascending sort key (smaller = better)."""
+    return -values if metric.is_similarity() else values
+
+
+def in_range(metric: Metric, values: jnp.ndarray, radius) -> jnp.ndarray:
+    """``DISTANCE(x,q) <= radius`` under the paper's convention."""
+    return values >= radius if metric.is_similarity() else values <= radius
+
+
+class Bindings(dict):
+    """Parameter name → value (query vectors, thresholds, K...)."""
+
+
+def evaluate(expr: Expr, table: Table, binds: Bindings,
+             prefix_cols: dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    """Columnar evaluation of ``expr`` over ``table``.
+
+    ``prefix_cols`` supplies extra computed columns (e.g. the map operator's
+    ``__sim``) that shadow schema columns.
+    """
+    pc = prefix_cols or {}
+
+    def ev(e: Expr) -> jnp.ndarray:
+        if isinstance(e, Column):
+            if e.name in pc:
+                return pc[e.name]
+            return table[e.name]
+        if isinstance(e, Const):
+            return jnp.asarray(e.value)
+        if isinstance(e, Param):
+            return jnp.asarray(binds[e.name])
+        if isinstance(e, Cmp):
+            lo, hi = ev(e.lhs), ev(e.rhs)
+            return {
+                "<": lambda: lo < hi, "<=": lambda: lo <= hi,
+                ">": lambda: lo > hi, ">=": lambda: lo >= hi,
+                "=": lambda: lo == hi, "<>": lambda: lo != hi,
+            }[e.op]()
+        if isinstance(e, BoolOp):
+            if e.op == "not":
+                return ~ev(e.operands[0])
+            vals = [ev(o) for o in e.operands]
+            out = vals[0]
+            for v in vals[1:]:
+                out = (out & v) if e.op == "and" else (out | v)
+            return out
+        if isinstance(e, Arith):
+            lo, hi = ev(e.lhs), ev(e.rhs)
+            return {"+": lambda: lo + hi, "-": lambda: lo - hi,
+                    "*": lambda: lo * hi, "/": lambda: lo / hi}[e.op]()
+        if isinstance(e, Distance):
+            x = ev(e.lhs)
+            q = ev(e.rhs)
+            metric = e.metric or Metric.INNER_PRODUCT
+            return distance_values(metric, x, q)
+        raise TypeError(f"cannot evaluate {type(e)}")
+
+    return ev(expr)
+
+
+# -- structural helpers used by the semantic analyzer -----------------------
+
+def walk(expr: Expr):
+    yield expr
+    for c in expr.children():
+        yield from walk(c)
+
+
+def find_distance(expr: Expr) -> Distance | None:
+    for node in walk(expr):
+        if isinstance(node, Distance):
+            return node
+    return None
+
+
+def contains_distance(expr: Expr) -> bool:
+    return find_distance(expr) is not None
+
+
+def split_conjuncts(expr: Expr | None) -> list[Expr]:
+    """Flatten nested ANDs into a conjunct list."""
+    if expr is None:
+        return []
+    if isinstance(expr, BoolOp) and expr.op == "and":
+        out: list[Expr] = []
+        for o in expr.operands:
+            out.extend(split_conjuncts(o))
+        return out
+    return [expr]
+
+
+def conjoin(exprs: Sequence[Expr]) -> Expr | None:
+    exprs = list(exprs)
+    if not exprs:
+        return None
+    if len(exprs) == 1:
+        return exprs[0]
+    return BoolOp("and", tuple(exprs))

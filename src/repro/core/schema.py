@@ -1,0 +1,180 @@
+"""Relational schema with first-class vector columns.
+
+The paper's central design point is that the vector attribute must be a
+first-class citizen of the engine (CHASE §1, §6: ``DenseVectorType<dim>`` in the
+db dialect).  Here a :class:`Table` is a columnar batch of jnp arrays with a
+typed :class:`Schema`; vector columns carry their dimensionality and metric.
+
+TPU static-shape discipline: tables are fixed-capacity.  Row deletion /
+selection is represented by a validity mask, never by physically shrinking an
+array, so every operator stays shape-stable under jit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Any, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+
+class ColumnKind(enum.Enum):
+    INT = "int"
+    FLOAT = "float"
+    BOOL = "bool"
+    CATEGORY = "category"  # small-int category codes (dictionary-encoded)
+    VECTOR = "vector"      # dense embedding
+
+
+class Metric(enum.Enum):
+    L2 = "l2"
+    INNER_PRODUCT = "ip"
+    COSINE = "cosine"
+
+    def is_similarity(self) -> bool:
+        """True when larger values mean *more* similar (IP / cosine)."""
+        return self in (Metric.INNER_PRODUCT, Metric.COSINE)
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnType:
+    kind: ColumnKind
+    dtype: Any = None          # jnp dtype; defaulted per kind
+    dim: int | None = None     # vector dimensionality
+    num_categories: int | None = None  # category cardinality (when known)
+    metric: Metric = Metric.INNER_PRODUCT
+
+    def __post_init__(self):
+        if self.dtype is None:
+            default = {
+                ColumnKind.INT: jnp.int32,
+                ColumnKind.FLOAT: jnp.float32,
+                ColumnKind.BOOL: jnp.bool_,
+                ColumnKind.CATEGORY: jnp.int32,
+                ColumnKind.VECTOR: jnp.float32,
+            }[self.kind]
+            object.__setattr__(self, "dtype", default)
+        if self.kind == ColumnKind.VECTOR and not self.dim:
+            raise ValueError("vector columns require dim")
+
+
+def int_col(dtype=jnp.int32) -> ColumnType:
+    return ColumnType(ColumnKind.INT, dtype)
+
+
+def float_col(dtype=jnp.float32) -> ColumnType:
+    return ColumnType(ColumnKind.FLOAT, dtype)
+
+
+def bool_col() -> ColumnType:
+    return ColumnType(ColumnKind.BOOL)
+
+
+def category_col(num_categories: int | None = None) -> ColumnType:
+    return ColumnType(ColumnKind.CATEGORY, num_categories=num_categories)
+
+
+def vector_col(dim: int, metric: Metric = Metric.INNER_PRODUCT,
+               dtype=jnp.float32) -> ColumnType:
+    return ColumnType(ColumnKind.VECTOR, dtype, dim=dim, metric=metric)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    columns: Mapping[str, ColumnType]
+    primary_key: str | None = None
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    def __getitem__(self, name: str) -> ColumnType:
+        return self.columns[name]
+
+    def vector_columns(self) -> list[str]:
+        return [n for n, t in self.columns.items() if t.kind == ColumnKind.VECTOR]
+
+    def names(self) -> list[str]:
+        return list(self.columns.keys())
+
+
+class Table:
+    """Columnar fixed-capacity table: dict of equally-sized jnp arrays.
+
+    ``valid`` marks live rows (static-shape selection).  All engine operators
+    consume and produce Tables, threading ``valid`` through.
+    """
+
+    def __init__(self, schema: Schema, columns: Mapping[str, jnp.ndarray],
+                 valid: jnp.ndarray | None = None, name: str = "t"):
+        self.schema = schema
+        self.columns = dict(columns)
+        self.name = name
+        sizes = {v.shape[0] for v in self.columns.values()}
+        if len(sizes) != 1:
+            raise ValueError(f"ragged columns: {sizes}")
+        (self.num_rows,) = sizes
+        for cname, ctype in schema.columns.items():
+            if cname not in self.columns:
+                raise ValueError(f"missing column {cname}")
+            if ctype.kind == ColumnKind.VECTOR:
+                arr = self.columns[cname]
+                if arr.ndim != 2 or arr.shape[1] != ctype.dim:
+                    raise ValueError(
+                        f"vector column {cname}: expected (N,{ctype.dim}), got {arr.shape}")
+        if valid is None:
+            valid = jnp.ones((self.num_rows,), dtype=jnp.bool_)
+        self.valid = valid
+
+    def __getitem__(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    def with_column(self, name: str, ctype: ColumnType, values: jnp.ndarray) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = values
+        schema = Schema({**dict(self.schema.columns), name: ctype},
+                        self.schema.primary_key)
+        return Table(schema, cols, self.valid, self.name)
+
+    def with_valid(self, valid: jnp.ndarray) -> "Table":
+        return Table(self.schema, self.columns, valid, self.name)
+
+    def take(self, idx: jnp.ndarray, valid: jnp.ndarray | None = None) -> "Table":
+        """Gather rows by index (fixed output size = idx size)."""
+        cols = {n: v[idx] for n, v in self.columns.items()}
+        base_valid = self.valid[idx]
+        if valid is not None:
+            base_valid = base_valid & valid
+        return Table(self.schema, cols, base_valid, self.name)
+
+    def to_numpy(self) -> dict[str, np.ndarray]:
+        out = {n: np.asarray(v) for n, v in self.columns.items()}
+        out["__valid"] = np.asarray(self.valid)
+        return out
+
+
+class Catalog:
+    """Name → Table registry plus per-(table, column) ANN indexes."""
+
+    def __init__(self):
+        self._tables: dict[str, Table] = {}
+        self._indexes: dict[tuple[str, str], Any] = {}
+
+    def register(self, name: str, table: Table) -> None:
+        table.name = name
+        self._tables[name] = table
+
+    def table(self, name: str) -> Table:
+        return self._tables[name]
+
+    def has_table(self, name: str) -> bool:
+        return name in self._tables
+
+    def register_index(self, table: str, column: str, index: Any) -> None:
+        self._indexes[(table, column)] = index
+
+    def index_for(self, table: str, column: str):
+        return self._indexes.get((table, column))
+
+    def tables(self) -> list[str]:
+        return list(self._tables)

@@ -1,0 +1,3 @@
+from .laion import make_laion_catalog, selectivity_threshold
+
+__all__ = ["make_laion_catalog", "selectivity_threshold"]

@@ -1,0 +1,5 @@
+from .flat import FlatIndex
+from .ivf import IVFIndex, build_ivf
+from .kmeans import kmeans
+
+__all__ = ["FlatIndex", "IVFIndex", "build_ivf", "kmeans"]

@@ -1,0 +1,69 @@
+"""Brute-force (exact) index: ground truth for recall and the fallback scan.
+
+Implements the same probe API as :class:`IVFIndex` so physical operators are
+index-polymorphic.  This is also the "LingoDB-V" baseline's scan: compiled,
+fused, but index-less.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.schema import Metric
+from ..core.expr import distance_values, in_range, order_key
+
+NEG_ID = jnp.int32(-1)
+
+
+def masked_topk(keys: jnp.ndarray, ids: jnp.ndarray, mask: jnp.ndarray,
+                k: int) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Smallest-k by key among masked rows. Returns (keys, ids, valid)."""
+    big = jnp.asarray(jnp.inf, keys.dtype)
+    keyed = jnp.where(mask, keys, big)
+    neg, idx = jax.lax.top_k(-keyed, k)      # top_k takes largest
+    sel_keys = -neg
+    sel_ids = ids[idx]
+    valid = jnp.isfinite(sel_keys)
+    return sel_keys, jnp.where(valid, sel_ids, NEG_ID), valid
+
+
+@dataclasses.dataclass
+class FlatIndex:
+    """Exact scan over an (N, d) corpus with a given metric."""
+    metric: Metric
+    vectors: jnp.ndarray
+
+    @property
+    def num_rows(self) -> int:
+        return int(self.vectors.shape[0])
+
+    def topk(self, query: jnp.ndarray, k: int,
+             row_mask: jnp.ndarray | None = None):
+        """Exact filtered top-k.  Returns (ids, sims(raw metric), valid)."""
+        raw = distance_values(self.metric, self.vectors, query)
+        keys = order_key(self.metric, raw)
+        n = self.vectors.shape[0]
+        mask = jnp.ones((n,), jnp.bool_) if row_mask is None else row_mask
+        ids = jnp.arange(n, dtype=jnp.int32)
+        sel_keys, sel_ids, valid = masked_topk(keys, ids, mask, k)
+        sims = jnp.where(valid,
+                         -sel_keys if self.metric.is_similarity() else sel_keys,
+                         0.0)
+        return sel_ids, sims, valid
+
+    def range_mask(self, query: jnp.ndarray, radius,
+                   row_mask: jnp.ndarray | None = None):
+        """Exact range query. Returns ((N,) hit mask, (N,) raw sims)."""
+        raw = distance_values(self.metric, self.vectors, query)
+        hit = in_range(self.metric, raw, radius)
+        if row_mask is not None:
+            hit = hit & row_mask
+        return hit, raw
+
+    # distance evaluation count (for the paper's "number of similarity
+    # computations" reporting)
+    def probe_cost(self) -> int:
+        return self.num_rows

@@ -1,0 +1,370 @@
+"""IVF index: the TPU-native adaptation of CHASE's ANN layer.
+
+HNSW (the paper's index) is a pointer-chasing graph walk — hostile to the MXU.
+IVF preserves the property the paper's algorithms actually rely on —
+*monotone outward expansion from the query's neighborhood* — while turning
+every step into dense batched compute:
+
+* probe order   = ascending centroid order-key (a `Q·Cᵀ` matmul + argsort),
+* cluster scan  = padded gather + blocked distance matmul + predicate mask,
+* Algorithm 1's per-tuple ``outRangeCounter`` becomes a per-*cluster* counter
+  inside a ``jax.lax.while_loop`` (§DESIGN.md 2),
+* Algorithm 2's hash record-table becomes dense per-category state arrays.
+
+Beyond-paper addition: each cluster stores its radius (max member-centroid
+distance), giving a *sound lower bound* on any unprobed member's order key.
+``termination='bound'`` uses it for exact early termination (the paper's R2
+shrinkage made provable); ``termination='counter'`` is the faithful heuristic.
+
+All probes return raw similarity values alongside ids — the physical layer's
+contract with the **map operator** (§5.1): similarity computed during the scan
+is *never* recomputed downstream.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..core.expr import distance_values, order_key
+from ..core.schema import Metric
+from .kmeans import assign, kmeans
+
+INF = jnp.float32(jnp.inf)
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["centroids", "lists", "list_sizes", "radii", "centroid_sq"],
+    meta_fields=["metric", "nlist", "cap"],
+)
+@dataclasses.dataclass
+class IVFIndex:
+    metric: Metric
+    centroids: jnp.ndarray     # (nlist, d)
+    lists: jnp.ndarray         # (nlist, cap) int32 row ids, -1 padded
+    list_sizes: jnp.ndarray    # (nlist,) int32
+    radii: jnp.ndarray         # (nlist,) max ||member - centroid||
+    centroid_sq: jnp.ndarray   # (nlist,) ||c||^2 (L2 fast path)
+    nlist: int
+    cap: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ProbeConfig:
+    """Static probe parameters (the engine's physical-operator knobs)."""
+    max_probes: int = 64            # hard cap on clusters visited
+    min_probes: int = 4             # converge-first phase (Alg.1 lines 2-3)
+    stop_after_no_improve: int = 4  # top-k adaptive-queue stop (VBASE analogue)
+    out_range_stop: int = 2         # Alg.1 `IsAboveN` N, cluster-granular
+    capacity: int = 4096            # range-probe result buffer
+    termination: str = "counter"    # 'counter' (faithful) | 'bound' (exact)
+    no_new_category_stop: int = 2   # Alg.2: clusters w/o new category
+    num_categories: int = 0         # static category cardinality (Alg.2)
+    k_per_category: int = 10        # Alg.2 K
+
+
+def build_ivf(key: jax.Array, vectors: jnp.ndarray, nlist: int,
+              metric: Metric = Metric.INNER_PRODUCT, iters: int = 8,
+              cap_multiple: int = 4) -> IVFIndex:
+    """Train centroids, bucket rows into padded inverted lists."""
+    import numpy as np
+    n, d = vectors.shape
+    centroids = kmeans(key, vectors, nlist, iters=iters)
+    a = np.asarray(assign(vectors, centroids))
+    counts = np.bincount(a, minlength=nlist)
+    cap = int(counts.max())
+    cap = max(8, -(-cap // 8) * 8)  # round up for lane alignment
+    lists = np.full((nlist, cap), -1, dtype=np.int32)
+    cursor = np.zeros(nlist, dtype=np.int64)
+    order = np.argsort(a, kind="stable")
+    for row in order:
+        c = a[row]
+        lists[c, cursor[c]] = row
+        cursor[c] += 1
+    # cluster radii: max ||x - centroid|| per cluster
+    vec_np = np.asarray(vectors, dtype=np.float32)
+    cent_np = np.asarray(centroids, dtype=np.float32)
+    diffs = vec_np - cent_np[a]
+    norms = np.linalg.norm(diffs, axis=1)
+    radii = np.zeros(nlist, dtype=np.float32)
+    np.maximum.at(radii, a, norms)
+    return IVFIndex(
+        metric=metric,
+        centroids=jnp.asarray(centroids),
+        lists=jnp.asarray(lists),
+        list_sizes=jnp.asarray(counts.astype(np.int32)),
+        radii=jnp.asarray(radii),
+        centroid_sq=jnp.sum(jnp.asarray(centroids) ** 2, axis=1),
+        nlist=nlist,
+        cap=cap,
+    )
+
+
+# ---------------------------------------------------------------------------
+# shared probe plumbing
+# ---------------------------------------------------------------------------
+
+def _cluster_order(index: IVFIndex, q: jnp.ndarray):
+    """Clusters sorted by ascending centroid order-key; returns (order, keys,
+    bound_keys) where bound_keys[i] lower-bounds any member of order[i]."""
+    raw = distance_values(index.metric, index.centroids, q)
+    keys = order_key(index.metric, raw)
+    if index.metric == Metric.L2:
+        # members within radius r of c: sqdist >= max(0, ||q-c|| - r)^2
+        dist = jnp.sqrt(jnp.maximum(keys, 0.0))
+        bound = jnp.maximum(dist - index.radii, 0.0) ** 2
+    elif index.metric == Metric.INNER_PRODUCT:
+        # x·q <= c·q + r*||q||  =>  key = -x·q >= -(c·q) - r||q||
+        qn = jnp.linalg.norm(q)
+        bound = keys - index.radii * qn
+    else:  # cosine: |cos(x,q) - cos-ish bound|; use conservative -1 shift
+        bound = keys - index.radii
+    order = jnp.argsort(keys)
+    # suffix-min of bounds: bound_sufmin[p] lower-bounds every member of every
+    # cluster from probe position p onward (bounds are NOT monotone in probe
+    # order, so the exact-termination test needs the suffix minimum).
+    bound_sufmin = jnp.flip(jax.lax.cummin(jnp.flip(bound[order])))
+    return order, keys[order], bound_sufmin
+
+
+def _scan_cluster(index: IVFIndex, corpus: jnp.ndarray, q: jnp.ndarray,
+                  cluster: jnp.ndarray, row_mask: jnp.ndarray | None):
+    """Gather one inverted list and compute masked order-keys.
+
+    Returns (ids (cap,), keys (cap,), valid (cap,), n_distance_evals)."""
+    ids = index.lists[cluster]                       # (cap,)
+    pad = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    vecs = corpus[safe]                              # (cap, d)
+    raw = distance_values(index.metric, vecs, q)
+    keys = order_key(index.metric, raw)
+    valid = pad
+    if row_mask is not None:
+        valid = valid & row_mask[safe]
+    return ids, jnp.where(pad, keys, INF), valid, jnp.sum(pad)
+
+
+def _merge_topk(best_keys, best_ids, cand_keys, cand_ids, cand_valid, k):
+    keys = jnp.concatenate([best_keys, jnp.where(cand_valid, cand_keys, INF)])
+    ids = jnp.concatenate([best_ids, cand_ids])
+    neg, idx = jax.lax.top_k(-keys, k)
+    return -neg, ids[idx]
+
+
+# ---------------------------------------------------------------------------
+# Top-k probe (VKNN-SF physical operator, §5.1)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def ivf_topk(index: IVFIndex, corpus: jnp.ndarray, q: jnp.ndarray, k: int,
+             row_mask: jnp.ndarray | None = None,
+             cfg: ProbeConfig = ProbeConfig()):
+    """Filtered top-k with the adaptive probe queue.
+
+    VBASE's relaxed-monotonicity insight, IVF-shaped: instead of fetching a
+    conservative K' ≫ K (PASE), keep extending the probe frontier until K
+    *filtered* results are held AND the frontier stops improving the heap
+    ('counter'), or provably cannot ('bound').  Returns
+    (ids(k,), sims(k,), valid(k,), stats)."""
+    order, _, bounds = _cluster_order(index, q)
+    max_probes = min(cfg.max_probes, index.nlist)
+
+    def cond(state):
+        p, bk, bi, no_imp, evals = state
+        have_k = jnp.isfinite(bk[k - 1])
+        kth = bk[k - 1]
+        if cfg.termination == "bound":
+            next_bound = bounds[jnp.minimum(p, index.nlist - 1)]
+            done = have_k & (next_bound > kth)
+        else:
+            done = have_k & (no_imp >= cfg.stop_after_no_improve)
+        done = done & (p >= cfg.min_probes)
+        return (p < max_probes) & ~done
+
+    def body(state):
+        p, bk, bi, no_imp, evals = state
+        ids, keys, valid, n = _scan_cluster(index, corpus, q, order[p], row_mask)
+        old_kth = bk[k - 1]
+        bk2, bi2 = _merge_topk(bk, bi, keys, ids, valid, k)
+        improved = (bk2[k - 1] < old_kth) | (~jnp.isfinite(old_kth)
+                                             & jnp.isfinite(bk2[k - 1]))
+        no_imp2 = jnp.where(improved, 0, no_imp + 1)
+        return (p + 1, bk2, bi2, no_imp2, evals + n)
+
+    init = (jnp.int32(0), jnp.full((k,), INF), jnp.full((k,), -1, jnp.int32),
+            jnp.int32(0), jnp.int32(0))
+    p, bk, bi, _, evals = jax.lax.while_loop(cond, body, init)
+    valid = jnp.isfinite(bk)
+    sims = jnp.where(valid, -bk if index.metric.is_similarity() else bk, 0.0)
+    stats = {"probes": p, "distance_evals": evals}
+    return jnp.where(valid, bi, -1), sims, valid, stats
+
+
+# ---------------------------------------------------------------------------
+# Range probe — Algorithm 1, cluster-granular
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ivf_range(index: IVFIndex, corpus: jnp.ndarray, q: jnp.ndarray,
+              radius, row_mask: jnp.ndarray | None = None,
+              cfg: ProbeConfig = ProbeConfig()):
+    """DR-SF physical operator (paper Algorithm 1).
+
+    Probes clusters by ascending centroid key; a probe round with in-range hits
+    sets ``hasInRange``; after entering the range, ``out_range_stop``
+    consecutive empty rounds end the scan ('counter'), or the radius-vs-bound
+    test ends it exactly ('bound').  Returns (ids(capacity,), sims, valid,
+    count, stats)."""
+    order, _, bounds = _cluster_order(index, q)
+    max_probes = min(cfg.max_probes, index.nlist)
+    radius_key = order_key(index.metric, jnp.asarray(radius, jnp.float32))
+    capacity = cfg.capacity
+
+    def cond(state):
+        p, *_rest, has_in, out_cnt, evals = state
+        if cfg.termination == "bound":
+            next_bound = bounds[jnp.minimum(p, index.nlist - 1)]
+            done = next_bound > radius_key
+        else:
+            done = has_in & (out_cnt >= cfg.out_range_stop)
+        done = done & (p >= cfg.min_probes)
+        return (p < max_probes) & ~done
+
+    def body(state):
+        p, out_ids, out_keys, count, has_in, out_cnt, evals = state
+        ids, keys, valid, n = _scan_cluster(index, corpus, q, order[p], None)
+        in_range_hit = valid & (keys <= radius_key)     # pre-filter (Alg.1's
+        # hasInRange tracks the RANGE only; the structured filter must not
+        # starve the termination signal at low selectivity)
+        hit = in_range_hit
+        if row_mask is not None:
+            hit = hit & row_mask[jnp.maximum(ids, 0)]
+        n_range = jnp.sum(in_range_hit)
+        n_hits = jnp.sum(hit)
+        # compact-append filtered hits into the fixed buffer
+        pos = count + jnp.cumsum(hit) - 1
+        ok = hit & (pos < capacity)
+        safe_pos = jnp.where(ok, pos, capacity)        # capacity row = scratch
+        out_ids = out_ids.at[safe_pos].set(jnp.where(ok, ids, -1), mode="drop")
+        out_keys = out_keys.at[safe_pos].set(jnp.where(ok, keys, INF),
+                                             mode="drop")
+        count2 = jnp.minimum(count + n_hits, capacity)
+        has_in2 = has_in | (n_range > 0)
+        out_cnt2 = jnp.where(n_range > 0, 0, jnp.where(has_in, out_cnt + 1, 0))
+        return (p + 1, out_ids, out_keys, count2, has_in2, out_cnt2, evals + n)
+
+    init = (jnp.int32(0),
+            jnp.full((capacity,), -1, jnp.int32),
+            jnp.full((capacity,), INF),
+            jnp.int32(0), jnp.bool_(False), jnp.int32(0), jnp.int32(0))
+    p, out_ids, out_keys, count, _, _, evals = jax.lax.while_loop(cond, body, init)
+    valid = out_ids >= 0
+    sims = jnp.where(valid,
+                     -out_keys if index.metric.is_similarity() else out_keys,
+                     0.0)
+    stats = {"probes": p, "distance_evals": evals}
+    return out_ids, sims, valid, count, stats
+
+
+# ---------------------------------------------------------------------------
+# Category probe — Algorithm 2 (updateState) fused into the range scan
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ivf_range_category(index: IVFIndex, corpus: jnp.ndarray,
+                       categories: jnp.ndarray, q: jnp.ndarray, radius,
+                       row_mask: jnp.ndarray | None = None,
+                       cfg: ProbeConfig = ProbeConfig(num_categories=8)):
+    """Category-driven probe: range scan + the updateState record table.
+
+    The paper's hash table T becomes dense arrays over the static category
+    universe: per-category hit counts (``filteredK_c``), a per-category best-K
+    key heap (the 'search queue'), and a seen mask.  A category *converges*
+    when it holds K hits whose kth key beats the probe frontier (the
+    monotonicity check of Alg. 2 line 6, made sound by cluster radii under
+    'bound' termination).  The scan stops early when every seen category has
+    converged and ``no_new_category_stop`` rounds brought no new category —
+    i.e. the dynamic R2 < R1 range shrinkage of §4.3.
+
+    Returns (ids, sims, valid, count, stats)."""
+    C = cfg.num_categories
+    K = cfg.k_per_category
+    assert C > 0, "category probe needs static num_categories"
+    order, _, bounds = _cluster_order(index, q)
+    max_probes = min(cfg.max_probes, index.nlist)
+    radius_key = order_key(index.metric, jnp.asarray(radius, jnp.float32))
+    capacity = cfg.capacity
+
+    def cond(state):
+        (p, _oi, _ok, _cnt, has_in, out_cnt, seen, counts, kth, no_new,
+         evals) = state
+        frontier = bounds[jnp.minimum(p, index.nlist - 1)] \
+            if cfg.termination == "bound" else radius_key
+        # Alg.2: converged_c = filteredK_c >= K and queue monotonic past kth
+        converged = (counts >= K) & (kth[:, K - 1] <= frontier)
+        rest = jnp.sum(seen & ~converged)            # T.restElements
+        cat_done = (rest == 0) & (no_new >= cfg.no_new_category_stop) \
+            & jnp.any(seen)
+        if cfg.termination == "bound":
+            range_done = bounds[jnp.minimum(p, index.nlist - 1)] > radius_key
+        else:
+            range_done = has_in & (out_cnt >= cfg.out_range_stop)
+        done = (cat_done | range_done) & (p >= cfg.min_probes)
+        return (p < max_probes) & ~done
+
+    def body(state):
+        (p, out_ids, out_keys, count, has_in, out_cnt, seen, counts, kth,
+         no_new, evals) = state
+        ids, keys, valid, n = _scan_cluster(index, corpus, q, order[p], None)
+        in_range_hit = valid & (keys <= radius_key)   # range only (Alg.1)
+        hit = in_range_hit
+        if row_mask is not None:
+            hit = hit & row_mask[jnp.maximum(ids, 0)]
+        n_range = jnp.sum(in_range_hit)
+        n_hits = jnp.sum(hit)
+        safe = jnp.maximum(ids, 0)
+        cats = jnp.where(hit, categories[safe], -1)  # (cap,)
+
+        onehot = (cats[:, None] == jnp.arange(C)[None, :])   # (cap, C)
+        cat_hits = jnp.sum(onehot, axis=0)                   # (C,)
+        new_seen = seen | (cat_hits > 0)
+        n_new_cats = jnp.sum(new_seen) - jnp.sum(seen)
+        counts2 = counts + cat_hits
+        # per-category best-K merge ('search queue' update, Alg.2 line 5)
+        cand = jnp.where(onehot, keys[:, None], INF)         # (cap, C)
+        merged = jnp.concatenate([kth, cand.T], axis=1)      # (C, K+cap)
+        kth2 = -jax.lax.top_k(-merged, K)[0]                 # smallest K keys
+
+        pos = count + jnp.cumsum(hit) - 1
+        ok = hit & (pos < capacity)
+        safe_pos = jnp.where(ok, pos, capacity)
+        out_ids = out_ids.at[safe_pos].set(jnp.where(ok, ids, -1), mode="drop")
+        out_keys = out_keys.at[safe_pos].set(jnp.where(ok, keys, INF),
+                                             mode="drop")
+        count2 = jnp.minimum(count + n_hits, capacity)
+        has_in2 = has_in | (n_range > 0)
+        out_cnt2 = jnp.where(n_range > 0, 0,
+                             jnp.where(has_in, out_cnt + 1, 0))
+        no_new2 = jnp.where(n_new_cats > 0, 0, no_new + 1)
+        return (p + 1, out_ids, out_keys, count2, has_in2, out_cnt2,
+                new_seen, counts2, kth2, no_new2, evals + n)
+
+    init = (jnp.int32(0),
+            jnp.full((capacity,), -1, jnp.int32),
+            jnp.full((capacity,), INF),
+            jnp.int32(0), jnp.bool_(False), jnp.int32(0),
+            jnp.zeros((C,), jnp.bool_), jnp.zeros((C,), jnp.int32),
+            jnp.full((C, K), INF), jnp.int32(0), jnp.int32(0))
+    (p, out_ids, out_keys, count, _hi, _oc, seen, counts, _kth, _nn,
+     evals) = jax.lax.while_loop(cond, body, init)
+    valid = out_ids >= 0
+    sims = jnp.where(valid,
+                     -out_keys if index.metric.is_similarity() else out_keys,
+                     0.0)
+    stats = {"probes": p, "distance_evals": evals,
+             "categories_seen": jnp.sum(seen)}
+    return out_ids, sims, valid, count, stats

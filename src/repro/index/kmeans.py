@@ -1,0 +1,69 @@
+"""Blocked Lloyd k-means in JAX (IVF coarse quantizer training).
+
+TPU-shaped: the assignment step is a dense (chunk × nlist) matmul, chunked so
+the distance matrix never exceeds a VMEM/HBM-friendly working set.  Training
+subsamples the corpus (standard IVF practice — FAISS trains on ~256 points per
+centroid) and the final full assignment is a single blocked pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def _pairwise_sqdist(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """(n,d),(k,d) -> (n,k) squared L2, matmul-dominant form (MXU-friendly)."""
+    x2 = jnp.sum(x * x, axis=1, keepdims=True)
+    c2 = jnp.sum(c * c, axis=1)
+    return x2 - 2.0 * (x @ c.T) + c2[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def assign(x: jnp.ndarray, centroids: jnp.ndarray, chunk: int = 16384) -> jnp.ndarray:
+    """Nearest-centroid assignment, blocked over rows."""
+    n = x.shape[0]
+    pad = (-n) % chunk
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    blocks = xp.reshape(-1, chunk, x.shape[1])
+
+    def body(carry, xb):
+        d = _pairwise_sqdist(xb, centroids)
+        return carry, jnp.argmin(d, axis=1).astype(jnp.int32)
+
+    _, out = jax.lax.scan(body, None, blocks)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("nlist", "iters", "chunk"))
+def _lloyd(x: jnp.ndarray, init: jnp.ndarray, nlist: int, iters: int,
+           chunk: int) -> jnp.ndarray:
+    def step(centroids, _):
+        a = assign(x, centroids, chunk=chunk)
+        sums = jax.ops.segment_sum(x, a, num_segments=nlist)
+        counts = jax.ops.segment_sum(jnp.ones((x.shape[0],), x.dtype), a,
+                                     num_segments=nlist)
+        new = sums / jnp.maximum(counts, 1.0)[:, None]
+        # keep dead centroids where they were (FAISS re-seeds; this is enough
+        # for synthetic corpora and keeps the step shape-stable)
+        new = jnp.where((counts > 0)[:, None], new, centroids)
+        return new, counts
+    centroids, _ = jax.lax.scan(step, init, None, length=iters)
+    return centroids
+
+
+def kmeans(key: jax.Array, x: jnp.ndarray, nlist: int, iters: int = 8,
+           train_points_per_centroid: int = 256, chunk: int = 16384) -> jnp.ndarray:
+    """Train ``nlist`` centroids on (a subsample of) ``x``. Returns (nlist, d)."""
+    n = x.shape[0]
+    max_train = min(n, nlist * train_points_per_centroid)
+    if max_train < n:
+        idx = jax.random.choice(key, n, shape=(max_train,), replace=False)
+        xt = x[idx]
+    else:
+        xt = x
+    init_idx = jax.random.choice(jax.random.fold_in(key, 1), xt.shape[0],
+                                 shape=(nlist,), replace=xt.shape[0] < nlist)
+    init = xt[init_idx]
+    return _lloyd(xt, init, nlist, iters, min(chunk, xt.shape[0]))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for CHASE's compute hot-spots.
+
+Layout per the kernels contract:
+* ``scan_topk.py`` / ``range_scan.py`` / ``distance.py`` — pl.pallas_call
+  bodies with explicit BlockSpec VMEM tiling,
+* ``ops.py``  — jit'd public wrappers (padding, two-stage merges),
+* ``ref.py``  — pure-jnp oracles used by the allclose test sweeps.
+"""
+from .ops import fused_range_scan, fused_scan_topk, pairwise_keys
+
+__all__ = ["fused_range_scan", "fused_scan_topk", "pairwise_keys"]

@@ -1,0 +1,95 @@
+"""jit'd wrappers around the Pallas kernels (padding, two-stage merges,
+and the public contracts the physical operators consume)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.schema import Metric
+from .distance import pairwise_keys_pallas
+from .range_scan import range_scan_pallas
+from .scan_topk import scan_topk_pallas
+
+LANE = 128
+
+
+def _pad_dim(x: jnp.ndarray, mult: int, axis: int, value=0.0) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_n",
+                                             "interpret"))
+def fused_scan_topk(corpus: jnp.ndarray, query: jnp.ndarray, k: int,
+                    row_mask: jnp.ndarray | None, metric: Metric,
+                    block_n: int = 1024, interpret: bool = True):
+    """Drop-in fused replacement for FlatIndex.topk.
+
+    Returns (ids (k,), sims raw-metric (k,), valid (k,)).  Zero-padding on D
+    is metric-safe (contributes 0 to IP, 0 to L2 on both operands); padding on
+    N is masked out."""
+    n, d = corpus.shape
+    block_n = min(block_n, max(LANE, 1 << (n - 1).bit_length()))
+    mask = jnp.ones((n,), jnp.bool_) if row_mask is None else row_mask
+    cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), block_n, 0)
+    qp = _pad_dim(query.astype(jnp.float32).reshape(-1), LANE, 0)
+    mp = _pad_dim(mask.astype(jnp.int8).reshape(-1, 1), block_n, 0, value=0)
+    keys, ids = scan_topk_pallas(cp, qp, mp, k, metric, block_n=block_n,
+                                 interpret=interpret)
+    # stage 2: merge the (num_blocks, k) candidates
+    flat_keys = keys.reshape(-1)
+    flat_ids = ids.reshape(-1)
+    neg, idx = jax.lax.top_k(-flat_keys, k)
+    out_keys = -neg
+    valid = jnp.isfinite(out_keys)
+    out_ids = jnp.where(valid, flat_ids[idx], -1)
+    sims = jnp.where(valid,
+                     -out_keys if metric.is_similarity() else out_keys, 0.0)
+    return out_ids, sims, valid
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_n", "interpret"))
+def fused_range_scan(corpus: jnp.ndarray, query: jnp.ndarray, radius,
+                     row_mask: jnp.ndarray | None, metric: Metric,
+                     block_n: int = 1024, interpret: bool = True):
+    """Drop-in fused replacement for FlatIndex.range_mask.
+
+    Returns (hit (N,), raw sims (N,), count)."""
+    from ..core.expr import order_key
+    n, d = corpus.shape
+    block_n = min(block_n, max(LANE, 1 << (n - 1).bit_length()))
+    mask = jnp.ones((n,), jnp.bool_) if row_mask is None else row_mask
+    cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), block_n, 0)
+    qp = _pad_dim(query.astype(jnp.float32).reshape(-1), LANE, 0)
+    mp = _pad_dim(mask.astype(jnp.int8).reshape(-1, 1), block_n, 0, value=0)
+    radius_key = order_key(metric, jnp.asarray(radius, jnp.float32))
+    keys, hits, counts = range_scan_pallas(cp, qp, radius_key, mp, metric,
+                                           block_n=block_n,
+                                           interpret=interpret)
+    keys = keys[:n, 0]
+    hit = hits[:n, 0] != 0
+    raw = jnp.where(hit, -keys if metric.is_similarity() else keys, 0.0)
+    return hit, raw, jnp.sum(counts)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_c",
+                                             "interpret"))
+def pairwise_keys(queries: jnp.ndarray, corpus: jnp.ndarray, metric: Metric,
+                  block_q: int = 128, block_c: int = 512,
+                  interpret: bool = True):
+    """(Q, N) order-key matrix (padded internally, cropped on return)."""
+    qn, d = queries.shape
+    cn = corpus.shape[0]
+    bq = min(block_q, max(8, 1 << (qn - 1).bit_length()))
+    bc = min(block_c, max(LANE, 1 << (cn - 1).bit_length()))
+    qp = _pad_dim(_pad_dim(queries.astype(jnp.float32), LANE, 1), bq, 0)
+    cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), bc, 0)
+    out = pairwise_keys_pallas(qp, cp, metric, block_q=bq, block_c=bc,
+                               interpret=interpret)
+    return out[:qn, :cn]

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: fused distance + threshold + predicate range scan.
+
+DR-SF hot path (§5.2): one pass computes order keys on the MXU, applies the
+radius test and the structured-filter mask in-register, and emits a compact
+per-block hit count plus masked keys.  The (data-dependent) compaction happens
+outside the kernel; what the kernel saves is the materialization of raw
+scores + a second filtering pass — the paper's fusion argument applied to
+Algorithm 1's inner loop.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.schema import Metric
+from .scan_topk import _keys_from_block
+
+INF = float("inf")
+
+
+def _range_kernel(q_ref, r_ref, c_ref, m_ref, keys_out, hits_out, cnt_out, *,
+                  metric: Metric):
+    block = c_ref[...].astype(jnp.float32)          # (B, D)
+    q = q_ref[...].astype(jnp.float32)              # (1, D)
+    radius_key = r_ref[0, 0]
+    keys = _keys_from_block(block, q, metric)       # (B, 1)
+    mask = m_ref[...] != 0                          # (B, 1)
+    hit = mask & (keys <= radius_key)
+    keys_out[...] = jnp.where(hit, keys, INF)
+    hits_out[...] = hit.astype(jnp.int8)
+    cnt_out[...] = jnp.sum(hit.astype(jnp.int32), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_n", "interpret"))
+def range_scan_pallas(corpus: jnp.ndarray, query: jnp.ndarray,
+                      radius_key: jnp.ndarray, mask_i8: jnp.ndarray,
+                      metric: Metric, block_n: int = 1024,
+                      interpret: bool = True):
+    """Fused range scan. Returns ((Npad,1) masked keys, (Npad,1) int8 hits,
+    (num_blocks,1) per-block hit counts)."""
+    n, d = corpus.shape
+    assert n % block_n == 0
+    num_blocks = n // block_n
+    q2 = query.reshape(1, d)
+    r2 = jnp.asarray(radius_key, jnp.float32).reshape(1, 1)
+    kernel = functools.partial(_range_kernel, metric=metric)
+    keys, hits, counts = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.int8),
+            jax.ShapeDtypeStruct((num_blocks, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q2, r2, corpus, mask_i8)
+    return keys, hits, counts

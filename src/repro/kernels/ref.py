@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+These are the semantic ground truth: tests sweep shapes/dtypes and assert
+``assert_allclose(kernel(interpret=True), ref)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.schema import Metric
+from ..core.expr import distance_values, order_key
+
+
+def keys_ref(corpus: jnp.ndarray, query: jnp.ndarray,
+             metric: Metric) -> jnp.ndarray:
+    """(N,) order keys (ascending-better) of corpus rows vs a single query."""
+    raw = distance_values(metric, corpus.astype(jnp.float32),
+                          query.astype(jnp.float32))
+    return order_key(metric, raw)
+
+
+def scan_topk_ref(corpus: jnp.ndarray, query: jnp.ndarray, k: int,
+                  row_mask: jnp.ndarray | None, metric: Metric):
+    """Fused scan+filter+topk oracle. Returns (ids, keys, valid)."""
+    keys = keys_ref(corpus, query, metric)
+    if row_mask is not None:
+        keys = jnp.where(row_mask, keys, jnp.inf)
+    neg, idx = jax.lax.top_k(-keys, k)
+    out_keys = -neg
+    valid = jnp.isfinite(out_keys)
+    ids = jnp.where(valid, idx.astype(jnp.int32), -1)
+    return ids, out_keys, valid
+
+
+def range_scan_ref(corpus: jnp.ndarray, query: jnp.ndarray, radius_key,
+                   row_mask: jnp.ndarray | None, metric: Metric):
+    """Fused range scan oracle. Returns (hit mask (N,), keys (N,))."""
+    keys = keys_ref(corpus, query, metric)
+    hit = keys <= radius_key
+    if row_mask is not None:
+        hit = hit & row_mask
+    return hit, keys
+
+
+def pairwise_keys_ref(queries: jnp.ndarray, corpus: jnp.ndarray,
+                      metric: Metric) -> jnp.ndarray:
+    """(Q, N) order-key matrix oracle."""
+    q = queries.astype(jnp.float32)
+    c = corpus.astype(jnp.float32)
+    ip = q @ c.T
+    if metric == Metric.INNER_PRODUCT:
+        return -ip
+    if metric == Metric.L2:
+        q2 = jnp.sum(q * q, axis=1, keepdims=True)
+        c2 = jnp.sum(c * c, axis=1)
+        return q2 - 2.0 * ip + c2[None, :]
+    if metric == Metric.COSINE:
+        qn = jnp.linalg.norm(q, axis=1, keepdims=True)
+        cn = jnp.linalg.norm(c, axis=1)
+        return -(ip / (qn * cn[None, :] + 1e-12))
+    raise ValueError(metric)

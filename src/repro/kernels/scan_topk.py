@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: fused distance + predicate filter + blockwise top-k.
+
+This is the compute hot-spot CHASE optimizes (the map-operator fusion, §5.1):
+one pass over the corpus computes similarities on the MXU, applies the
+structured-filter mask in-register, and maintains top-k candidates — the full
+(N,) score vector is never materialized to HBM, and nothing downstream ever
+recomputes a distance.
+
+TPU shape discipline:
+* corpus tiles (BLOCK_N, D) stream HBM→VMEM via BlockSpec; D padded to a
+  lane multiple (128) by the wrapper.
+* the query lives in VMEM as (1, D); scores come from a (BLOCK_N, D)·(D, 1)
+  MXU matmul with fp32 accumulation (preferred_element_type).
+* per-block top-k runs as a k-step extract-min loop on (BLOCK_N, 1) column
+  vectors — small-k selection is VPU-friendly; no unsupported `top_k` inside
+  Mosaic.  A second-stage `lax.top_k` over (num_blocks × k) candidates runs
+  outside the kernel (standard two-stage TPU top-k).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.schema import Metric
+
+INF = float("inf")  # python literal: safe inside kernel bodies (no captured consts)
+
+
+def _extract_topk(keys_col: jnp.ndarray, ids_col: jnp.ndarray, k: int):
+    """(B,1) masked keys + ids -> (1,k) smallest keys and their ids.
+
+    k-step extract-min with where-based dynamic updates (Mosaic-safe: no
+    gathers, no dynamic-slice on vectors)."""
+    b = keys_col.shape[0]
+    iota_col = jax.lax.broadcasted_iota(jnp.int32, (b, 1), 0)
+    iota_row = jax.lax.broadcasted_iota(jnp.int32, (1, k), 1)
+
+    def body(j, carry):
+        vals, out_keys, out_ids = carry
+        m = jnp.min(vals)
+        # first index attaining the min (ties broken low)
+        idxv = jnp.min(jnp.where(vals == m, iota_col, b))
+        sel = iota_col == idxv
+        picked_id = jnp.max(jnp.where(sel, ids_col, -2147483648))
+        keep = jnp.isfinite(m)
+        out_keys = jnp.where(iota_row == j, jnp.where(keep, m, INF), out_keys)
+        out_ids = jnp.where(iota_row == j,
+                            jnp.where(keep, picked_id, -1), out_ids)
+        vals = jnp.where(sel, INF, vals)
+        return vals, out_keys, out_ids
+
+    init = (keys_col, jnp.full((1, k), INF), jnp.full((1, k), -1, jnp.int32))
+    _, out_keys, out_ids = jax.lax.fori_loop(0, k, body, init)
+    return out_keys, out_ids
+
+
+def _keys_from_block(block: jnp.ndarray, q: jnp.ndarray,
+                     metric: Metric) -> jnp.ndarray:
+    """(B,D),(1,D) -> (B,1) order keys. MXU matmul + metric epilogue."""
+    ip = jnp.dot(block, q.T, preferred_element_type=jnp.float32)  # (B,1)
+    if metric == Metric.INNER_PRODUCT:
+        return -ip
+    if metric == Metric.L2:
+        b2 = jnp.sum(block * block, axis=1, keepdims=True)
+        q2 = jnp.sum(q * q, axis=1, keepdims=True)  # (1,1)
+        return b2 - 2.0 * ip + q2
+    if metric == Metric.COSINE:
+        bn = jnp.sqrt(jnp.sum(block * block, axis=1, keepdims=True))
+        qn = jnp.sqrt(jnp.sum(q * q, axis=1, keepdims=True))
+        return -(ip / (bn * qn + 1e-12))
+    raise ValueError(metric)
+
+
+def _scan_topk_kernel(q_ref, c_ref, m_ref, keys_out, ids_out, *,
+                      k: int, block_n: int, metric: Metric):
+    i = pl.program_id(0)
+    block = c_ref[...].astype(jnp.float32)          # (B, D)
+    q = q_ref[...].astype(jnp.float32)              # (1, D)
+    keys = _keys_from_block(block, q, metric)       # (B, 1)
+    mask = m_ref[...]                               # (B, 1) int8 validity
+    keys = jnp.where(mask != 0, keys, INF)
+    base = (i * block_n).astype(jnp.int32)
+    ids_col = base + jax.lax.broadcasted_iota(jnp.int32, (block_n, 1), 0)
+    out_keys, out_ids = _extract_topk(keys, ids_col, k)
+    keys_out[...] = out_keys
+    ids_out[...] = out_ids
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "block_n", "interpret"))
+def scan_topk_pallas(corpus: jnp.ndarray, query: jnp.ndarray,
+                     mask_i8: jnp.ndarray, k: int, metric: Metric,
+                     block_n: int = 1024, interpret: bool = True):
+    """Stage 1 (Pallas): per-block fused top-k candidates.
+
+    Inputs are pre-padded by ops.py: corpus (Npad, Dpad), mask (Npad, 1) int8.
+    Returns (num_blocks, k) keys and ids."""
+    n, d = corpus.shape
+    assert n % block_n == 0, (n, block_n)
+    num_blocks = n // block_n
+    q2 = query.reshape(1, d)
+    kernel = functools.partial(_scan_topk_kernel, k=k, block_n=block_n,
+                               metric=metric)
+    keys, ids = pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (0, 0)),          # query
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),    # corpus tile
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),    # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_blocks, k), jnp.float32),
+            jax.ShapeDtypeStruct((num_blocks, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q2, corpus, mask_i8)
+    return keys, ids

@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get(
+    "REPRO_DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with zero device allocation:
+  * compiled.memory_analysis()  — proves the cell fits per-device HBM,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline,
+  * collective bytes parsed from the per-device compiled HLO,
+  * the three roofline terms + dominant bottleneck + MODEL_FLOPS ratio.
+
+Usage:
+  python -m repro.launch.dryrun --arch all --shape all --mesh both \
+      --out experiments/dryrun.json
+  python -m repro.launch.dryrun --arch gemma3-12b --shape train_4k --mesh single
+CI smoke (8 fake devices):
+  REPRO_DRYRUN_XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      python -m repro.launch.dryrun --arch qwen2-1.5b --shape train_4k \
+      --mesh tiny --smoke-config
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ARCH_IDS, SHAPES, get_config, get_shape
+from ..configs.shapes import ShapeConfig
+from ..dist.sharding import logical_axis_rules
+from ..models import init_cache, init_params, forward
+from ..models.config import ModelConfig
+from ..roofline.analysis import roofline_terms
+from ..roofline.hlo_analyzer import analyze as analyze_hlo
+from ..roofline.hw import TPU_V5E
+from ..serving.decode import build_serve_step
+from ..training import AdamWConfig, TrainState, adamw_init, build_train_step
+from .inputs import input_specs
+from .mesh import make_mesh, make_production_mesh
+from .shardspec import (batch_logical_axes, cache_logical_axes,
+                        moe_rules_patch, param_logical_axes, rules_for,
+                        tree_shardings)
+
+BIG_PARAM_THRESHOLD = 50e9    # bf16 optimizer moments above this
+
+
+def _mesh_for(kind: str):
+    if kind == "single":
+        return make_production_mesh(multi_pod=False)
+    if kind == "multi":
+        return make_production_mesh(multi_pod=True)
+    if kind == "tiny":
+        return make_mesh((2, 2), ("data", "model"))
+    if kind == "tiny_multi":
+        return make_mesh((2, 2, 2), ("pod", "data", "model"))
+    raise ValueError(kind)
+
+
+def _opt_config(cfg: ModelConfig) -> AdamWConfig:
+    big = cfg.num_params_estimate() > BIG_PARAM_THRESHOLD
+    return AdamWConfig(m_dtype="bfloat16" if big else "float32",
+                       v_dtype="bfloat16" if big else "float32")
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    n_active = cfg.active_params_estimate()
+    tokens = shape.global_batch * shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # decode: one token
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    """Build + lower the cell's step function. Returns (lowered, chips)."""
+    rules = moe_rules_patch(cfg, rules_for(cfg, shape, mesh))
+    specs = input_specs(cfg, shape)
+    chips = int(np.prod([mesh.shape[a] for a in mesh.axis_names]))
+
+    with mesh, logical_axis_rules(rules, mesh):
+        if shape.kind == "train":
+            opt_cfg = _opt_config(cfg)
+            from ..training import TrainStepConfig
+            nparams = cfg.num_params_estimate()
+            # microbatch policy (validated against per-cell peak HBM):
+            # >100B: 8; >3B or SSM/hybrid (SSD chunk tensors ∝ tokens): 4
+            if nparams > 100e9:
+                mb = 8
+            elif nparams > 3e9 or cfg.ssm is not None:
+                mb = 4
+            else:
+                mb = 1
+            if shape.global_batch % mb:
+                mb = 1
+            accum = "bfloat16" if nparams > 100e9 else "float32"
+            train_step = build_train_step(
+                cfg, opt_cfg,
+                TrainStepConfig(microbatches=mb, accum_dtype=accum))
+
+            def make_state(key):
+                params = init_params(key, cfg)
+                return TrainState.create(params, adamw_init(opt_cfg, params),
+                                         key)
+
+            state_shapes = jax.eval_shape(make_state, jax.random.key(0))
+            state_sh = tree_shardings(state_shapes, mesh, rules,
+                                      param_logical_axes)
+            batch_sh = tree_shardings(specs, mesh, rules, batch_logical_axes)
+            lowered = jax.jit(
+                train_step, in_shardings=(state_sh, batch_sh),
+                donate_argnums=(0,)).lower(state_shapes, specs)
+            return lowered, chips
+
+        params_shapes = jax.eval_shape(
+            lambda k: init_params(k, cfg), jax.random.key(0))
+        params_sh = tree_shardings(params_shapes, mesh, rules,
+                                   param_logical_axes)
+
+        in_key = "tokens" if cfg.input_mode == "tokens" else "embeds"
+        x_spec = specs[in_key]
+        x_sh = tree_shardings({in_key: x_spec}, mesh, rules,
+                              batch_logical_axes)[in_key]
+
+        if shape.kind == "prefill":
+            def prefill_step(params, x):
+                kw = {in_key: x}
+                logits, _ = forward(params, cfg, **kw)
+                return logits[:, -1, :]
+
+            lowered = jax.jit(prefill_step,
+                              in_shardings=(params_sh, x_sh)).lower(
+                params_shapes, x_spec)
+            return lowered, chips
+
+        # decode
+        serve_step = build_serve_step(cfg)
+
+        def decode_fn(params, cache, x):
+            kw = {in_key: x}
+            return serve_step(params, cache, **kw)
+
+        cache_shapes = jax.eval_shape(
+            lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+        cache_sh = tree_shardings(cache_shapes, mesh, rules,
+                                  cache_logical_axes)
+        lowered = jax.jit(decode_fn,
+                          in_shardings=(params_sh, cache_sh, x_sh),
+                          donate_argnums=(1,)).lower(
+            params_shapes, cache_shapes, x_spec)
+        return lowered, chips
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             smoke_config: bool = False) -> dict:
+    cfg = get_config(arch, smoke=smoke_config)
+    shape = get_shape(shape_name, smoke=smoke_config)
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "kind": shape.kind}
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        rec["status"] = "skipped"
+        rec["reason"] = ("pure full-attention arch: long_500k requires "
+                         "sub-quadratic attention (DESIGN.md "
+                         "§Arch-applicability)")
+        return rec
+    t0 = time.time()
+    try:
+        mesh = _mesh_for(mesh_kind)
+        lowered, chips = lower_cell(cfg, shape, mesh)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        # trip-count-aware analysis (cost_analysis counts scan bodies once)
+        hlo = analyze_hlo(compiled.as_text())
+        coll = {k: float(v) for k, v in hlo.collective_bytes.items()}
+        mf = model_flops_for(cfg, shape)
+        terms = roofline_terms({"flops": hlo.flops,
+                                "bytes accessed": hlo.bytes},
+                               coll, chips, mf)
+        rec.update({
+            "status": "ok",
+            "chips": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+                "alias_bytes": getattr(mem, "alias_size_in_bytes", 0),
+            },
+            "cost": {"flops_per_device": hlo.flops,
+                     "bytes_per_device": hlo.bytes,
+                     "xla_flops_per_device": float(cost.get("flops", 0.0)),
+                     "xla_bytes_per_device": float(cost.get("bytes accessed",
+                                                            0.0))},
+            "collective_bytes": coll,
+            "roofline": {
+                "compute_s": terms.compute_s,
+                "memory_s": terms.memory_s,
+                "collective_s": terms.collective_s,
+                "dominant": terms.dominant,
+                "model_flops": terms.model_flops,
+                "hlo_flops_total": terms.hlo_flops_total,
+                "useful_flops_fraction": terms.useful_flops_fraction,
+                "roofline_fraction": terms.roofline_fraction,
+                "step_lower_bound_s": terms.step_time_lower_bound_s,
+            },
+        })
+        m = rec["memory"]
+        # donation aliases the output onto the input buffers (alias_bytes):
+        # peak live bytes = args + temp + (non-aliased output)
+        peak = (m["argument_bytes"] + m["temp_bytes"]
+                + m["output_bytes"] - m["alias_bytes"])
+        rec["peak_bytes"] = peak
+        rec["fits_hbm"] = bool(peak <= TPU_V5E.hbm_bytes)
+        del compiled, lowered
+    except Exception as e:    # noqa: BLE001 — sweep must survive cell bugs
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    return rec
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both", "tiny", "tiny_multi"])
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--smoke-config", action="store_true",
+                    help="reduced model configs (CI)")
+    args = ap.parse_args(argv)
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = (["single", "multi"] if args.mesh == "both"
+              else [args.mesh])
+
+    records = []
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                rec = run_cell(arch, shape, mesh_kind, args.smoke_config)
+                records.append(rec)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    r = rec["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.3f}"
+                             f" compile={rec['compile_s']:.1f}s")
+                elif status == "error":
+                    extra = " " + rec["error"][:160]
+                print(f"[dryrun] {arch:24s} {shape:12s} {mesh_kind:6s} "
+                      f"{status}{extra}", flush=True)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+        print(f"[dryrun] wrote {len(records)} records to {args.out}")
+    bad = [r for r in records if r["status"] == "error"]
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

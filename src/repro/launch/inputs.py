@@ -1,0 +1,43 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, zero device allocation — the dry-run lowers
+against these.  ``[audio]``/``[vlm]`` archs get precomputed frame/patch
+embeddings per the assignment (the modality frontend is a stub)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.shapes import ShapeConfig
+from ..models.config import ModelConfig
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype()),
+            "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "tokens":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), cfg.cdtype())}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    b = shape.global_batch
+    if cfg.input_mode == "tokens":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), cfg.cdtype())}
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    if shape.kind == "train":
+        return train_input_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_input_specs(cfg, shape)
+    return decode_input_specs(cfg, shape)

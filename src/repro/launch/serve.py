@@ -1,0 +1,78 @@
+"""Serving launcher: batched generation with optional CHASE hybrid retrieval.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
+      --batch 2 --prompt-len 16 --gen 16 --rag
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config
+from ..models import init_params
+from ..serving.decode import generate
+from ..serving.rag import HybridRetriever
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--rag", action="store_true",
+                    help="hybrid retrieval (CHASE VKNN-SF) before decode")
+    ap.add_argument("--rag-docs", type=int, default=2000)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{args.arch} is embeddings-mode; use the "
+                         "hybrid_serving example for frontend-stub serving")
+    key = jax.random.key(args.seed)
+    params = init_params(key, cfg)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0,
+                                 cfg.vocab_size, dtype=jnp.int32)
+
+    prefix = prompts
+    if args.rag:
+        rng = np.random.default_rng(args.seed)
+        docs = rng.standard_normal((args.rag_docs, cfg.d_model)).astype(
+            np.float32)
+        docs /= np.linalg.norm(docs, axis=1, keepdims=True)
+        fresh = rng.random(args.rag_docs).astype(np.float32)
+        safety = rng.integers(0, 4, args.rag_docs).astype(np.int32)
+        retriever = HybridRetriever.build(jnp.asarray(docs),
+                                          jnp.asarray(fresh),
+                                          jnp.asarray(safety), k=4)
+        # query embedding = mean prompt embedding (stub encoder)
+        qemb = jnp.mean(params["embed"][prompts].astype(jnp.float32), axis=1)
+        qemb = qemb / (jnp.linalg.norm(qemb, axis=-1, keepdims=True) + 1e-6)
+        ids, sims, valid = retriever.retrieve_batch(np.asarray(qemb),
+                                                    min_freshness=0.25,
+                                                    safety_class=0)
+        print(f"[serve] retrieved docs per request: "
+              f"{np.asarray(ids).tolist()}")
+        # doc ids map to doc token prefixes (stub: hash to token ids)
+        doc_tokens = (np.asarray(ids) * 7919 % cfg.vocab_size).astype(np.int32)
+        prefix = jnp.concatenate([jnp.asarray(doc_tokens), prompts], axis=1)
+
+    t0 = time.time()
+    out = generate(params, cfg, prefix, args.gen)
+    out = jax.block_until_ready(out)
+    dt = time.time() - t0
+    toks = args.batch * args.gen
+    print(f"[serve] generated {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s incl. compile)")
+    print(np.asarray(out))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

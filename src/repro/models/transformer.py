@@ -1,0 +1,355 @@
+"""Generic decoder-only LM assembled from :class:`ModelConfig`.
+
+Covers all ten assigned architectures through composition:
+* attention patterns per layer ("full" / "local"), alternating via
+  ``layer_pattern`` (gemma2/gemma3), SWA (danube), GQA everywhere;
+* MoE MLPs (grok, moonshot) with capacity dispatch;
+* Mamba2 SSD blocks ("ssm" pattern, mamba2) and the Zamba2 hybrid
+  (SSM backbone + weight-shared attention block every N layers);
+* token or precomputed-embedding inputs (musicgen/chameleon frontends are
+  stubs per the assignment).
+
+HLO discipline: layers are scanned over *pattern periods* — parameters are
+stacked per period-slot and the body replays the slot sequence — so the
+compiled module is O(period) in size, not O(num_layers).  ``remat='block'``
+checkpoints each period (the activation policy the dry-run assumes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import constrain
+from .attention import attn_decode, attn_forward, attn_init
+from .config import ModelConfig
+from .layers import mlp_apply, mlp_init, rms_norm, softcap
+from .moe import moe_apply, moe_init
+from .ssm import ssm_cache_init, ssm_decode, ssm_forward, ssm_init
+
+
+# ---------------------------------------------------------------------------
+# Block specs
+# ---------------------------------------------------------------------------
+
+def block_kinds(cfg: ModelConfig) -> list[str]:
+    """Per-layer kind sequence ('full' | 'local' | 'ssm'), len num_layers."""
+    return [cfg.pattern_for_layer(i) for i in range(cfg.num_layers)]
+
+
+def _period(cfg: ModelConfig) -> int:
+    return len(cfg.layer_pattern)
+
+
+def _num_periods(cfg: ModelConfig) -> tuple[int, int]:
+    p = _period(cfg)
+    return cfg.num_layers // p, cfg.num_layers % p
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = cfg.pdtype()
+    d = cfg.d_model
+    if kind == "ssm":
+        return {"norm": jnp.zeros((d,), dt), "ssm": ssm_init(ks[0], cfg)}
+    p = {"norm1": jnp.zeros((d,), dt), "attn": attn_init(ks[0], cfg),
+         "norm2": jnp.zeros((d,), dt)}
+    if cfg.moe is not None:
+        p["moe"] = moe_init(ks[1], cfg)
+    elif cfg.d_ff:
+        p["mlp"] = mlp_init(ks[1], cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    nper, ntail = _num_periods(cfg)
+    pat = cfg.layer_pattern
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {}
+    dt = cfg.pdtype()
+    d = cfg.d_model
+
+    params["embed"] = (jax.random.normal(ks[0], (cfg.vocab_size, d),
+                                         jnp.float32) * 0.02).astype(dt)
+    if not cfg.tie_embeddings:
+        params["unembed"] = (jax.random.normal(ks[1], (cfg.vocab_size, d),
+                                               jnp.float32) * 0.02).astype(dt)
+    params["final_norm"] = jnp.zeros((d,), dt)
+
+    def init_slot(kind, key, n):
+        return jax.vmap(lambda k: _block_init(k, cfg, kind))(
+            jax.random.split(key, n))
+
+    if nper > 0:
+        params["period"] = {
+            f"s{j}": init_slot(pat[j], jax.random.fold_in(ks[2], j), nper)
+            for j in range(len(pat))}
+    tail_ks = jax.random.split(ks[3], max(ntail, 1))
+    params["tail"] = [
+        _block_init(tail_ks[i], cfg, pat[i % len(pat)])
+        for i in range(ntail)]
+
+    if cfg.shared_attn_every:
+        # Zamba2: one weight-shared attention+MLP block
+        params["shared"] = {
+            "norm1": jnp.zeros((d,), dt),
+            "attn": attn_init(ks[4], cfg),
+            "norm2": jnp.zeros((d,), dt),
+            "mlp": mlp_init(ks[5], cfg),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_block(p: dict, cfg: ModelConfig, kind: str, x, positions):
+    if kind == "ssm":
+        return x + ssm_forward(p["ssm"], cfg, rms_norm(x, p["norm"],
+                                                       cfg.rms_eps)), 0.0
+    h = attn_forward(p["attn"], cfg, rms_norm(x, p["norm1"], cfg.rms_eps),
+                     positions, kind)
+    x = x + h
+    aux = 0.0
+    if cfg.moe is not None:
+        m, aux = moe_apply(p["moe"], cfg, rms_norm(x, p["norm2"], cfg.rms_eps),
+                           capacity_factor=cfg.moe.capacity_factor)
+        x = x + m
+    elif cfg.d_ff:
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.rms_eps),
+                          cfg.mlp_type)
+    return x, aux
+
+
+def _apply_shared(params: dict, cfg: ModelConfig, x, positions):
+    sp = params["shared"]
+    x = x + attn_forward(sp["attn"], cfg,
+                         rms_norm(x, sp["norm1"], cfg.rms_eps), positions,
+                         "full")
+    x = x + mlp_apply(sp["mlp"], rms_norm(x, sp["norm2"], cfg.rms_eps),
+                      cfg.mlp_type)
+    return x
+
+
+def forward(params: dict, cfg: ModelConfig, tokens=None, embeds=None):
+    """Returns (logits (B,S,V), aux_loss)."""
+    if cfg.input_mode == "tokens":
+        x = params["embed"][tokens].astype(cfg.cdtype())
+        b, s = tokens.shape
+    else:
+        x = embeds.astype(cfg.cdtype())
+        b, s, _ = embeds.shape
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    x = constrain(x, ("batch", "seq", "embed"))
+    positions = jnp.arange(s, dtype=jnp.int32)
+    pat = cfg.layer_pattern
+    nper, ntail = _num_periods(cfg)
+
+    def period_body(carry, pparams):
+        x, aux = carry
+        for j, kind in enumerate(pat):
+            x, a = _apply_block(pparams[f"s{j}"], cfg, kind, x, positions)
+            aux = aux + a
+        if cfg.shared_attn_every:
+            x = _apply_shared(params, cfg, x, positions)
+        # period-boundary carry: 'seq_act' maps to the model axis on the
+        # production mesh (Megatron-SP) so the remat-saved carry stack is
+        # seq-sharded — 16x less HBM for the 64-layer archs; the all-gather
+        # it implies at the next period start is the standard SP trade.
+        x = constrain(x, ("batch", "seq_act", "embed"))
+        return (x, aux), None
+
+    body = period_body
+    if cfg.remat == "block":
+        body = jax.checkpoint(period_body, prevent_cse=False)
+
+    aux = jnp.zeros((), jnp.float32)
+    if nper > 0:
+        (x, aux), _ = jax.lax.scan(body, (x, aux), params["period"])
+    for i in range(ntail):
+        x, a = _apply_block(params["tail"][i], cfg, pat[i % len(pat)], x,
+                            positions)
+        aux = aux + a
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    logits = constrain(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def lm_loss(params: dict, cfg: ModelConfig, tokens=None, embeds=None,
+            labels=None, loss_chunk: int = 512):
+    """Next-token cross-entropy, seq-chunked so fp32 LSE never materializes
+    the full (B,S,V) in fp32. Returns scalar loss."""
+    logits, aux = forward(params, cfg, tokens=tokens, embeds=embeds)
+    b, s, v = logits.shape
+    if labels is None:
+        labels = jnp.roll(tokens, -1, axis=1)
+    c = loss_chunk if (s % loss_chunk == 0 and s > loss_chunk) else s
+    nch = s // c
+    lg = logits.reshape(b, nch, c, v).transpose(1, 0, 2, 3)
+    lb = labels.reshape(b, nch, c).transpose(1, 0, 2)
+
+    def body(acc, args):
+        lgi, lbi = args
+        lgi = lgi.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lgi, axis=-1)
+        gold = jnp.take_along_axis(lgi, lbi[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (lg, lb))
+    return total / (b * s) + aux
+
+
+# ---------------------------------------------------------------------------
+# Cached decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> dict:
+    """Per-slot caches, stacked over periods (mirrors the scan layout)."""
+    kinds = cfg.layer_pattern
+    nper, ntail = _num_periods(cfg)
+    kv, hd = cfg.num_kv_heads, cfg.hd()
+    dt = cfg.cdtype()
+
+    def slot_cache(kind, n):
+        if kind == "ssm":
+            s = cfg.ssm
+            d_in = s.expand * cfg.d_model
+            H = d_in // s.head_dim
+            return {"conv": jnp.zeros((n, batch, s.d_conv - 1, d_in), dt),
+                    "state": jnp.zeros((n, batch, H, s.d_state, s.head_dim),
+                                       jnp.float32)}
+        # local layers only need window-sized ring KV; global layers need full
+        seq = max_seq if kind == "full" else min(
+            max_seq, (cfg.sliding_window or max_seq))
+        return {"k": jnp.zeros((n, batch, seq, kv, hd), dt),
+                "v": jnp.zeros((n, batch, seq, kv, hd), dt),
+                "kpos": jnp.full((n, seq), -1, jnp.int32)}
+
+    cache: dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if nper > 0:
+        cache["period"] = {f"s{j}": slot_cache(kinds[j], nper)
+                           for j in range(len(kinds))}
+    cache["tail"] = [slot_cache(kinds[i % len(kinds)], 1)
+                     for i in range(ntail)]
+    if cfg.shared_attn_every:
+        cache["shared"] = {
+            "k": jnp.zeros((nper, batch, max_seq, kv, hd), dt),
+            "v": jnp.zeros((nper, batch, max_seq, kv, hd), dt),
+            "kpos": jnp.full((nper, max_seq), -1, jnp.int32)}
+    return cache
+
+
+def _decode_block(p, cfg: ModelConfig, kind: str, x, cache_slot, pos):
+    if kind == "ssm":
+        h, conv, state = ssm_decode(p["ssm"], cfg,
+                                    rms_norm(x, p["norm"], cfg.rms_eps),
+                                    cache_slot["conv"], cache_slot["state"])
+        return x + h, {"conv": conv, "state": state}
+    h, ck, cv, ckp = attn_decode(p["attn"], cfg,
+                                 rms_norm(x, p["norm1"], cfg.rms_eps),
+                                 cache_slot["k"], cache_slot["v"],
+                                 cache_slot["kpos"], pos, kind)
+    x = x + h
+    if cfg.moe is not None:
+        m, _ = moe_apply(p["moe"], cfg, rms_norm(x, p["norm2"], cfg.rms_eps),
+                         capacity_factor=cfg.moe.capacity_factor)
+        x = x + m
+    elif cfg.d_ff:
+        x = x + mlp_apply(p["mlp"], rms_norm(x, p["norm2"], cfg.rms_eps),
+                          cfg.mlp_type)
+    return x, {"k": ck, "v": cv, "kpos": ckp}
+
+
+def decode_step(params: dict, cfg: ModelConfig, cache: dict, tokens=None,
+                embeds=None):
+    """One-token decode. tokens: (B, 1) int32 / embeds: (B, 1, d).
+    Returns (logits (B, 1, V), new_cache)."""
+    pos = cache["pos"]
+    if cfg.input_mode == "tokens":
+        x = params["embed"][tokens].astype(cfg.cdtype())
+    else:
+        x = embeds.astype(cfg.cdtype())
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(x.dtype)
+    pat = cfg.layer_pattern
+    nper, ntail = _num_periods(cfg)
+    new_cache: dict[str, Any] = {"pos": pos + 1}
+
+    if nper > 0:
+        def body(carry, xs):
+            x = carry
+            pparams, pcache = xs
+            out_cache = {}
+            for j, kind in enumerate(pat):
+                x, cs = _decode_block(pparams[f"s{j}"], cfg, kind, x,
+                                      pcache[f"s{j}"], pos)
+                out_cache[f"s{j}"] = cs
+            return x, out_cache
+
+        if cfg.shared_attn_every:
+            # shared attn needs its own (non-scanned) KV cache; run periods
+            # unrolled-with-fori is wrong here, so scan slots only and apply
+            # shared block via a second pass — for zamba2 we instead unroll
+            # periods (few: <=7) keeping HLO modest.
+            x2 = x
+            out_period = {}
+            shared_cache = cache["shared"]
+            for t in range(nper):
+                pparams = jax.tree.map(lambda v, t=t: v[t], params["period"])
+                pcache = jax.tree.map(lambda v, t=t: v[t], cache["period"])
+                oc = {}
+                for j, kind in enumerate(pat):
+                    x2, cs = _decode_block(pparams[f"s{j}"], cfg, kind, x2,
+                                           pcache[f"s{j}"], pos)
+                    oc[f"s{j}"] = cs
+                sp = params["shared"]
+                h, sk, sv, skp = attn_decode(
+                    sp["attn"], cfg, rms_norm(x2, sp["norm1"], cfg.rms_eps),
+                    shared_cache["k"][t], shared_cache["v"][t],
+                    shared_cache["kpos"][t], pos, "full")
+                x2 = x2 + h
+                x2 = x2 + mlp_apply(sp["mlp"],
+                                    rms_norm(x2, sp["norm2"], cfg.rms_eps),
+                                    cfg.mlp_type)
+                shared_cache = {
+                    "k": shared_cache["k"].at[t].set(sk),
+                    "v": shared_cache["v"].at[t].set(sv),
+                    "kpos": shared_cache["kpos"].at[t].set(skp)}
+                out_period[t] = oc
+            x = x2
+            new_cache["shared"] = shared_cache
+            # restack per-slot caches
+            new_cache["period"] = jax.tree.map(
+                lambda *xs: jnp.stack(xs, axis=0),
+                *[out_period[t] for t in range(nper)])
+        else:
+            x, period_cache = jax.lax.scan(
+                body, x, (params["period"], cache["period"]))
+            new_cache["period"] = period_cache
+
+    new_tail = []
+    for i in range(ntail):
+        tp = params["tail"][i]
+        tc = jax.tree.map(lambda v: v[0], cache["tail"][i])
+        x, cs = _decode_block(tp, cfg, pat[i % len(pat)], x, tc, pos)
+        new_tail.append(jax.tree.map(lambda v: v[None], cs))
+    new_cache["tail"] = new_tail
+
+    x = rms_norm(x, params["final_norm"], cfg.rms_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,vd->bsv", x, head.astype(x.dtype))
+    logits = softcap(logits, cfg.final_logit_softcap)
+    return logits, new_cache

@@ -1,0 +1,4 @@
+from .analysis import collective_bytes_from_hlo, roofline_terms
+from .hw import TPU_V5E
+
+__all__ = ["collective_bytes_from_hlo", "roofline_terms", "TPU_V5E"]

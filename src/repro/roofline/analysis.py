@@ -1,0 +1,117 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs / (chips × peak)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+``cost_analysis()`` reports whole-program FLOPs/bytes (already per-partition
+in SPMD: the numbers are for the per-device module; we multiply back to
+totals).  Collective bytes are NOT in cost_analysis: we parse the compiled
+per-device HLO text and sum operand sizes of every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute instruction."""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from .hw import HWSpec, TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES)
+    + r")(?:-start|-done)?\(([^)]*)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Per-collective-kind operand bytes from a (per-device) HLO module.
+    `-done` ops are skipped so async pairs are not double-counted."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _INSTR_RE.search(s)
+        if not m:
+            continue
+        if f"{m.group(1)}-done" in s:
+            continue
+        kind, operands = m.group(1), m.group(2)
+        total = sum(_shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(operands))
+        out[kind] += total
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_total: float
+    hlo_bytes_total: float
+    collective_bytes_per_device: float
+    model_flops: float
+
+    @property
+    def dominant(self) -> str:
+        vals = {"compute": self.compute_s, "memory": self.memory_s,
+                "collective": self.collective_s}
+        return max(vals, key=vals.get)
+
+    @property
+    def step_time_lower_bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        if self.hlo_flops_total <= 0:
+            return 0.0
+        return self.model_flops / self.hlo_flops_total
+
+    @property
+    def roofline_fraction(self) -> float:
+        """MODEL_FLOPS-based MFU bound at the roofline step time."""
+        if self.step_time_lower_bound_s <= 0:
+            return 0.0
+        return self.compute_s * self.useful_flops_fraction \
+            / self.step_time_lower_bound_s
+
+
+def roofline_terms(cost: dict, collective: dict[str, int], chips: int,
+                   model_flops: float, hw: HWSpec = TPU_V5E,
+                   flops_are_per_device: bool = True) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    if flops_are_per_device:
+        total_flops = flops * chips
+        total_bytes = byts * chips
+    else:
+        total_flops, total_bytes = flops, byts
+    coll_dev = float(sum(collective.values()))
+    return RooflineTerms(
+        compute_s=total_flops / (chips * hw.peak_flops_bf16),
+        memory_s=total_bytes / (chips * hw.hbm_bw),
+        collective_s=coll_dev / hw.ici_link_bw,
+        hlo_flops_total=total_flops,
+        hlo_bytes_total=total_bytes,
+        collective_bytes_per_device=coll_dev,
+        model_flops=model_flops,
+    )

@@ -1,0 +1,273 @@
+"""Trip-count-aware HLO text analyzer.
+
+XLA's ``cost_analysis()`` counts a ``while`` body ONCE — under scan-over-layers
+every per-layer FLOP/byte is undercounted by the trip count, and collective
+bytes inside the loop vanish.  This analyzer parses the compiled per-device
+HLO text, builds the computation call graph (while bodies, fusions, calls,
+conditionals), extracts loop trip counts from the while-condition constant,
+and propagates execution multipliers from ENTRY — yielding scan-corrected:
+
+  * dot/convolution FLOPs,
+  * bytes touched (operands + outputs per instruction),
+  * collective bytes by kind (all-reduce / all-gather / reduce-scatter /
+    all-to-all / collective-permute), with reduce-scatter accounting for its
+    group-size input factor.
+
+This is also the profiling tool the §Perf loop reads (per-computation
+breakdowns via ``report()``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_BYTES_OPS = frozenset({
+    "fusion", "dot", "convolution", "copy", "dynamic-slice",
+    "dynamic-update-slice", "gather", "scatter", "reduce", "reduce-window",
+    "sort", "concatenate", "pad", "slice", "transpose", "select-and-scatter",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "custom-call", "cholesky", "triangular-solve",
+    "rng", "rng-bit-generator",
+})
+
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+# tuple types may contain /*index=N*/ comments (with '='), so the type group
+# matches to the first ')' — tuple element types never contain parens.
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)\((.*)$")
+_SHAPE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_REPLICA_GROUPS = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(text: str) -> tuple[int, int]:
+    """Sum elements/bytes over all shapes appearing in a type string."""
+    elems = byts = 0
+    for dt, dims in _SHAPE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    out_type: str
+    op: str
+    rest: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list
+    is_entry: bool = False
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        # computation headers start at column 0 and open a brace
+        if not line.startswith(" ") and line.endswith("{") and "->" in line:
+            m = _COMP_NAME.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), [],
+                                  is_entry=line.startswith("ENTRY"))
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if m:
+            cur.instrs.append(Instr(m.group(1), m.group(2).strip(),
+                                    m.group(3), m.group(4)))
+    return comps
+
+
+def _dot_flops(instr: Instr, symtab: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(instr.out_type)
+    # contracting size from lhs operand shape + contracting dims attr
+    mc = _CONTRACT.search(instr.rest)
+    operands = _operand_names(instr.rest)
+    if mc and operands:
+        lhs_type = symtab.get(operands[0], "")
+        dims = _SHAPE.search(lhs_type)
+        if dims:
+            shape = [int(x) for x in dims.group(2).split(",") if x]
+            contract = 1
+            for ci in mc.group(1).split(","):
+                if ci and int(ci) < len(shape):
+                    contract *= shape[int(ci)]
+            return 2.0 * out_elems * contract
+    return 2.0 * out_elems  # fallback
+
+
+_OPERAND_NAME = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_names(rest: str) -> list[str]:
+    # operand list ends at the first "), " attribute boundary
+    depth, end = 1, len(rest)
+    for i, ch in enumerate(rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return _OPERAND_NAME.findall(rest[:end])
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest integer constant in the while condition (jax scans compare the
+    induction variable against the trip count)."""
+    best = 1
+    for ins in cond.instrs:
+        for m in _CONST_INT.finditer(ins.out_type + " " + ins.rest):
+            best = max(best, int(m.group(1)))
+        if ins.op == "constant":
+            m2 = re.search(r"constant\((\d+)\)", f"{ins.op}({ins.rest}")
+            if m2:
+                best = max(best, int(m2.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class HLOCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    per_comp_flops: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def analyze(text: str) -> HLOCost:
+    comps = parse_hlo(text)
+    cost = HLOCost()
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return cost
+
+    def walk(comp: Computation, mult: float, seen_stack: tuple):
+        if comp.name in seen_stack:   # defensive: no recursion in HLO
+            return
+        symtab = {i.name: i.out_type for i in comp.instrs}
+        for ins in comp.instrs:
+            out_e, out_b = _shape_elems_bytes(ins.out_type)
+            opnd_b = sum(_shape_elems_bytes(symtab.get(o, ""))[1]
+                         for o in _operand_names(ins.rest))
+            # HBM-traffic model for the TPU target: count kernel-boundary ops
+            # (fusions, dots, data movement, reductions, collectives).  Bare
+            # elementwise/convert/broadcast at HLO top level would be fused
+            # into neighbors by the TPU compiler — counting them models the
+            # CPU backend's artifacts, not the target's memory traffic.
+            kind_name = ins.name if ins.op == "fusion" else ins.op
+            if "dynamic-update-slice" in kind_name or "scatter" in kind_name:
+                # read update + read/write the destination window (dest is
+                # aliased in place); update ≈ smallest operand
+                ops_b = [_shape_elems_bytes(symtab.get(o, ""))[1]
+                         for o in _operand_names(ins.rest)]
+                upd = min([b for b in ops_b if b > 0], default=out_b)
+                cost.bytes += mult * 3 * upd
+            elif ("slice" in kind_name or "gather" in kind_name
+                  and "all-gather" not in kind_name):
+                # reads only the slice, not the whole operand
+                cost.bytes += mult * 2 * out_b
+            elif ins.op in _BYTES_OPS:
+                cost.bytes += mult * (out_b + opnd_b)
+            if ins.op in ("dot", "convolution"):
+                f = _dot_flops(ins, symtab)
+                cost.flops += mult * f
+                cost.per_comp_flops[comp.name] += mult * f
+            base = ins.op
+            for kind in _COLLECTIVES:
+                if base == kind or base == kind + "-start":
+                    b = out_b
+                    if kind == "reduce-scatter":
+                        m = _REPLICA_GROUPS.search(ins.rest)
+                        if m:
+                            b *= int(m.group(2))
+                    elif kind == "all-gather":
+                        pass   # result already the gathered size
+                    cost.collective_bytes[kind] += mult * b
+            # recurse into called computations
+            if ins.op == "while":
+                body = cond = None
+                for cm in _CALL_ATTR.finditer(ins.rest):
+                    pass
+                mb = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                if mb and mb.group(1) in comps:
+                    trips = 1
+                    if mc and mc.group(1) in comps:
+                        trips = _trip_count(comps[mc.group(1)])
+                    walk(comps[mb.group(1)], mult * trips,
+                         seen_stack + (comp.name,))
+            elif ins.op in ("fusion", "call", "custom-call", "map", "reduce",
+                            "reduce-window", "scatter", "select-and-scatter",
+                            "sort", "all-reduce", "reduce-scatter"):
+                m = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", ins.rest)
+                if m and m.group(1) in comps:
+                    sub = comps[m.group(1)]
+                    # fusion bodies: count dots (rare) but skip elementwise
+                    for sins in sub.instrs:
+                        if sins.op in ("dot", "convolution"):
+                            stab = {i.name: i.out_type for i in sub.instrs}
+                            f = _dot_flops(sins, stab)
+                            cost.flops += mult * f
+                            cost.per_comp_flops[sub.name] += mult * f
+            elif ins.op == "conditional":
+                mb = _BRANCHES.search(ins.rest)
+                if mb:
+                    for nm in _OPERAND_NAME.findall(mb.group(1)):
+                        if nm in comps:
+                            walk(comps[nm], mult, seen_stack + (comp.name,))
+
+    walk(entry, 1.0, ())
+    return cost
+
+
+def report(text: str, top: int = 12) -> str:
+    cost = analyze(text)
+    lines = [f"flops={cost.flops:.3e} bytes={cost.bytes:.3e} "
+             f"collective={cost.collective_total:.3e}"]
+    for kind, b in sorted(cost.collective_bytes.items()):
+        if b:
+            lines.append(f"  {kind:20s} {b:.3e} B")
+    lines.append("top computations by flops:")
+    for name, f in sorted(cost.per_comp_flops.items(), key=lambda kv: -kv[1])[
+            :top]:
+        lines.append(f"  {name:48s} {f:.3e}")
+    return "\n".join(lines)

@@ -1,0 +1,20 @@
+"""Target hardware constants (TPU v5e, per the assignment)."""
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class HWSpec:
+    name: str
+    peak_flops_bf16: float     # per chip
+    hbm_bw: float              # bytes/s per chip
+    ici_link_bw: float         # bytes/s per link
+    hbm_bytes: float           # capacity per chip
+
+
+TPU_V5E = HWSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_link_bw=50e9,
+    hbm_bytes=16e9,
+)

@@ -1,0 +1,4 @@
+from .decode import build_serve_step, generate, prefill
+from .rag import HybridRetriever
+
+__all__ = ["build_serve_step", "generate", "prefill", "HybridRetriever"]

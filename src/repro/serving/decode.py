@@ -1,0 +1,77 @@
+"""Serving steps: prefill, single-token decode (the dry-run's ``serve_step``),
+and a batched greedy generation loop."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..models import decode_step, forward, init_cache
+from ..models.config import ModelConfig
+
+
+def build_serve_step(cfg: ModelConfig):
+    """serve_step(params, cache, tokens/embeds) -> (next_token_logits, cache).
+
+    This is the function the decode_* dry-run cells lower: one new token
+    against a seq_len-deep KV cache."""
+
+    def serve_step(params, cache, tokens=None, embeds=None):
+        logits, cache = decode_step(params, cfg, cache, tokens=tokens,
+                                    embeds=embeds)
+        return logits[:, -1, :], cache
+
+    return serve_step
+
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
+            max_seq: int | None = None):
+    """Run the full-sequence forward and build a cache by replaying tokens
+    through decode steps.  For production prefill the forward pass itself
+    computes K/V; here we reuse the decode path for cache fidelity (tested
+    against the forward pass in tests/test_decode.py)."""
+    if tokens is not None:
+        b, s = tokens.shape
+    else:
+        b, s, _ = embeds.shape
+    cache = init_cache(cfg, b, max_seq or s)
+
+    def body(cache, t):
+        if tokens is not None:
+            lg, cache = decode_step(params, cfg, cache, tokens=t[:, None])
+        else:
+            lg, cache = decode_step(params, cfg, cache, embeds=t[:, None])
+        return cache, lg[:, 0]
+
+    xs = tokens.T if tokens is not None else jnp.moveaxis(embeds, 1, 0)
+    cache, logits = jax.lax.scan(body, cache, xs)
+    return cache, jnp.moveaxis(logits, 0, 1)      # (B, S, V)
+
+
+def generate(params, cfg: ModelConfig, prompt_tokens: jnp.ndarray,
+             num_steps: int, max_seq: int | None = None,
+             temperature: float = 0.0, rng: jax.Array | None = None):
+    """Greedy/temperature generation loop (tokens mode)."""
+    b, s = prompt_tokens.shape
+    cap = max_seq or (s + num_steps)
+    cache, logits = prefill(params, cfg, tokens=prompt_tokens, max_seq=cap)
+    last = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+    def body(carry, _):
+        cache, tok, rng = carry
+        lg, cache = decode_step(params, cfg, cache, tokens=tok[:, None])
+        lg = lg[:, -1, :]
+        if temperature > 0:
+            rng, sub = jax.random.split(rng)
+            nxt = jax.random.categorical(sub, lg / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(lg, axis=-1)
+        nxt = nxt.astype(jnp.int32)
+        return (cache, nxt, rng), nxt
+
+    rng = rng if rng is not None else jax.random.key(0)
+    (_, _, _), toks = jax.lax.scan(body, (cache, last, rng), None,
+                                   length=num_steps)
+    return jnp.moveaxis(toks, 0, 1)               # (B, num_steps)

@@ -1,0 +1,76 @@
+"""CHASE-backed retrieval tier for serving — the paper's technique as a
+first-class feature of the LM framework.
+
+The paper motivates VKNN-SF with RAG (§2.2 [20]): retrieve top-k documents by
+embedding similarity *subject to structured filters* (freshness, safety,
+tenant).  :class:`HybridRetriever` wraps a compiled CHASE query over a
+document corpus; ``retrieve_for_decode`` plugs into the serving loop —
+retrieve once at prefill, prepend retrieved doc tokens to the prompt."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import Catalog, EngineOptions, Metric, compile_query
+from ..core.schema import (Schema, Table, category_col, float_col, int_col,
+                           vector_col)
+from ..index import build_ivf
+from ..index.ivf import ProbeConfig
+
+RAG_SQL = """
+SELECT doc_id FROM docs
+WHERE freshness >= ${min_freshness} AND safety = ${safety_class}
+ORDER BY DISTANCE(embedding, ${query_embedding})
+LIMIT ${K}
+"""
+
+
+@dataclasses.dataclass
+class HybridRetriever:
+    catalog: Catalog
+    compiled: Any
+    k: int
+
+    @classmethod
+    def build(cls, doc_embeddings: jnp.ndarray, freshness: jnp.ndarray,
+              safety: jnp.ndarray, k: int = 4, nlist: int = 64,
+              metric: Metric = Metric.INNER_PRODUCT,
+              probe: ProbeConfig = ProbeConfig(), seed: int = 0):
+        n, dim = doc_embeddings.shape
+        schema = Schema({
+            "doc_id": int_col(),
+            "freshness": float_col(),
+            "safety": category_col(4),
+            "embedding": vector_col(dim, metric),
+        }, primary_key="doc_id")
+        table = Table(schema, {
+            "doc_id": jnp.arange(n, dtype=jnp.int32),
+            "freshness": freshness,
+            "safety": safety,
+            "embedding": doc_embeddings,
+        })
+        cat = Catalog()
+        cat.register("docs", table)
+        idx = build_ivf(jax.random.key(seed), doc_embeddings, nlist=nlist,
+                        metric=metric)
+        cat.register_index("docs", "embedding", idx)
+        compiled = compile_query(RAG_SQL, cat,
+                                 EngineOptions(engine="chase", probe=probe),
+                                 K=k)
+        return cls(cat, compiled, k)
+
+    def retrieve(self, query_embedding, min_freshness=0.0, safety_class=0):
+        out = self.compiled(query_embedding=query_embedding,
+                            min_freshness=min_freshness,
+                            safety_class=safety_class)
+        return out["ids"], out["sim"], out["valid"]
+
+    def retrieve_batch(self, query_embeddings, min_freshness=0.0,
+                       safety_class=0):
+        """vmapped retrieval for a serving batch."""
+        fn = jax.vmap(lambda q: self.retrieve(q, min_freshness, safety_class))
+        return fn(query_embeddings)

@@ -1,0 +1,6 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from .step import TrainStepConfig, build_train_step
+from .train_state import TrainState
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "warmup_cosine",
+           "TrainStepConfig", "build_train_step", "TrainState"]

@@ -1,0 +1,28 @@
+"""Train-state pytree: params + optimizer moments + data-pipeline cursor.
+
+Registered as a pytree so the whole state flows through pjit, checkpointing
+and resharding as one object."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: dict
+    step: jnp.ndarray                  # global step (int32)
+    data_cursor: jnp.ndarray           # data-pipeline position (int64-ish)
+    rng: jax.Array
+
+    @classmethod
+    def create(cls, params, opt, rng):
+        return cls(params=params, opt=opt,
+                   step=jnp.zeros((), jnp.int32),
+                   data_cursor=jnp.zeros((), jnp.int32),
+                   rng=rng)

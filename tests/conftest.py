@@ -1,0 +1,31 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS device-count override here —
+smoke tests must see 1 device; multi-device tests use subprocesses."""
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+@pytest.fixture(scope="session")
+def laion_catalog():
+    from repro.core.schema import Metric
+    from repro.data import make_laion_catalog
+    from repro.index import build_ivf
+
+    cat = make_laion_catalog(n_rows=4000, n_queries=8, dim=32, n_modes=24,
+                             num_categories=6, seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=32,
+                    metric=Metric.INNER_PRODUCT, iters=4)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    return cat
+
+
+@pytest.fixture(scope="session")
+def query_vec(laion_catalog):
+    return np.asarray(laion_catalog.table("queries")["embedding"][0])

@@ -1,0 +1,181 @@
+"""Multi-device tests (subprocess with 8 fake CPU devices): distributed
+top-k merge, compressed-DP training, shard_map MoE parity, elastic reshard."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(code: str, devices: int = 8, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+def test_distributed_topk_matches_flat():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.dist.collectives import distributed_topk, shard_corpus
+        from repro.index import FlatIndex
+        from repro.core.schema import Metric
+
+        mesh = make_mesh((4, 2), ("data", "model"))
+        rng = np.random.default_rng(0)
+        corpus = jnp.asarray(rng.standard_normal((4096, 32)).astype(np.float32))
+        q = jnp.asarray(rng.standard_normal(32).astype(np.float32))
+        mask = jnp.asarray(rng.random(4096) < 0.5)
+        flat = FlatIndex(Metric.INNER_PRODUCT, corpus)
+        gt_ids, gt_sims, _ = flat.topk(q, 10, mask)
+        with mesh:
+            sh_corpus, sh_ids = shard_corpus(mesh, corpus)
+            sh_mask = jax.device_put(mask, sh_ids.sharding)
+            fn = jax.jit(distributed_topk(mesh, Metric.INNER_PRODUCT, 10))
+            ids, sims, valid = fn(sh_corpus, sh_ids, q, sh_mask)
+        assert set(np.asarray(ids).tolist()) == set(np.asarray(gt_ids).tolist())
+        np.testing.assert_allclose(np.sort(np.asarray(sims)),
+                                   np.sort(np.asarray(gt_sims)), rtol=1e-5)
+        print("DIST_TOPK_OK")
+    """)
+    assert "DIST_TOPK_OK" in out
+
+
+def test_distributed_topk_multi_pod_hierarchical():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.dist.collectives import distributed_topk, shard_corpus
+        from repro.index import FlatIndex
+        from repro.core.schema import Metric
+
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
+        rng = np.random.default_rng(1)
+        corpus = jnp.asarray(rng.standard_normal((2048, 16)).astype(np.float32))
+        q = jnp.asarray(rng.standard_normal(16).astype(np.float32))
+        mask = jnp.ones(2048, bool)
+        flat = FlatIndex(Metric.L2, corpus)
+        gt_ids, _, _ = flat.topk(q, 8)
+        with mesh:
+            sh_corpus, sh_ids = shard_corpus(mesh, corpus, axes=("pod", "data"))
+            sh_mask = jax.device_put(jnp.asarray(mask), sh_ids.sharding)
+            fn = jax.jit(distributed_topk(mesh, Metric.L2, 8,
+                                          axes=("pod", "data")))
+            ids, sims, valid = fn(sh_corpus, sh_ids, q, sh_mask)
+        assert set(np.asarray(ids).tolist()) == set(np.asarray(gt_ids).tolist())
+        print("POD_TOPK_OK")
+    """)
+    assert "POD_TOPK_OK" in out
+
+
+def test_compressed_dp_step_trains():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config
+        from repro.data.pipeline import DataConfig, SyntheticLM
+        from repro.models import init_params
+        from repro.training import AdamWConfig, adamw_init
+        from repro.training.step import build_compressed_dp_step
+
+        mesh = make_mesh((8,), ("data",))
+        cfg = get_config("qwen2-1.5b", smoke=True)
+        opt_cfg = AdamWConfig(lr_peak=3e-3, warmup_steps=2, total_steps=30)
+        params = init_params(jax.random.key(0), cfg)
+        opt = adamw_init(opt_cfg, params)
+        err = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        data = SyntheticLM(DataConfig(global_batch=8, seq_len=32,
+                                      vocab_size=cfg.vocab_size))
+        step = build_compressed_dp_step(cfg, opt_cfg, mesh)
+        losses = []
+        with mesh:
+            for i in range(30):
+                params, opt, err, m = step(params, opt, err, data.batch_at(i))
+                losses.append(float(m["loss"]))
+        assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+        print("COMPRESSED_DP_OK", round(losses[0], 3), round(losses[-1], 3))
+    """)
+    assert "COMPRESSED_DP_OK" in out
+
+
+def test_moe_shard_map_matches_local():
+    out = _run("""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.launch.mesh import make_mesh
+        from repro.configs import get_config
+        from repro.models.moe import moe_init, moe_apply, _moe_local
+        from repro.dist.sharding import logical_axis_rules
+
+        mesh = make_mesh((2, 4), ("data", "model"))
+        cfg = get_config("moonshot-v1-16b-a3b", smoke=True)  # 8 experts % 4 == 0
+        p = moe_init(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model),
+                              jnp.float32) * 0.3
+        want, aux_w = _moe_local(p, cfg, x, 8.0)
+        rules = {"batch": "data", "embed": None, "mlp_embed": None,
+                 "ff": "model", "experts": "model", "expert_ff_in": None,
+                 "moe_ff": None, "moe_cap": "data"}
+        with mesh, logical_axis_rules(rules, mesh):
+            got, aux_g = jax.jit(lambda p, x: moe_apply(p, cfg, x, 8.0))(p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=3e-3, atol=3e-3)
+        np.testing.assert_allclose(float(aux_g), float(aux_w), rtol=1e-3)
+        print("MOE_SHARDMAP_OK")
+    """)
+    assert "MOE_SHARDMAP_OK" in out
+
+
+def test_elastic_reshard_restore():
+    """Checkpoint under an 8-device mesh, restore under 4 devices."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        _run(f"""
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.mesh import make_mesh
+            from repro.checkpoint import save
+            mesh = make_mesh((4, 2), ("data", "model"))
+            x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+            xs = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
+            save({tmp!r}, 1, {{"w": xs}})
+            print("SAVED")
+        """, devices=8)
+        out = _run(f"""
+            import numpy as np, jax, jax.numpy as jnp
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.mesh import make_mesh
+            from repro.checkpoint import restore
+            mesh = make_mesh((2, 2), ("data", "model"))   # smaller fleet
+            target = {{"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)}}
+            sh = {{"w": NamedSharding(mesh, P("data", "model"))}}
+            got = restore({tmp!r}, 1, target, sh)
+            np.testing.assert_array_equal(
+                np.asarray(got["w"]),
+                np.arange(64, dtype=np.float32).reshape(8, 8))
+            assert len(got["w"].sharding.device_set) == 4
+            print("RESHARD_OK")
+        """, devices=4)
+        assert "RESHARD_OK" in out
+
+
+def test_dryrun_tiny_mesh_smoke():
+    """The dry-run entrypoint itself, on a tiny mesh (CI-scale)."""
+    env = dict(os.environ)
+    env["REPRO_DRYRUN_XLA_FLAGS"] = \
+        "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "qwen2-1.5b,mamba2-370m", "--shape", "train_4k,decode_32k",
+         "--mesh", "tiny", "--smoke-config"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert r.stdout.count(" ok") >= 4, r.stdout

@@ -1,0 +1,161 @@
+"""End-to-end engine tests: compile + execute all six templates on all engine
+modes; CHASE must match ground truth; baselines reproduce their plan-level
+behaviors (oversampling recall loss, redundant evals)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineOptions, Metric, compile_query
+from repro.index import FlatIndex
+from repro.index.ivf import ProbeConfig
+
+PROBE = ProbeConfig(max_probes=32, capacity=2048, termination="bound")
+
+
+def _flat(cat):
+    t = cat.table("laion")
+    return FlatIndex(Metric.INNER_PRODUCT, t["vec"]), t
+
+
+def test_q1_chase_exact_under_bound(laion_catalog, query_vec):
+    flat, t = _flat(laion_catalog)
+    price_thr = float(np.quantile(np.asarray(t["price"]), 0.5))
+    mask = t["price"] < price_thr
+    gt_ids, _, _ = flat.topk(jnp.asarray(query_vec), 20, mask)
+    q = compile_query(
+        "SELECT sample_id FROM products WHERE price < ${p} "
+        "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 20",
+        laion_catalog, EngineOptions(engine="chase", probe=PROBE))
+    out = q(qv=query_vec, p=price_thr)
+    assert set(np.asarray(out["ids"]).tolist()) \
+        == set(np.asarray(gt_ids).tolist())
+    # similarity emitted by the scan is correct (map-operator contract)
+    got = np.asarray(out["sim"])
+    vecs = np.asarray(t["vec"])[np.asarray(out["ids"])]
+    np.testing.assert_allclose(got, vecs @ np.asarray(query_vec), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_q1_engines_agree_on_results(laion_catalog, query_vec):
+    outs = {}
+    for engine in ("chase", "vbase", "brute"):
+        q = compile_query(
+            "SELECT sample_id FROM products "
+            "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 10",
+            laion_catalog, EngineOptions(engine=engine, probe=PROBE))
+        outs[engine] = set(np.asarray(q(qv=query_vec)["ids"]).tolist())
+    assert outs["chase"] == outs["brute"]
+    assert outs["vbase"] == outs["brute"]
+
+
+def test_q1_vbase_redundant_evals(laion_catalog, query_vec):
+    """Fig 1c: VBASE's sort recomputes similarities the scan already had."""
+    def evals(engine):
+        q = compile_query(
+            "SELECT sample_id FROM products "
+            "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 25",
+            laion_catalog, EngineOptions(engine=engine, probe=PROBE))
+        return int(q(qv=query_vec)["stats"]["distance_evals"])
+    assert evals("vbase") == evals("chase") + 25
+
+
+def test_q1_pase_recall_drops_at_low_selectivity(laion_catalog, query_vec):
+    """Fig 1b/§7.3.1: fixed K' oversampling loses recall under selective
+    filters while CHASE's adaptive termination holds it."""
+    t = laion_catalog.table("laion")
+    thr = float(np.quantile(np.asarray(t["price"]), 0.03))
+    flat, _ = _flat(laion_catalog)
+    gt_ids, _, gt_valid = flat.topk(jnp.asarray(query_vec), 20,
+                                    t["price"] < thr)
+    gt = set(np.asarray(gt_ids)[np.asarray(gt_valid)].tolist())
+
+    def recall(engine):
+        q = compile_query(
+            "SELECT sample_id FROM products WHERE price < ${p} "
+            "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 20",
+            laion_catalog,
+            EngineOptions(engine=engine, probe=PROBE, pase_oversample=5))
+        out = q(qv=query_vec, p=thr)
+        ids = np.asarray(out["ids"])[np.asarray(out["valid"])]
+        return len(set(ids.tolist()) & gt) / max(len(gt), 1)
+
+    assert recall("chase") >= 0.95
+    assert recall("pase") < recall("chase")
+
+
+def test_q2_range(laion_catalog, query_vec):
+    flat, t = _flat(laion_catalog)
+    raw = np.asarray(t["vec"]) @ np.asarray(query_vec)
+    srt = np.sort(raw)[::-1]
+    radius = float((srt[80] + srt[81]) / 2)
+    date_thr = int(np.quantile(np.asarray(t["capture_date"]), 0.5))
+    hit, _ = flat.range_mask(jnp.asarray(query_vec), radius,
+                             t["capture_date"] > date_thr)
+    gt = set(np.flatnonzero(np.asarray(hit)).tolist())
+    q = compile_query(
+        "SELECT sample_id FROM images "
+        "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}",
+        laion_catalog, EngineOptions(engine="chase", probe=PROBE))
+    out = q(qv=query_vec, r=radius, d=date_thr)
+    got = set(np.asarray(out["ids"])[np.asarray(out["valid"])].tolist())
+    assert got == gt
+
+
+def test_q4_knn_join_vs_brute(laion_catalog):
+    sql = """
+    SELECT qid, tid FROM (
+     SELECT users.id AS qid, movies.sample_id AS tid,
+     RANK() OVER (PARTITION BY users.id
+       ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+     FROM users JOIN movies ON users.preferred_rating = movies.rating
+    ) AS ranked WHERE ranked.rank <= 5
+    """
+    chase = compile_query(sql, laion_catalog,
+                          EngineOptions(engine="chase", probe=PROBE))()
+    brute = compile_query(sql, laion_catalog,
+                          EngineOptions(engine="brute"))()
+    cid = np.asarray(chase["tid"])
+    bid = np.asarray(brute["tid"])
+    match = sum(set(cid[i]) == set(bid[i]) for i in range(cid.shape[0]))
+    assert match >= cid.shape[0] - 1   # allow one boundary tie
+
+
+def test_q5_category_partition(laion_catalog, query_vec):
+    sql = """
+    SELECT qid, category FROM (
+     SELECT sample_id AS qid, calorie_level AS category,
+     RANK() OVER (PARTITION BY calorie_level
+       ORDER BY DISTANCE(embedding, ${qv})) AS rank
+     FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+    ) AS ranked WHERE ranked.rank <= 4
+    """
+    t = laion_catalog.table("laion")
+    raw = np.asarray(t["vec"]) @ np.asarray(query_vec)
+    srt = np.sort(raw)[::-1]
+    radius = float((srt[300] + srt[301]) / 2)
+    out = compile_query(sql, laion_catalog,
+                        EngineOptions(engine="chase", probe=PROBE))(
+        qv=query_vec, r=radius)
+    ids = np.asarray(out["ids"])
+    valid = np.asarray(out["valid"])
+    cats = np.asarray(t["calorie_level"])
+    # per-category results actually belong to that category & are in range
+    for c in range(ids.shape[0]):
+        rows = ids[c][valid[c]]
+        assert (cats[rows] == c).all()
+        assert (raw[rows] >= radius - 1e-5).all()
+    # vs ground truth per category
+    for c in range(ids.shape[0]):
+        in_range_rows = np.flatnonzero((raw >= radius) & (cats == c))
+        want = set(in_range_rows[np.argsort(-raw[in_range_rows])][:4].tolist())
+        got = set(ids[c][valid[c]].tolist())
+        assert want == got, f"category {c}"
+
+
+def test_explain_output(laion_catalog):
+    q = compile_query(
+        "SELECT sample_id FROM products ORDER BY "
+        "DISTANCE(embedding, ${qv}) LIMIT 5",
+        laion_catalog, EngineOptions(engine="chase", probe=PROBE))
+    text = q.explain()
+    assert "IndexScan" in text and "__sim" in text and "rewritten" in text

@@ -1,0 +1,154 @@
+"""IVF index: recall, Algorithm-1 range semantics, Algorithm-2 category
+convergence, and exactness of the beyond-paper 'bound' termination."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.expr import order_key
+from repro.core.schema import Metric
+from repro.index import FlatIndex, build_ivf
+from repro.index.ivf import (ProbeConfig, ivf_range, ivf_range_category,
+                             ivf_topk)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    rng = np.random.default_rng(0)
+    modes = rng.standard_normal((16, 24)).astype(np.float32)
+    which = rng.integers(0, 16, size=3000)
+    x = modes[which] + 0.3 * rng.standard_normal((3000, 24)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    return jnp.asarray(x.astype(np.float32))
+
+
+@pytest.fixture(scope="module")
+def ivf(corpus):
+    return build_ivf(jax.random.key(0), corpus, nlist=24,
+                     metric=Metric.INNER_PRODUCT, iters=5)
+
+
+@pytest.fixture(scope="module")
+def flat(corpus):
+    return FlatIndex(Metric.INNER_PRODUCT, corpus)
+
+
+def _q(corpus, i=0):
+    return corpus[i] + 0.01
+
+
+def test_topk_recall_counter(corpus, ivf, flat):
+    q = _q(corpus)
+    gt_ids, _, _ = flat.topk(q, 20)
+    ids, sims, valid, stats = ivf_topk(ivf, corpus, q, 20,
+                                       cfg=ProbeConfig(max_probes=24))
+    rec = len(set(np.asarray(ids).tolist())
+              & set(np.asarray(gt_ids).tolist())) / 20
+    assert rec >= 0.9
+    assert int(stats["distance_evals"]) < corpus.shape[0]  # beat brute force
+
+
+def test_topk_bound_termination_exact(corpus, ivf, flat):
+    """Beyond-paper: radius-bound termination is EXACT when allowed to run."""
+    q = _q(corpus, 1)
+    gt_ids, _, _ = flat.topk(q, 10)
+    cfg = ProbeConfig(max_probes=24, termination="bound")
+    ids, _, valid, stats = ivf_topk(ivf, corpus, q, 10, cfg=cfg)
+    assert set(np.asarray(ids).tolist()) == set(np.asarray(gt_ids).tolist())
+
+
+def test_topk_filtered(corpus, ivf, flat):
+    q = _q(corpus, 2)
+    mask = jnp.asarray(np.random.default_rng(1).random(corpus.shape[0]) < 0.3)
+    gt_ids, _, gt_valid = flat.topk(q, 15, mask)
+    cfg = ProbeConfig(max_probes=24, termination="bound")
+    ids, sims, valid, _ = ivf_topk(ivf, corpus, q, 15, mask, cfg)
+    got = np.asarray(ids)[np.asarray(valid)]
+    assert np.asarray(mask)[got].all()            # filter soundness
+    gt = np.asarray(gt_ids)[np.asarray(gt_valid)]
+    assert set(got.tolist()) == set(gt.tolist())  # exact under 'bound'
+
+
+def _radius_for(flat, q, count=60):
+    _, raw = flat.range_mask(q, -1e9)
+    keys = np.sort(np.asarray(order_key(Metric.INNER_PRODUCT, raw)))
+    return -float((keys[count] + keys[count + 1]) / 2)
+
+
+def test_range_counter_vs_flat(corpus, ivf, flat):
+    q = _q(corpus, 3)
+    radius = _radius_for(flat, q)
+    hit, _ = flat.range_mask(q, radius)
+    gt = set(np.flatnonzero(np.asarray(hit)).tolist())
+    ids, sims, valid, count, stats = ivf_range(
+        ivf, corpus, q, radius, cfg=ProbeConfig(max_probes=24, capacity=512))
+    got = set(np.asarray(ids)[np.asarray(valid)].tolist())
+    assert got.issubset(gt | {-1})
+    assert len(got & gt) / max(len(gt), 1) >= 0.9
+    # all results really in range
+    assert (np.asarray(sims)[np.asarray(valid)] >= radius - 1e-5).all()
+
+
+def test_range_bound_exact(corpus, ivf, flat):
+    q = _q(corpus, 4)
+    radius = _radius_for(flat, q, 40)
+    hit, _ = flat.range_mask(q, radius)
+    gt = set(np.flatnonzero(np.asarray(hit)).tolist())
+    cfg = ProbeConfig(max_probes=24, capacity=512, termination="bound")
+    ids, _, valid, count, stats = ivf_range(ivf, corpus, q, radius, cfg=cfg)
+    got = set(np.asarray(ids)[np.asarray(valid)].tolist())
+    assert got == gt
+    assert int(count) == len(gt)
+
+
+def test_range_early_termination_probes_less(corpus, ivf, flat):
+    """Alg.1's point: the scan must NOT visit all clusters for small radii."""
+    q = _q(corpus, 5)
+    radius = _radius_for(flat, q, 20)
+    cfg = ProbeConfig(max_probes=24, capacity=512, out_range_stop=2)
+    *_, stats = ivf_range(ivf, corpus, q, radius, cfg=cfg)
+    assert int(stats["probes"]) < 24
+
+
+def test_category_probe_per_category_topk(corpus, ivf, flat):
+    q = _q(corpus, 6)
+    C, K = 5, 4
+    cats = jnp.asarray(
+        np.random.default_rng(2).integers(0, C, corpus.shape[0]).astype(
+            np.int32))
+    radius = _radius_for(flat, q, 200)
+    cfg = ProbeConfig(max_probes=24, capacity=1024, termination="bound",
+                      num_categories=C, k_per_category=K)
+    ids, sims, valid, count, stats = ivf_range_category(
+        ivf, corpus, cats, q, radius, cfg=cfg)
+    got_ids = np.asarray(ids)[np.asarray(valid)]
+    got_sims = np.asarray(sims)[np.asarray(valid)]
+    # ground truth per category
+    hit, raw = flat.range_mask(q, radius)
+    hit = np.asarray(hit)
+    raw = np.asarray(raw)
+    catnp = np.asarray(cats)
+    for c in range(C):
+        gt_rows = np.flatnonzero(hit & (catnp == c))
+        gt_top = set(gt_rows[np.argsort(-raw[gt_rows])][:K].tolist())
+        got_c = got_ids[catnp[got_ids] == c]
+        top_got = set(got_c[np.argsort(-got_sims[catnp[got_ids] == c])][:K]
+                      .tolist())
+        # probe buffer must contain each category's true top-K
+        assert gt_top.issubset(set(got_c.tolist())), f"category {c}"
+
+
+def test_category_early_stop_beats_plain_range(corpus, ivf, flat):
+    """Fig 9's point: with updateState the probe stops at R2 < R1."""
+    q = _q(corpus, 7)
+    C, K = 4, 2
+    cats = jnp.asarray(
+        np.random.default_rng(3).integers(0, C, corpus.shape[0]).astype(
+            np.int32))
+    radius = _radius_for(flat, q, 1500)     # huge R1
+    cfg = ProbeConfig(max_probes=24, capacity=2048, num_categories=C,
+                      k_per_category=K, no_new_category_stop=2)
+    *_, stats_cat = ivf_range_category(ivf, corpus, cats, q, radius, cfg=cfg)
+    *_, stats_rng = ivf_range(ivf, corpus, q, radius, cfg=cfg)
+    assert int(stats_cat["probes"]) <= int(stats_rng["probes"])
+    assert int(stats_cat["distance_evals"]) < corpus.shape[0]

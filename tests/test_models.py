@@ -1,0 +1,78 @@
+"""Per-arch smoke tests: reduced configs, one forward + one train step on CPU,
+shape and finiteness assertions (the assignment's smoke contract)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import forward, init_params, lm_loss
+from repro.training import (AdamWConfig, TrainState, TrainStepConfig,
+                            adamw_init, build_train_step)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.key(seed)
+    if cfg.input_mode == "tokens":
+        toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size,
+                                  dtype=jnp.int32)
+        return {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    emb = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size,
+                                dtype=jnp.int32)
+    return {"embeds": emb, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    kw = ({"tokens": batch["tokens"]} if cfg.input_mode == "tokens"
+          else {"embeds": batch["embeds"]})
+    logits, aux = forward(params, cfg, **kw)
+    b, s = batch["labels"].shape
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+    step = jax.jit(build_train_step(cfg, opt_cfg))
+    state = TrainState.create(params, adamw_init(opt_cfg, params),
+                              jax.random.key(1))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    assert int(state.step) == 1
+    # params actually changed
+    before = jax.tree.leaves(params)[0]
+    after = jax.tree.leaves(state.params)[0]
+    assert not np.allclose(np.asarray(before), np.asarray(after))
+
+
+def test_microbatch_accumulation_equivalent():
+    cfg = get_config("qwen2-1.5b", smoke=True)
+    params = init_params(jax.random.key(0), cfg)
+    opt_cfg = AdamWConfig(lr_peak=1e-3, warmup_steps=1, total_steps=10)
+    batch = _batch(cfg, b=4, s=16)
+    s1 = TrainState.create(params, adamw_init(opt_cfg, params),
+                           jax.random.key(1))
+    s2 = TrainState.create(params, adamw_init(opt_cfg, params),
+                           jax.random.key(1))
+    one = jax.jit(build_train_step(cfg, opt_cfg, TrainStepConfig(1)))
+    four = jax.jit(build_train_step(cfg, opt_cfg, TrainStepConfig(4)))
+    s1, m1 = one(s1, batch)
+    s2, m2 = four(s2, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                                   atol=2e-5)
+
+
+def test_num_params_estimate_matches_actual():
+    for arch in ("qwen2-1.5b", "mamba2-370m", "moonshot-v1-16b-a3b"):
+        cfg = get_config(arch, smoke=True)
+        params = init_params(jax.random.key(0), cfg)
+        actual = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.num_params_estimate()
+        assert abs(est - actual) / actual < 0.12, (arch, est, actual)

@@ -1,0 +1,54 @@
+"""MoE: capacity dispatch vs dense-dispatch oracle; drop semantics; aux."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models.moe import moe_apply, moe_apply_dense, moe_init
+
+
+def _setup(arch="moonshot-v1-16b-a3b", seed=0):
+    cfg = get_config(arch, smoke=True)
+    p = moe_init(jax.random.key(seed), cfg)
+    x = jax.random.normal(jax.random.key(seed + 1), (2, 16, cfg.d_model),
+                          jnp.float32) * 0.3
+    return cfg, p, x
+
+
+def test_capacity_dispatch_matches_dense_oracle():
+    cfg, p, x = _setup()
+    out, aux = moe_apply(p, cfg, x, capacity_factor=8.0)  # no drops
+    want = moe_apply_dense(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_capacity_dispatch_grok_style_ff_mode():
+    cfg, p, x = _setup("grok-1-314b", seed=3)
+    out, aux = moe_apply(p, cfg, x, capacity_factor=8.0)
+    want = moe_apply_dense(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_tiny_capacity_drops_tokens_not_nan():
+    cfg, p, x = _setup(seed=5)
+    out, aux = moe_apply(p, cfg, x, capacity_factor=0.1)
+    assert np.isfinite(np.asarray(out)).all()
+    # dropped tokens diverge from the oracle, but shapes/dtypes hold
+    assert out.shape == x.shape
+
+
+def test_grads_flow_through_dispatch():
+    cfg, p, x = _setup(seed=7)
+
+    def loss(p):
+        out, aux = moe_apply(p, cfg, x, capacity_factor=4.0)
+        return jnp.sum(out ** 2) + aux
+
+    g = jax.grad(loss)(p)
+    norms = [float(jnp.linalg.norm(v.astype(jnp.float32)))
+             for v in jax.tree.leaves(g)]
+    assert sum(norms) > 0
+    assert all(np.isfinite(n) for n in norms)

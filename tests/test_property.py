@@ -1,0 +1,99 @@
+"""Hypothesis property tests on the system's invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.expr import distance_values, in_range, order_key
+from repro.core.schema import Metric
+from repro.core.sql import parse_sql
+from repro.core.plan import Filter, walk_plan
+from repro.index.flat import masked_topk
+from repro.training.step import dequantize_int8, quantize_int8
+
+FLOATS = st.floats(-1e3, 1e3, allow_nan=False, width=32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(FLOATS, min_size=1, max_size=64), st.data())
+def test_masked_topk_invariants(keys, data):
+    n = len(keys)
+    mask = data.draw(st.lists(st.booleans(), min_size=n, max_size=n))
+    k = data.draw(st.integers(1, n))
+    keys_a = jnp.asarray(np.array(keys, np.float32))
+    ids = jnp.arange(n, dtype=jnp.int32)
+    mk, mi, mv = masked_topk(keys_a, ids, jnp.asarray(mask), k)
+    mk, mi, mv = np.asarray(mk), np.asarray(mi), np.asarray(mv)
+    masked_keys = np.array(keys, np.float32)[np.asarray(mask)]
+    # 1) number of valid results = min(k, #masked)
+    assert mv.sum() == min(k, len(masked_keys))
+    # 2) valid ids are distinct and satisfy the mask
+    got = mi[mv]
+    assert len(set(got.tolist())) == len(got)
+    assert all(mask[i] for i in got)
+    # 3) ascending order and exactly the smallest masked keys
+    assert (np.diff(mk[mv]) >= 0).all()
+    want = np.sort(masked_keys)[:mv.sum()]
+    np.testing.assert_allclose(np.sort(mk[mv]), want, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.sampled_from(list(Metric)),
+       st.lists(st.lists(FLOATS, min_size=4, max_size=4), min_size=1,
+                max_size=32),
+       st.lists(FLOATS, min_size=4, max_size=4), FLOATS)
+def test_range_consistent_with_order_key(metric, xs, q, radius):
+    """in_range(v, r) must equal order_key(v) <= order_key(r): the index's
+    key-space reasoning and the predicate semantics cannot diverge."""
+    x = jnp.asarray(np.array(xs, np.float32))
+    qv = jnp.asarray(np.array(q, np.float32))
+    raw = distance_values(metric, x, qv)
+    lhs = np.asarray(in_range(metric, raw, radius))
+    rhs = np.asarray(order_key(metric, raw)
+                     <= order_key(metric, jnp.float32(radius)))
+    assert (lhs == rhs).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(FLOATS, min_size=1, max_size=256))
+def test_int8_error_feedback_bound(vals):
+    """Quantization error is bounded by scale/2 per element — the invariant
+    the error-feedback compressor relies on."""
+    x = jnp.asarray(np.array(vals, np.float32))
+    q, scale = quantize_int8(x)
+    err = np.asarray(x - dequantize_int8(q, scale))
+    assert (np.abs(err) <= float(scale) * 0.5 + 1e-6).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 100), st.booleans())
+def test_sql_roundtrip_predicates(thresh, limit, flip):
+    op = "<" if flip else ">"
+    sql = (f"SELECT sample_id FROM products WHERE price {op} {thresh} "
+           f"ORDER BY DISTANCE(embedding, ${{qv}}) LIMIT {limit}")
+    plan = parse_sql(sql)
+    filt = next(n for n in walk_plan(plan) if isinstance(n, Filter))
+    assert filt.predicate.op == op
+    assert filt.predicate.rhs.value == thresh
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6), st.integers(1, 4))
+def test_ivf_exactness_property(nlist, k):
+    """IVF with 'bound' termination + unlimited probes is EXACT for any
+    clustered corpus — the core soundness property of the adaptation."""
+    rng = np.random.default_rng(nlist * 13 + k)
+    x = rng.standard_normal((300, 8)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    from repro.index import FlatIndex, build_ivf
+    from repro.index.ivf import ProbeConfig, ivf_topk
+    corpus = jnp.asarray(x)
+    idx = build_ivf(jax.random.key(0), corpus, nlist=nlist,
+                    metric=Metric.L2, iters=3)
+    flat = FlatIndex(Metric.L2, corpus)
+    q = corpus[0] + 0.05
+    gt, _, _ = flat.topk(q, k)
+    ids, _, valid, _ = ivf_topk(
+        idx, corpus, q, k,
+        cfg=ProbeConfig(max_probes=nlist, termination="bound"))
+    assert set(np.asarray(ids).tolist()) == set(np.asarray(gt).tolist())

@@ -1,0 +1,73 @@
+"""Rewriter: plan shapes must match the paper's Figures 4b / 5b / 6b."""
+from repro.core import analyze, parse_sql, rewrite
+from repro.core.plan import (Filter, IndexScan, KnnSubquery, Limit, Map,
+                             OrderBy, UpdateState, WindowRank, walk_plan)
+from repro.core.expr import Column
+from repro.core.rewriter import SIM_COL
+
+from test_sql import Q4, Q5, Q6
+
+
+def _rewrite(sql, catalog):
+    return rewrite(analyze(parse_sql(sql), catalog))
+
+
+def test_r1_map_operator(laion_catalog):
+    """Fig 4b: IndexScan -> Map(__sim) -> OrderBy(__sim) -> Limit."""
+    sql = """
+    SELECT sample_id FROM products WHERE price < 100
+    ORDER BY DISTANCE(embedding, ${q}) LIMIT 50
+    """
+    plan = _rewrite(sql, laion_catalog)
+    nodes = list(walk_plan(plan))
+    scan = next(n for n in nodes if isinstance(n, IndexScan))
+    assert scan.mode == "topk"
+    assert scan.emit_similarity
+    assert scan.predicate is not None          # filter fused into the scan
+    mp = next(n for n in nodes if isinstance(n, Map))
+    assert mp.from_index_scan and mp.name == SIM_COL
+    ob = next(n for n in nodes if isinstance(n, OrderBy))
+    # the rewrite replaced the Distance key with the materialized column
+    assert isinstance(ob.key, Column) and ob.key.name == SIM_COL
+    assert any(isinstance(n, Limit) for n in nodes)
+
+
+def test_r2_window_decoupling(laion_catalog):
+    plan = _rewrite(Q4.replace("movies.id", "movies.sample_id"),
+                    laion_catalog)
+    nodes = list(walk_plan(plan))
+    sub = next(n for n in nodes if isinstance(n, KnnSubquery))
+    assert sub.k == 50
+    assert sub.right_table == "movies"
+    # the window operator is gone: scan/orderBy/limit fused per left row
+    assert not any(isinstance(n, WindowRank) for n in nodes)
+
+
+def test_r3_update_state(laion_catalog):
+    sql = Q5.replace("SELECT id AS qid", "SELECT sample_id AS qid") \
+            .replace("cuisine <> 'Italian'", "cuisine <> 3")
+    plan = _rewrite(sql, laion_catalog)
+    nodes = list(walk_plan(plan))
+    upd = next(n for n in nodes if isinstance(n, UpdateState))
+    scan = next(n for n in walk_plan(upd) if isinstance(n, IndexScan))
+    assert scan.mode == "range"
+    assert any(isinstance(n, WindowRank) for n in nodes)
+
+
+def test_q6_join_update_state(laion_catalog):
+    plan = _rewrite(Q6.replace("recipes.id", "recipes.sample_id"),
+                    laion_catalog)
+    nodes = list(walk_plan(plan))
+    assert any(isinstance(n, UpdateState) for n in nodes)
+    scan = next(n for n in nodes if isinstance(n, IndexScan))
+    assert scan.mode == "range"
+
+
+def test_dr_sf_uses_range_interface(laion_catalog):
+    sql = """
+    SELECT sample_id FROM images
+    WHERE DISTANCE(embedding, ${q}) <= ${T} AND capture_date > 100
+    """
+    plan = _rewrite(sql, laion_catalog)
+    scan = next(n for n in walk_plan(plan) if isinstance(n, IndexScan))
+    assert scan.mode == "range"        # RangeSearch, not Topk (paper §5.2)

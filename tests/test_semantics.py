@@ -1,0 +1,93 @@
+"""Semantic analyzer: Q1-Q6 classify into the paper's hybrid families."""
+import pytest
+
+from repro.core import QueryClass, analyze, parse_sql
+from repro.core.expr import Param
+
+from test_sql import Q1, Q2, Q3, Q4, Q5, Q6
+
+
+def test_q1_vknn_sf(laion_catalog):
+    sql = Q1.replace("category = ${cat} AND price < 100",
+                     "nsfw = 0 AND price < 100") \
+             .replace("SELECT id", "SELECT sample_id")
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.VKNN_SF
+    assert a.table == "products"
+    assert a.vector_column == "embedding"
+    assert a.k == 50
+    assert isinstance(a.query_expr, Param)
+    assert a.structured_predicate is not None
+
+
+def test_q2_dr_sf(laion_catalog):
+    sql = """
+    SELECT sample_id FROM images
+    WHERE DISTANCE(embedding, ${q}) <= ${T} AND capture_date > 100
+    """
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.DR_SF
+    assert a.radius is not None
+    assert a.structured_predicate is not None
+
+
+def test_q3_dist_join(laion_catalog):
+    sql = """
+    SELECT queries.id AS qid, images.sample_id AS tid
+    FROM queries JOIN images
+    ON DISTANCE(queries.embedding, images.embedding) <= ${T}
+    AND images.capture_date > queries.capture_date
+    """
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.DIST_JOIN
+    assert a.left_table == "queries"
+    assert a.right_table == "images"
+    assert a.join_predicate is not None
+
+
+def test_q4_knn_join(laion_catalog):
+    sql = Q4.replace("movies.id", "movies.sample_id")
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.KNN_JOIN
+    assert a.k == 50
+    assert a.left_table == "users"
+    assert a.right_table == "movies"
+
+
+def test_q5_category_partition(laion_catalog):
+    sql = Q5.replace("SELECT id AS qid", "SELECT sample_id AS qid") \
+            .replace("cuisine <> 'Italian'", "cuisine <> 3")
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.CATEGORY_PARTITION
+    assert a.category_column.name == "calorie_level"
+    assert a.k == 10
+    assert a.radius is not None
+
+
+def test_q6_category_join(laion_catalog):
+    sql = Q6.replace("recipes.id", "recipes.sample_id")
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.CATEGORY_JOIN
+    assert a.category_column.name == "calorie_level"
+    assert len(a.partition_keys) == 2
+
+
+def test_non_hybrid_falls_through(laion_catalog):
+    a = analyze(parse_sql("SELECT sample_id FROM products WHERE price < 10"),
+                laion_catalog)
+    assert a.query_class == QueryClass.NON_HYBRID
+
+
+def test_window_without_pk_partition_not_knn_join(laion_catalog):
+    """Partitioning by a non-primary-key must NOT match the entity-centric
+    pattern (paper §4.2: pk partitioning is a semantic requirement)."""
+    sql = """
+    SELECT qid FROM (
+     SELECT users.id AS qid,
+     RANK() OVER (PARTITION BY users.cuisine
+       ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+     FROM users JOIN movies ON users.preferred_rating = movies.rating
+    ) AS ranked WHERE ranked.rank <= 5
+    """
+    a = analyze(parse_sql(sql), laion_catalog)
+    assert a.query_class == QueryClass.NON_HYBRID

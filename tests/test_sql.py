@@ -1,0 +1,120 @@
+"""SQL parser: the paper's six templates must parse verbatim (Fig. 2)."""
+import pytest
+
+from repro.core.expr import BoolOp, Cmp, Column, Distance, Param
+from repro.core.plan import (Filter, Join, Limit, OrderBy, Project, Scan,
+                             WindowRank, walk_plan)
+from repro.core.sql import parse_sql
+
+Q1 = """
+SELECT id FROM products
+WHERE category = ${cat} AND price < 100
+ORDER BY DISTANCE(embedding, ${query_embedding})
+LIMIT 50
+"""
+
+Q2 = """
+SELECT id FROM images
+WHERE DISTANCE(embedding, ${query_embedding}) <= ${THRESHOLD}
+AND location = 'US' AND capture_date > '2023-07-01'
+"""
+
+Q3 = """
+SELECT queries.id AS qid, images.id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${THRESHOLD}
+AND images.capture_date > queries.capture_date
+"""
+
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year > users.preferred_release_year
+) AS ranked WHERE ranked.rank <= 50
+"""
+
+Q5 = """
+SELECT qid, category FROM (
+ SELECT id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${query_embedding})) AS rank
+ FROM recipes
+ WHERE DISTANCE(embedding, ${query_embedding}) <= ${R1}
+ AND cuisine <> 'Italian'
+) AS ranked WHERE ranked.rank <= 10
+"""
+
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${R1}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 10
+"""
+
+ALL = {"Q1": Q1, "Q2": Q2, "Q3": Q3, "Q4": Q4, "Q5": Q5, "Q6": Q6}
+
+
+@pytest.mark.parametrize("name", list(ALL))
+def test_templates_parse(name):
+    plan = parse_sql(ALL[name])
+    assert plan is not None
+    assert plan.pretty()
+
+
+def test_q1_structure():
+    plan = parse_sql(Q1)
+    kinds = [type(n).__name__ for n in walk_plan(plan)]
+    assert kinds == ["Project", "Limit", "OrderBy", "Filter", "Scan"]
+    order = next(n for n in walk_plan(plan) if isinstance(n, OrderBy))
+    assert isinstance(order.key, Distance)
+    lim = next(n for n in walk_plan(plan) if isinstance(n, Limit))
+    assert lim.k == 50
+
+
+def test_q2_distance_in_where():
+    plan = parse_sql(Q2)
+    filt = next(n for n in walk_plan(plan) if isinstance(n, Filter))
+    assert isinstance(filt.predicate, BoolOp)
+
+
+def test_q4_window():
+    plan = parse_sql(Q4)
+    win = next(n for n in walk_plan(plan) if isinstance(n, WindowRank))
+    assert len(win.partition_by) == 1
+    assert isinstance(win.order_by, Distance)
+    assert win.rank_name == "rank"
+    join = next(n for n in walk_plan(plan) if isinstance(n, Join))
+    assert isinstance(join.left, Scan) and join.left.table == "users"
+
+
+def test_q6_two_partition_keys():
+    plan = parse_sql(Q6)
+    win = next(n for n in walk_plan(plan) if isinstance(n, WindowRank))
+    assert len(win.partition_by) == 2
+
+
+def test_param_placeholders():
+    plan = parse_sql("SELECT a FROM t WHERE b < ${x} LIMIT ${K}")
+    lim = next(n for n in walk_plan(plan) if isinstance(n, Limit))
+    assert lim.k == "K"
+    filt = next(n for n in walk_plan(plan) if isinstance(n, Filter))
+    assert isinstance(filt.predicate.rhs, Param)
+
+
+def test_string_literals_and_escapes():
+    plan = parse_sql("SELECT a FROM t WHERE s = 'it''s'")
+    filt = next(n for n in walk_plan(plan) if isinstance(n, Filter))
+    assert filt.predicate.rhs.value == "it's"
+
+
+def test_syntax_error():
+    with pytest.raises(SyntaxError):
+        parse_sql("SELECT FROM WHERE")
