@@ -1,0 +1,124 @@
+"""Q7 — batched multi-query QPS (beyond-paper: the serving measurement).
+
+The paper reports per-query latency; a serving engine cares about throughput
+under a request batch.  This bench sweeps batch size ∈ {1, 8, 64, 256} over
+two VKNN workloads:
+
+* ``flat``  — index-less fused Pallas scan (brute + use_pallas): batch=1 is a
+  Python loop issuing the single-query compiled pipeline per request (the
+  pre-batching deployment shape); batch>1 is ONE ``execute_batch`` through
+  the query-tiled kernel.
+* ``ivf``   — chase engine with multi-cluster probe rounds (probe_batch=4):
+  batched termination state advances Q queries in lock-step.
+
+Reports QPS and per-query amortized distance evals, and writes
+``BENCH_batch.json`` (consumed by the acceptance gate: flat-scan QPS at
+batch=64 must be ≥ 5× batch=1).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.q7_batch_qps [--full]
+(standalone default is the smoke catalog so the sweep stays CI-scale).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import BenchEnv, Row, timeit
+from .counters import per_query_amortized
+
+BATCHES = (1, 8, 64, 256)
+SQL = ("SELECT sample_id FROM products "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT {K}")
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_batch.json")
+
+
+FLAT_ROWS = 2000   # the acceptance workload's catalog: interpret-mode flat
+                   # scans are CPU-emulated, so the sweep stays tiny & fixed
+
+
+def _queries(base: np.ndarray, q: int) -> np.ndarray:
+    """Tile+jitter a query set out to q vectors (QPS needs bigger batches
+    than the catalog's query table carries)."""
+    rng = np.random.default_rng(7)
+    reps = -(-q // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:q]
+    return (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+
+
+def _workloads(env: BenchEnv):
+    """(catalog, qvecs, options) per workload.
+
+    ``flat`` runs on a dedicated FLAT_ROWS-row catalog (index-less scans cost
+    O(N) per query in interpret mode); ``ivf`` probes the env catalog."""
+    from repro.data import make_laion_catalog
+    probe = dataclasses.replace(env.cfg.probe, probe_batch=4)
+    small = make_laion_catalog(n_rows=min(env.cfg.n_rows, FLAT_ROWS),
+                               n_queries=8, dim=env.cfg.dim, n_modes=16,
+                               seed=env.cfg.seed)
+    small_q = np.asarray(small.table("queries")["embedding"])
+    return {
+        "flat": (small, small_q,
+                 EngineOptions(engine="brute", use_pallas=True)),
+        "ivf": (env.catalog, env.qvecs,
+                EngineOptions(engine="chase", probe=probe)),
+    }
+
+
+def run(env: BenchEnv, rows: list, batches=BATCHES) -> dict:
+    K = min(env.cfg.k_top, 10)
+    sql = SQL.replace("{K}", str(K))
+    report: dict = {"n_rows": env.cfg.n_rows, "flat_rows": FLAT_ROWS,
+                    "dim": env.cfg.dim, "k": K, "workloads": {}}
+    for name, (catalog, qvecs, opts) in _workloads(env).items():
+        q = compile_query(sql, catalog, opts)
+        entries = []
+        base_qps = None
+        for b in batches:
+            qs = _queries(qvecs, b)
+            if b == 1:
+                # per-request loop shape: one single-query pipeline call
+                # (more repeats: the ratio denominator must be stable)
+                ms = timeit(lambda: q(qv=qs[0]), repeats=9)
+                out = q(qv=qs[0])
+            else:
+                ms = timeit(lambda: q.execute_batch(qv=qs), repeats=3)
+                out = q.execute_batch(qv=qs)
+            qps = 1e3 * b / ms
+            base_qps = base_qps if base_qps is not None else qps
+            derived = per_query_amortized(out["stats"], b)
+            derived.update(batch=b, qps=round(qps, 1),
+                           speedup_vs_b1=round(qps / base_qps, 2))
+            entries.append({"batch": b, "ms": round(ms, 3),
+                            "qps": round(qps, 1), **derived})
+            rows.append(Row(f"q7_{name}_b{b}", ms, **derived))
+        report["workloads"][name] = entries
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    from .common import get_env
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale catalog (default: smoke)")
+    args = ap.parse_args()
+    env = get_env(smoke=not args.full)
+    rows: list[Row] = []
+    report = run(env, rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    flat = report["workloads"]["flat"]
+    b64 = next(e for e in flat if e["batch"] == 64)
+    print(f"\nflat-scan speedup at batch=64: {b64['speedup_vs_b1']}x",
+          file=sys.stderr)

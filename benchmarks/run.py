@@ -13,7 +13,7 @@ import argparse
 import sys
 
 from . import (ablation_updatestate, counters, q1_vknn, q2_range,
-               q3_distjoin, q4_knnjoin, q5q6_category)
+               q3_distjoin, q4_knnjoin, q5q6_category, q7_batch_qps)
 from .common import Row, get_env
 
 BENCHES = {
@@ -22,6 +22,7 @@ BENCHES = {
     "q3": q3_distjoin.run,
     "q4": q4_knnjoin.run,
     "q5q6": q5q6_category.run,
+    "q7": q7_batch_qps.run,
     "fig9": ablation_updatestate.run,
     "t5": counters.run,
 }
@@ -31,11 +32,19 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny corpus (CI-scale)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sweep: tiny corpus + fast subset "
+                         "(q1, q7, t5) — what scripts/smoke.sh runs")
     ap.add_argument("--only", default=None,
                     help="comma list of bench keys: " + ",".join(BENCHES))
     args = ap.parse_args(argv)
-    env = get_env(smoke=args.smoke)
-    keys = list(BENCHES) if not args.only else args.only.split(",")
+    env = get_env(smoke=args.smoke or args.quick)
+    if args.only:
+        keys = args.only.split(",")
+    elif args.quick:
+        keys = ["q1", "q7", "t5"]
+    else:
+        keys = list(BENCHES)
     rows: list[Row] = []
     print("name,us_per_call,derived")
     for key in keys:

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# CI smoke: the tier-1 suite (fast tests only — `slow`-marked subprocess
+# integration tests are deselected by pytest.ini) plus the quick benchmark
+# sweep (q1 latency/recall, q7 batched QPS, t5 counters) on the tiny catalog.
+#
+#   bash scripts/smoke.sh            # full smoke
+#   SMOKE_SLOW=1 bash scripts/smoke.sh   # also run the slow marker set
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+if [[ "${SMOKE_SLOW:-0}" == "1" ]]; then
+    python -m pytest -x -q -m slow
+fi
+python -m benchmarks.run --quick

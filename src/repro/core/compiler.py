@@ -14,8 +14,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from .expr import Bindings
-from .physical import BUILDERS, EngineOptions
+from .expr import Bindings, Param
+from .physical import BATCH_BUILDERS, BUILDERS, EngineOptions
 from .plan import PlanNode
 from .rewriter import rewrite
 from .schema import Catalog
@@ -32,9 +32,53 @@ class CompiledQuery:
     options: EngineOptions
     _jitted: Any
     _arrays: Any
+    _batch_jitted: Any = None
 
     def __call__(self, **binds):
         return self._jitted(self._arrays, dict(binds))
+
+    def execute_batch(self, binds_list: list[dict] | None = None, **stacked):
+        """Execute a parameter-only batch: ONE compiled pipeline, Q bind sets.
+
+        Accepts either ``binds_list`` (a list of per-query bind dicts, which
+        get stacked) or keyword binds already stacked with a leading Q axis
+        (scalars broadcast).  Query classes with a native batched lowering
+        (VKNN-SF, DR-SF) run the query-tiled kernels / multi-cluster IVF
+        probes; other classes vmap their single-query pipeline.  Every output
+        gains a leading Q axis; stats report per-query counters."""
+        binds = self._stack_binds(binds_list, stacked)
+        return self._batch_jitted(self._arrays, binds)
+
+    def _stack_binds(self, binds_list, stacked) -> dict:
+        if binds_list is not None:
+            if stacked:
+                raise TypeError("pass binds_list OR keyword binds, not both")
+            keys = binds_list[0].keys()
+            return {k: jnp.stack([jnp.asarray(b[k]) for b in binds_list])
+                    for k in keys}
+        binds = {k: jnp.asarray(v) for k, v in stacked.items()}
+        qe = self.analysis.query_expr
+        if isinstance(qe, Param) and qe.name in binds:
+            qv = binds[qe.name]
+            if qv.ndim != 2:
+                raise ValueError(
+                    f"execute_batch needs a stacked (Q, D) query vector for "
+                    f"${{{qe.name}}}, got shape {qv.shape}; pass a single "
+                    f"query through __call__ instead")
+            qn = qv.shape[0]
+        else:
+            dims = [v.shape[0] for v in binds.values() if v.ndim >= 1]
+            if not dims:
+                raise ValueError("cannot infer batch size from scalar binds; "
+                                 "use binds_list")
+            qn = dims[0]
+        bad = {k: v.shape for k, v in binds.items()
+               if v.ndim >= 1 and v.shape[0] != qn}
+        if bad:
+            raise ValueError(f"stacked binds disagree on batch size {qn}: "
+                             f"{bad}")
+        return {k: jnp.broadcast_to(v, (qn,)) if v.ndim == 0 else v
+                for k, v in binds.items()}
 
     def lower(self, **binds):
         """AOT lowering for inspection (HLO text, cost analysis)."""
@@ -93,4 +137,11 @@ def compile_query(sql: str, catalog: Catalog,
     fn = builder(a, catalog, options, Bindings(static_binds))
     arrays = _gather_arrays(a, catalog)
     jitted = jax.jit(fn)
-    return CompiledQuery(sql, a, plan, rewritten, options, jitted, arrays)
+    batch_builder = BATCH_BUILDERS.get(a.query_class)
+    if batch_builder is not None:
+        bfn = batch_builder(a, catalog, options, Bindings(static_binds))
+    else:
+        def bfn(arrs, binds, _fn=fn):
+            return jax.vmap(lambda b: _fn(arrs, b))(binds)
+    return CompiledQuery(sql, a, plan, rewritten, options, jitted, arrays,
+                         jax.jit(bfn))

@@ -31,7 +31,8 @@ import jax
 import jax.numpy as jnp
 
 from ..index.flat import FlatIndex, masked_topk
-from ..index.ivf import IVFIndex, ProbeConfig, ivf_range, ivf_range_category, ivf_topk
+from ..index.ivf import (IVFIndex, ProbeConfig, ivf_range, ivf_range_batch,
+                         ivf_range_category, ivf_topk, ivf_topk_batch)
 from .expr import (Bindings, Column, Const, Cmp, BoolOp, Arith, Distance,
                    Expr, Param, distance_values, evaluate, in_range, order_key)
 from .schema import Catalog, ColumnKind, Metric, Table
@@ -45,7 +46,9 @@ class EngineOptions:
     pase_oversample: int = 10      # K' = oversample * K
     use_pallas: bool = False       # fused Pallas kernel for flat scans
     max_pairs: int = 512           # per-left-row buffer for join families
-    interpret_pallas: bool = True  # CPU container: interpret mode
+    # None -> kernels.default_interpret(): interpret on CPU, compiled Mosaic
+    # kernels on TPU/GPU, without callers threading the flag.
+    interpret_pallas: bool | None = None
 
 
 # ---------------------------------------------------------------------------
@@ -534,6 +537,169 @@ def build_category_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
     return fn
 
 
+# ---------------------------------------------------------------------------
+# Batched execution path — parameter-only batches (same plan, Q bind vectors)
+# ---------------------------------------------------------------------------
+#
+# Batch builders receive ``binds`` whose every value carries a leading Q axis
+# (the compiler stacks/broadcasts them) and lower onto the NATIVE batched
+# operators: the query-tiled Pallas scans and the multi-cluster IVF probes.
+# Structured predicates evaluate per query via vmap, producing a (Q, N) mask
+# the fused kernels consume directly.  Query classes without a native batched
+# builder fall back to a vmap of their single-query pipeline in the compiler.
+
+def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
+                        binds_static: Bindings) -> Callable:
+    table = catalog.table(a.table)
+    metric = _metric_of(catalog, a.table, a.vector_column)
+    k = _static_int(a.k, binds_static, "K")
+    mask_fn = _row_mask_fn(a.structured_predicate, table)
+    qparam = a.query_expr
+    assert isinstance(qparam, Param), "VKNN-SF query must be a parameter"
+    index = catalog.index_for(a.table, a.vector_column)
+    cfg = opts.probe
+
+    def fn(arrays, binds):
+        corpus = arrays["corpus"]
+        n = corpus.shape[0]
+        qs = jnp.asarray(binds[qparam.name])                     # (Q, D)
+        qn = qs.shape[0]
+        row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
+        if opts.engine == "chase" and index is not None:
+            idx: IVFIndex = arrays["index"]
+            ids, sims, valid, stats = ivf_topk_batch(idx, corpus, qs, k,
+                                                     row_mask, cfg)
+        elif opts.engine == "vbase" and index is not None:
+            idx = arrays["index"]
+            ids, _sims, valid, stats = ivf_topk_batch(idx, corpus, qs, k,
+                                                      row_mask, cfg)
+            ids, sims, valid = jax.vmap(
+                lambda q, i, v: _resort_redundant(metric, corpus, q, i, v, k)
+            )(qs, ids, valid)
+            stats = dict(stats)
+            stats["distance_evals"] = stats["distance_evals"] + k
+        elif opts.engine == "pase" and index is not None:
+            idx = arrays["index"]
+            kk = min(opts.pase_oversample * k, n)
+            ids_o, sims_o, valid_o, stats = ivf_topk_batch(idx, corpus, qs,
+                                                           kk, None, cfg)
+
+            def post(ids_q, sims_q, valid_q, rm_q):
+                if rm_q is not None:
+                    valid_q = valid_q & jnp.where(
+                        ids_q >= 0, rm_q[jnp.maximum(ids_q, 0)], False)
+                keep = jnp.cumsum(valid_q) <= k
+                valid_q = valid_q & keep
+                keys = jnp.where(valid_q, order_key(metric, sims_q), jnp.inf)
+                neg, sel = jax.lax.top_k(-keys, k)
+                v = jnp.isfinite(-neg)
+                return (jnp.where(v, ids_q[sel], -1),
+                        jnp.where(v, sims_q[sel], 0.0), v)
+
+            if row_mask is None:
+                ids, sims, valid = jax.vmap(
+                    lambda i, s, v: post(i, s, v, None))(ids_o, sims_o,
+                                                         valid_o)
+            else:
+                ids, sims, valid = jax.vmap(post)(ids_o, sims_o, valid_o,
+                                                  row_mask)
+        else:  # brute (LingoDB-V analogue) or missing index
+            if opts.use_pallas:
+                from ..kernels.ops import fused_scan_topk_batch
+                ids, sims, valid = fused_scan_topk_batch(
+                    corpus, qs, k, row_mask, metric,
+                    interpret=opts.interpret_pallas)
+            else:
+                flat = FlatIndex(metric, corpus)
+                if row_mask is None:
+                    ids, sims, valid = jax.vmap(
+                        lambda q: flat.topk(q, k, None))(qs)
+                else:
+                    ids, sims, valid = jax.vmap(
+                        lambda q, rm: flat.topk(q, k, rm))(qs, row_mask)
+            stats = {"probes": jnp.zeros((qn,), jnp.int32),
+                     "distance_evals": jnp.full((qn,), n, jnp.int32)}
+        return {"ids": ids, "sim": sims, "valid": valid, "stats": stats}
+
+    return fn
+
+
+def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
+                      binds_static: Bindings) -> Callable:
+    table = catalog.table(a.table)
+    metric = _metric_of(catalog, a.table, a.vector_column)
+    mask_fn = _row_mask_fn(a.structured_predicate, table)
+    qparam = a.query_expr
+    index = catalog.index_for(a.table, a.vector_column)
+    cfg = opts.probe
+    radius_expr = a.radius
+
+    def radius_of(binds):
+        return evaluate(radius_expr, table, binds)
+
+    def fn(arrays, binds):
+        corpus = arrays["corpus"]
+        n = corpus.shape[0]
+        qs = jnp.asarray(binds[qparam.name])                      # (Q, D)
+        qn = qs.shape[0]
+        radius = jnp.broadcast_to(jax.vmap(radius_of)(binds), (qn,))
+        row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
+        if opts.engine == "chase" and index is not None:
+            idx = arrays["index"]
+            ids, sims, valid, count, stats = ivf_range_batch(
+                idx, corpus, qs, radius, row_mask, cfg)
+        elif opts.engine == "vbase" and index is not None:
+            idx = arrays["index"]
+            ids, _sims, valid, count, stats = ivf_range_batch(
+                idx, corpus, qs, radius, None, cfg)
+
+            def post(q, ids_q, valid_q, r_q, rm_q):
+                safe = jnp.maximum(ids_q, 0)
+                raw = distance_values(metric, corpus[safe], q)    # REDUNDANT
+                v = valid_q & in_range(metric, raw, r_q)
+                if rm_q is not None:
+                    v = v & rm_q[safe]
+                return jnp.where(v, raw, 0.0), v
+
+            if row_mask is None:
+                sims, valid = jax.vmap(
+                    lambda q, i, v, r: post(q, i, v, r, None))(
+                        qs, ids, valid, radius)
+            else:
+                sims, valid = jax.vmap(post)(qs, ids, valid, radius, row_mask)
+            count = jnp.sum(valid, axis=1)
+            stats = dict(stats)
+            stats["distance_evals"] = stats["distance_evals"] + cfg.capacity
+        else:
+            # PASE/pgvector cannot route range queries to the ANN index (§2.3)
+            capacity = min(cfg.capacity, n)
+            if opts.use_pallas:
+                from ..kernels.ops import fused_range_scan_batch
+                hit, raw, _cnt = fused_range_scan_batch(
+                    corpus, qs, radius, row_mask, metric,
+                    interpret=opts.interpret_pallas)
+            else:
+                flat = FlatIndex(metric, corpus)
+                if row_mask is None:
+                    hit, raw = jax.vmap(
+                        lambda q, r: flat.range_mask(q, r, None))(qs, radius)
+                else:
+                    hit, raw = jax.vmap(flat.range_mask)(qs, radius, row_mask)
+            keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
+            neg, sel = jax.lax.top_k(-keys, capacity)              # row-wise
+            valid = jnp.isfinite(-neg)
+            ids = jnp.where(valid, sel.astype(jnp.int32), -1)
+            sims = jnp.where(valid, jnp.take_along_axis(raw, sel, axis=1),
+                             0.0)
+            count = jnp.sum(hit, axis=1)
+            stats = {"probes": jnp.zeros((qn,), jnp.int32),
+                     "distance_evals": jnp.full((qn,), n, jnp.int32)}
+        return {"ids": ids, "sim": sims, "valid": valid, "count": count,
+                "stats": stats}
+
+    return fn
+
+
 BUILDERS = {
     QueryClass.VKNN_SF: build_vknn_sf,
     QueryClass.DR_SF: build_dr_sf,
@@ -541,4 +707,10 @@ BUILDERS = {
     QueryClass.KNN_JOIN: build_knn_join,
     QueryClass.CATEGORY_PARTITION: build_category_partition,
     QueryClass.CATEGORY_JOIN: build_category_join,
+}
+
+# classes with a NATIVE batched lowering; others vmap their scalar pipeline
+BATCH_BUILDERS = {
+    QueryClass.VKNN_SF: build_vknn_sf_batch,
+    QueryClass.DR_SF: build_dr_sf_batch,
 }

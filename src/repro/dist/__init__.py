@@ -1,0 +1,10 @@
+"""Distribution layer: logical-axis sharding rules and query collectives.
+
+``sharding``    — logical axis names -> mesh axes (the model/engine code only
+                  speaks logical names; the launch layer binds them to a mesh).
+``collectives`` — sharded-corpus hybrid-query primitives (per-shard fused
+                  scan + hierarchical top-k / range merges).
+"""
+from . import collectives, sharding
+
+__all__ = ["collectives", "sharding"]

@@ -1,0 +1,86 @@
+"""Logical-axis sharding: model code names axes ("batch", "heads", ...) and
+the launch layer binds those names to physical mesh axes via a rules dict.
+
+Without an active mesh every helper is a no-op passthrough, so single-device
+smoke tests and the query engine never pay a sharding tax.  The rules dict
+maps logical name -> mesh axis (str), tuple of mesh axes, or None
+(replicated); see ``launch.shardspec.rules_for`` for the production tables.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+_STATE = threading.local()
+
+
+def _stack() -> list:
+    if not hasattr(_STATE, "stack"):
+        _STATE.stack = []
+    return _STATE.stack
+
+
+@contextlib.contextmanager
+def logical_axis_rules(rules: Mapping[str, Any], mesh: Mesh | None = None):
+    """Activate a logical->mesh axis mapping for the enclosed region."""
+    _stack().append((dict(rules), mesh))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_rules() -> dict | None:
+    s = _stack()
+    return s[-1][0] if s else None
+
+
+def current_mesh() -> Mesh | None:
+    s = _stack()
+    return s[-1][1] if s else None
+
+
+def logical_to_spec(logical_axes: Sequence, rules: Mapping[str, Any]) -> tuple:
+    """Map logical axis names through the rules to PartitionSpec entries."""
+    out = []
+    for name in logical_axes:
+        entry = rules.get(name) if name is not None else None
+        if isinstance(entry, (list, tuple)):
+            entry = tuple(entry) if entry else None
+        out.append(entry)
+    return tuple(out)
+
+
+def _entry_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        size = 1
+        for a in entry:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[entry]
+
+
+def constrain(x, logical_axes: Sequence):
+    """``with_sharding_constraint`` by logical names; passthrough when no
+    rules/mesh are active or an axis size does not divide the dim."""
+    s = _stack()
+    if not s:
+        return x
+    rules, mesh = s[-1]
+    if rules is None or mesh is None:
+        return x
+    spec = list(logical_to_spec(logical_axes, rules))
+    while len(spec) < x.ndim:
+        spec.append(None)
+    fixed = []
+    for dim, entry in zip(x.shape, spec[: x.ndim]):
+        size = _entry_size(mesh, entry)
+        fixed.append(entry if (size > 1 and dim % size == 0) else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*fixed)))

@@ -62,6 +62,7 @@ class ProbeConfig:
     out_range_stop: int = 2         # Alg.1 `IsAboveN` N, cluster-granular
     capacity: int = 4096            # range-probe result buffer
     termination: str = "counter"    # 'counter' (faithful) | 'bound' (exact)
+    probe_batch: int = 1            # clusters gathered per while_loop round
     no_new_category_stop: int = 2   # Alg.2: clusters w/o new category
     num_categories: int = 0         # static category cardinality (Alg.2)
     k_per_category: int = 10        # Alg.2 K
@@ -367,4 +368,209 @@ def ivf_range_category(index: IVFIndex, corpus: jnp.ndarray,
                      0.0)
     stats = {"probes": p, "distance_evals": evals,
              "categories_seen": jnp.sum(seen)}
+    return out_ids, sims, valid, count, stats
+
+
+# ---------------------------------------------------------------------------
+# Batched probes — Q queries, ``probe_batch`` clusters per while_loop round
+# ---------------------------------------------------------------------------
+#
+# The per-query loop above gathers ONE inverted list per round: a (cap, d)
+# gather followed by a matvec — MXU-hostile.  The batched path amortizes both
+# axes at once: Q queries advance in lock-step (merged per-query termination
+# state decides who still probes) and each round gathers ``probe_batch``
+# clusters into one (B·cap, d) block per query, so every round is one dense
+# batched matmul.  Per-query early termination is preserved at ROUND
+# granularity: a finished query's state freezes (``active`` mask) while
+# stragglers keep probing — with probe_batch=1 the probe sequence, merges, and
+# counters are bit-identical to the sequential functions.
+
+def _round_schedule(index: IVFIndex, cfg: ProbeConfig):
+    """(B, n_rounds, max_probes) for the round-granular probe loop."""
+    max_probes = min(cfg.max_probes, index.nlist)
+    B = max(1, min(cfg.probe_batch, max_probes))
+    n_rounds = -(-max_probes // B)
+    return B, n_rounds, max_probes
+
+
+def _order_pad_batch(index: IVFIndex, qs: jnp.ndarray, B: int, n_rounds: int,
+                     max_probes: int):
+    """Per-query probe order padded to n_rounds*B with -1 sentinels."""
+    order, _, bounds = jax.vmap(lambda q: _cluster_order(index, q))(qs)
+    order = order[:, :max_probes]
+    pad = n_rounds * B - max_probes
+    if pad:
+        order = jnp.pad(order, ((0, 0), (0, pad)), constant_values=-1)
+    return order, bounds
+
+
+def _scan_clusters_batch(index: IVFIndex, corpus: jnp.ndarray,
+                         qs: jnp.ndarray, clusters: jnp.ndarray,
+                         row_mask: jnp.ndarray | None):
+    """Gather B inverted lists per query, one batched matmul for the keys.
+
+    clusters: (Q, B) with -1 sentinels.  Returns (ids (Q, B·cap),
+    keys (Q, B·cap), valid, rm_hit (row-mask lookup), n_evals (Q,))."""
+    qn, bsz = clusters.shape
+    safe_cl = jnp.maximum(clusters, 0)
+    ids = index.lists[safe_cl]                          # (Q, B, cap)
+    ids = jnp.where(clusters[..., None] >= 0, ids, -1)
+    ids = ids.reshape(qn, bsz * index.cap)
+    pad = ids >= 0
+    safe = jnp.maximum(ids, 0)
+    vecs = corpus[safe]                                 # (Q, B·cap, d)
+    raw = distance_values(index.metric, vecs, qs[:, None, :])
+    keys = order_key(index.metric, raw)
+    if row_mask is None:
+        rm_hit = pad
+    elif row_mask.ndim == 1:
+        rm_hit = row_mask[safe]
+    else:
+        rm_hit = jnp.take_along_axis(row_mask, safe, axis=1)
+    return ids, jnp.where(pad, keys, INF), pad, rm_hit, jnp.sum(pad, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "cfg"))
+def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
+                   k: int, row_mask: jnp.ndarray | None = None,
+                   cfg: ProbeConfig = ProbeConfig()):
+    """Batched filtered top-k: (Q, d) queries, multi-cluster probe rounds.
+
+    ``row_mask`` is None, a shared (N,) mask, or per-query (Q, N).  Returns
+    (ids (Q, k), sims (Q, k), valid (Q, k), stats with per-query (Q,) arrays).
+    With ``cfg.probe_batch == 1`` results match :func:`ivf_topk` exactly
+    (same probe prefix, same merges); with B > 1 each query probes a prefix
+    that is a superset of its sequential prefix, so its kth key can only
+    improve."""
+    qn = qs.shape[0]
+    B, n_rounds, max_probes = _round_schedule(index, cfg)
+    order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
+
+    def cond(state):
+        r, *_rest, active = state
+        return (r < n_rounds) & jnp.any(active)
+
+    def body(state):
+        r, bk, bi, no_imp, probes, evals, active = state
+        cl = jax.lax.dynamic_slice_in_dim(order, r * B, B, axis=1)
+        ids, keys, valid, rm_hit, nev = _scan_clusters_batch(
+            index, corpus, qs, cl, row_mask)
+        valid = valid & rm_hit
+        old_kth = bk[:, k - 1]
+        merged_k, merged_i = jax.vmap(
+            lambda a, b, c, d, e: _merge_topk(a, b, c, d, e, k))(
+                bk, bi, keys, ids, valid)
+        bk2 = jnp.where(active[:, None], merged_k, bk)
+        bi2 = jnp.where(active[:, None], merged_i, bi)
+        improved = (bk2[:, k - 1] < old_kth) | (~jnp.isfinite(old_kth)
+                                                & jnp.isfinite(bk2[:, k - 1]))
+        n_probed = jnp.minimum(B, max_probes - r * B)
+        # the no-improvement counter advances per CLUSTER, not per round: a
+        # non-improving round means all n_probed clusters failed to improve
+        # (kth only tightens), keeping stop_after_no_improve calibrated in
+        # cluster units for any probe_batch
+        no_imp2 = jnp.where(active,
+                            jnp.where(improved, 0, no_imp + n_probed),
+                            no_imp)
+        probes2 = probes + jnp.where(active, n_probed, 0)
+        evals2 = evals + jnp.where(active, nev, 0)
+        p_next = (r + 1) * B
+        have_k = jnp.isfinite(bk2[:, k - 1])
+        if cfg.termination == "bound":
+            nb = bounds[:, jnp.minimum(p_next, index.nlist - 1)]
+            done = have_k & (nb > bk2[:, k - 1])
+        else:
+            done = have_k & (no_imp2 >= cfg.stop_after_no_improve)
+        done = done & (p_next >= cfg.min_probes)
+        active2 = active & ~done & (p_next < max_probes)
+        return (r + 1, bk2, bi2, no_imp2, probes2, evals2, active2)
+
+    init = (jnp.int32(0),
+            jnp.full((qn, k), INF), jnp.full((qn, k), -1, jnp.int32),
+            jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
+            jnp.zeros((qn,), jnp.int32), jnp.ones((qn,), jnp.bool_))
+    _, bk, bi, _, probes, evals, _ = jax.lax.while_loop(cond, body, init)
+    valid = jnp.isfinite(bk)
+    sims = jnp.where(valid, -bk if index.metric.is_similarity() else bk, 0.0)
+    stats = {"probes": probes, "distance_evals": evals}
+    return jnp.where(valid, bi, -1), sims, valid, stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ivf_range_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
+                    radius, row_mask: jnp.ndarray | None = None,
+                    cfg: ProbeConfig = ProbeConfig()):
+    """Batched DR-SF probe (Algorithm 1 over a query batch).
+
+    ``radius`` is a scalar or per-query (Q,) raw metric values.  Returns
+    (ids (Q, capacity), sims, valid, count (Q,), stats with (Q,) arrays).
+    probe_batch=1 matches :func:`ivf_range` per query exactly."""
+    qn = qs.shape[0]
+    B, n_rounds, max_probes = _round_schedule(index, cfg)
+    order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
+    radius_key = order_key(index.metric, jnp.broadcast_to(
+        jnp.asarray(radius, jnp.float32), (qn,)))
+    capacity = cfg.capacity
+
+    def cond(state):
+        r, *_rest, active = state
+        return (r < n_rounds) & jnp.any(active)
+
+    def body(state):
+        (r, out_ids, out_keys, count, has_in, out_cnt, probes, evals,
+         active) = state
+        cl = jax.lax.dynamic_slice_in_dim(order, r * B, B, axis=1)
+        ids, keys, valid, rm_hit, nev = _scan_clusters_batch(
+            index, corpus, qs, cl, row_mask)
+        in_range_hit = valid & (keys <= radius_key[:, None])
+        hit = in_range_hit & rm_hit & active[:, None]
+        n_range = jnp.sum(in_range_hit, axis=1)
+        n_hits = jnp.sum(hit, axis=1)
+        pos = count[:, None] + jnp.cumsum(hit, axis=1) - 1
+        ok = hit & (pos < capacity)
+        safe_pos = jnp.where(ok, pos, capacity)
+
+        def append(oi, ok_, okr, sp, idsr, keysr):
+            oi = oi.at[sp].set(jnp.where(ok_, idsr, -1), mode="drop")
+            okr = okr.at[sp].set(jnp.where(ok_, keysr, INF), mode="drop")
+            return oi, okr
+
+        out_ids2, out_keys2 = jax.vmap(append)(out_ids, ok, out_keys,
+                                               safe_pos, ids, keys)
+        count2 = jnp.where(active, jnp.minimum(count + n_hits, capacity),
+                           count)
+        has_in2 = jnp.where(active, has_in | (n_range > 0), has_in)
+        n_probed = jnp.minimum(B, max_probes - r * B)
+        # out-of-range counter in CLUSTER units (see ivf_topk_batch): an
+        # empty round is n_probed consecutive empty cluster probes
+        out_cnt2 = jnp.where(
+            active,
+            jnp.where(n_range > 0, 0,
+                      jnp.where(has_in, out_cnt + n_probed, 0)),
+            out_cnt)
+        probes2 = probes + jnp.where(active, n_probed, 0)
+        evals2 = evals + jnp.where(active, nev, 0)
+        p_next = (r + 1) * B
+        if cfg.termination == "bound":
+            done = bounds[:, jnp.minimum(p_next, index.nlist - 1)] > radius_key
+        else:
+            done = has_in2 & (out_cnt2 >= cfg.out_range_stop)
+        done = done & (p_next >= cfg.min_probes)
+        active2 = active & ~done & (p_next < max_probes)
+        return (r + 1, out_ids2, out_keys2, count2, has_in2, out_cnt2,
+                probes2, evals2, active2)
+
+    init = (jnp.int32(0),
+            jnp.full((qn, capacity), -1, jnp.int32),
+            jnp.full((qn, capacity), INF),
+            jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.bool_),
+            jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
+            jnp.zeros((qn,), jnp.int32), jnp.ones((qn,), jnp.bool_))
+    (_, out_ids, out_keys, count, _hi, _oc, probes, evals,
+     _a) = jax.lax.while_loop(cond, body, init)
+    valid = out_ids >= 0
+    sims = jnp.where(valid,
+                     -out_keys if index.metric.is_similarity() else out_keys,
+                     0.0)
+    stats = {"probes": probes, "distance_evals": evals}
     return out_ids, sims, valid, count, stats

@@ -6,6 +6,8 @@ Layout per the kernels contract:
 * ``ops.py``  — jit'd public wrappers (padding, two-stage merges),
 * ``ref.py``  — pure-jnp oracles used by the allclose test sweeps.
 """
-from .ops import fused_range_scan, fused_scan_topk, pairwise_keys
+from .ops import (default_interpret, fused_range_scan, fused_range_scan_batch,
+                  fused_scan_topk, fused_scan_topk_batch, pairwise_keys)
 
-__all__ = ["fused_range_scan", "fused_scan_topk", "pairwise_keys"]
+__all__ = ["default_interpret", "fused_range_scan", "fused_range_scan_batch",
+           "fused_scan_topk", "fused_scan_topk_batch", "pairwise_keys"]

@@ -9,10 +9,23 @@ import jax.numpy as jnp
 
 from ..core.schema import Metric
 from .distance import pairwise_keys_pallas
-from .range_scan import range_scan_pallas
-from .scan_topk import scan_topk_pallas
+from .range_scan import range_scan_batch_pallas, range_scan_pallas
+from .scan_topk import scan_topk_batch_pallas, scan_topk_pallas
 
 LANE = 128
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode iff no accelerator backend is attached.
+
+    TPU/GPU runs compile real Mosaic/Triton kernels; the CPU container (CI,
+    laptops) transparently falls back to the interpreter — callers pass
+    ``interpret=None`` and never thread the flag."""
+    return jax.default_backend() == "cpu"
+
+
+def _resolve_interpret(interpret) -> bool:
+    return default_interpret() if interpret is None else bool(interpret)
 
 
 def _pad_dim(x: jnp.ndarray, mult: int, axis: int, value=0.0) -> jnp.ndarray:
@@ -24,18 +37,39 @@ def _pad_dim(x: jnp.ndarray, mult: int, axis: int, value=0.0) -> jnp.ndarray:
     return jnp.pad(x, widths, constant_values=value)
 
 
+def _mask_nq_i8(row_mask: jnp.ndarray | None, n: int, qn: int,
+                block_n: int, block_q: int) -> jnp.ndarray:
+    """Normalize a mask (None | (N,) shared | (Q, N) per-query) to the padded
+    (Npad, Qm) int8 layout the batched kernels consume (Qm ∈ {1, Qpad})."""
+    if row_mask is None:
+        m = jnp.ones((n, 1), jnp.int8)
+    elif row_mask.ndim == 1:
+        m = row_mask.astype(jnp.int8).reshape(n, 1)
+    else:
+        assert row_mask.shape == (qn, n), (row_mask.shape, qn, n)
+        m = _pad_dim(row_mask.astype(jnp.int8).T, block_q, 1, value=0)
+    return _pad_dim(m, block_n, 0, value=0)
+
+
+def _block_sizes(n: int, qn: int, block_q: int, block_n: int):
+    bn = min(block_n, max(LANE, 1 << (n - 1).bit_length()))
+    bq = min(block_q, max(8, 1 << (qn - 1).bit_length()))
+    return bq, bn
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_n",
                                              "interpret"))
 def fused_scan_topk(corpus: jnp.ndarray, query: jnp.ndarray, k: int,
                     row_mask: jnp.ndarray | None, metric: Metric,
-                    block_n: int = 1024, interpret: bool = True):
+                    block_n: int = 1024, interpret: bool | None = None):
     """Drop-in fused replacement for FlatIndex.topk.
 
     Returns (ids (k,), sims raw-metric (k,), valid (k,)).  Zero-padding on D
     is metric-safe (contributes 0 to IP, 0 to L2 on both operands); padding on
     N is masked out."""
+    interpret = _resolve_interpret(interpret)
     n, d = corpus.shape
-    block_n = min(block_n, max(LANE, 1 << (n - 1).bit_length()))
+    _, block_n = _block_sizes(n, 1, 1, block_n)
     mask = jnp.ones((n,), jnp.bool_) if row_mask is None else row_mask
     cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), block_n, 0)
     qp = _pad_dim(query.astype(jnp.float32).reshape(-1), LANE, 0)
@@ -57,13 +91,14 @@ def fused_scan_topk(corpus: jnp.ndarray, query: jnp.ndarray, k: int,
 @functools.partial(jax.jit, static_argnames=("metric", "block_n", "interpret"))
 def fused_range_scan(corpus: jnp.ndarray, query: jnp.ndarray, radius,
                      row_mask: jnp.ndarray | None, metric: Metric,
-                     block_n: int = 1024, interpret: bool = True):
+                     block_n: int = 1024, interpret: bool | None = None):
     """Drop-in fused replacement for FlatIndex.range_mask.
 
     Returns (hit (N,), raw sims (N,), count)."""
     from ..core.expr import order_key
+    interpret = _resolve_interpret(interpret)
     n, d = corpus.shape
-    block_n = min(block_n, max(LANE, 1 << (n - 1).bit_length()))
+    _, block_n = _block_sizes(n, 1, 1, block_n)
     mask = jnp.ones((n,), jnp.bool_) if row_mask is None else row_mask
     cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), block_n, 0)
     qp = _pad_dim(query.astype(jnp.float32).reshape(-1), LANE, 0)
@@ -82,14 +117,79 @@ def fused_range_scan(corpus: jnp.ndarray, query: jnp.ndarray, radius,
                                              "interpret"))
 def pairwise_keys(queries: jnp.ndarray, corpus: jnp.ndarray, metric: Metric,
                   block_q: int = 128, block_c: int = 512,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """(Q, N) order-key matrix (padded internally, cropped on return)."""
+    interpret = _resolve_interpret(interpret)
     qn, d = queries.shape
     cn = corpus.shape[0]
-    bq = min(block_q, max(8, 1 << (qn - 1).bit_length()))
-    bc = min(block_c, max(LANE, 1 << (cn - 1).bit_length()))
+    bq, bc = _block_sizes(cn, qn, block_q, block_c)
     qp = _pad_dim(_pad_dim(queries.astype(jnp.float32), LANE, 1), bq, 0)
     cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), bc, 0)
     out = pairwise_keys_pallas(qp, cp, metric, block_q=bq, block_c=bc,
                                interpret=interpret)
     return out[:qn, :cn]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "metric", "block_q",
+                                             "block_n", "interpret"))
+def fused_scan_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
+                          row_mask: jnp.ndarray | None, metric: Metric,
+                          block_q: int = 128, block_n: int = 1024,
+                          interpret: bool | None = None):
+    """Batched fused scan+filter+top-k: Q queries in one kernel launch.
+
+    ``queries`` is (Q, D); ``row_mask`` is None, a shared (N,) mask, or a
+    per-query (Q, N) mask.  Each (q-block, n-block) grid cell runs ONE
+    (BLOCK_N, D)·(D, BLOCK_Q) MXU matmul — the per-tile corpus read is
+    amortized over BLOCK_Q queries instead of re-streamed per query.
+    Returns (ids (Q, k), sims raw-metric (Q, k), valid (Q, k))."""
+    interpret = _resolve_interpret(interpret)
+    n, d = corpus.shape
+    qn = queries.shape[0]
+    bq, bn = _block_sizes(n, qn, block_q, block_n)
+    cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), bn, 0)
+    qp = _pad_dim(_pad_dim(queries.astype(jnp.float32), LANE, 1), bq, 0)
+    mp = _mask_nq_i8(row_mask, n, qn, bn, bq)
+    keys, ids = scan_topk_batch_pallas(cp, qp, mp, k, metric, block_q=bq,
+                                       block_n=bn, interpret=interpret)
+    # stage 2: query-major layout, rebase local ids by n-block, merge per row
+    num_n = cp.shape[0] // bn
+    keys = keys.T                                               # (Qpad, nb*k)
+    ids = ids.T
+    base = (jnp.arange(num_n * k, dtype=jnp.int32) // k) * bn   # (num_n*k,)
+    gids = jnp.where(ids >= 0, ids + base[None, :], -1)
+    neg, idx = jax.lax.top_k(-keys, k)                          # row-wise
+    out_keys = -neg
+    valid = jnp.isfinite(out_keys)
+    out_ids = jnp.where(valid, jnp.take_along_axis(gids, idx, axis=1), -1)
+    sims = jnp.where(valid,
+                     -out_keys if metric.is_similarity() else out_keys, 0.0)
+    return out_ids[:qn], sims[:qn], valid[:qn]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_n",
+                                             "interpret"))
+def fused_range_scan_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
+                           row_mask: jnp.ndarray | None, metric: Metric,
+                           block_q: int = 128, block_n: int = 1024,
+                           interpret: bool | None = None):
+    """Batched fused range scan. ``radius`` is a scalar or (Q,) raw values.
+
+    Returns (hit (Q, N), raw sims (Q, N), counts (Q,))."""
+    from ..core.expr import order_key
+    interpret = _resolve_interpret(interpret)
+    n, d = corpus.shape
+    qn = queries.shape[0]
+    bq, bn = _block_sizes(n, qn, block_q, block_n)
+    cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), bn, 0)
+    qp = _pad_dim(_pad_dim(queries.astype(jnp.float32), LANE, 1), bq, 0)
+    mp = _mask_nq_i8(row_mask, n, qn, bn, bq)
+    rk = order_key(metric, jnp.broadcast_to(
+        jnp.asarray(radius, jnp.float32), (qn,)))
+    rk = _pad_dim(rk.reshape(1, qn), bq, 1, value=-jnp.inf)  # padded q: no hit
+    keys, hits, counts = range_scan_batch_pallas(
+        cp, qp, rk, mp, metric, block_q=bq, block_n=bn, interpret=interpret)
+    keys = keys[:n, :qn].T                                  # (Q, N)
+    hit = hits[:n, :qn].T != 0
+    raw = jnp.where(hit, -keys if metric.is_similarity() else keys, 0.0)
+    return hit, raw, jnp.sum(counts, axis=0)[:qn]

@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.schema import Metric
-from .scan_topk import _keys_from_block
+from .scan_topk import _keys_from_block, _keys_from_block_batch
 
 INF = float("inf")
 
@@ -68,4 +68,65 @@ def range_scan_pallas(corpus: jnp.ndarray, query: jnp.ndarray,
         ],
         interpret=interpret,
     )(q2, r2, corpus, mask_i8)
+    return keys, hits, counts
+
+
+def _range_batch_kernel(q_ref, r_ref, c_ref, m_ref, keys_out, hits_out,
+                        cnt_out, *, metric: Metric):
+    """Grid (num_q_blocks, num_n_blocks): one corpus-tile matmul amortized
+    over the query tile; per-query radius row; per-(tile, query) hit counts."""
+    block = c_ref[...].astype(jnp.float32)               # (B, D)
+    qs = q_ref[...].astype(jnp.float32)                  # (BQ, D)
+    radius_row = r_ref[...]                              # (1, BQ)
+    keys = _keys_from_block_batch(block, qs, metric)     # (B, BQ)
+    mask = m_ref[...] != 0                               # (B, BQ) or (B, 1)
+    hit = mask & (keys <= radius_row)
+    keys_out[...] = jnp.where(hit, keys, INF)
+    hits_out[...] = hit.astype(jnp.int8)
+    cnt_out[...] = jnp.sum(hit.astype(jnp.int32), axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "block_q", "block_n",
+                                             "interpret"))
+def range_scan_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
+                            radius_keys: jnp.ndarray, mask_i8: jnp.ndarray,
+                            metric: Metric, block_q: int = 128,
+                            block_n: int = 1024, interpret: bool = True):
+    """Query-tiled fused range scan.
+
+    Inputs pre-padded: corpus (Npad, Dpad), queries (Qpad, Dpad),
+    radius_keys (1, Qpad) order keys, mask (Npad, Qm) int8, Qm ∈ {1, Qpad}.
+    Returns ((Npad, Qpad) masked keys, (Npad, Qpad) int8 hits,
+    (num_n_blocks, Qpad) per-block per-query hit counts)."""
+    n, d = corpus.shape
+    qn = queries.shape[0]
+    assert n % block_n == 0 and qn % block_q == 0
+    num_n = n // block_n
+    num_q = qn // block_q
+    per_query_mask = mask_i8.shape[1] != 1
+    mspec = (pl.BlockSpec((block_n, block_q), lambda i, j: (j, i))
+             if per_query_mask
+             else pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)))
+    kernel = functools.partial(_range_batch_kernel, metric=metric)
+    keys, hits, counts = pl.pallas_call(
+        kernel,
+        grid=(num_q, num_n),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (0, i)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+            mspec,
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, block_q), lambda i, j: (j, i)),
+            pl.BlockSpec((block_n, block_q), lambda i, j: (j, i)),
+            pl.BlockSpec((1, block_q), lambda i, j: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, qn), jnp.float32),
+            jax.ShapeDtypeStruct((n, qn), jnp.int8),
+            jax.ShapeDtypeStruct((num_n, qn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, radius_keys, corpus, mask_i8)
     return keys, hits, counts

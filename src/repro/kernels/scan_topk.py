@@ -74,6 +74,123 @@ def _keys_from_block(block: jnp.ndarray, q: jnp.ndarray,
     raise ValueError(metric)
 
 
+def _sq_rowvec(x: jnp.ndarray) -> jnp.ndarray:
+    """(BQ, D) -> (1, BQ) per-row squared norms, via a dot-general contraction
+    (no vector transpose/relayout inside Mosaic)."""
+    ones = jnp.ones((1, x.shape[1]), jnp.float32)
+    return jax.lax.dot_general(ones, x * x, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)
+
+
+def _keys_from_block_batch(block: jnp.ndarray, qs: jnp.ndarray,
+                           metric: Metric) -> jnp.ndarray:
+    """(B,D),(BQ,D) -> (B,BQ) order keys. One MXU matmul per corpus tile
+    amortized over the whole query tile — the batched-execution hot loop."""
+    ip = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (B, BQ)
+    if metric == Metric.INNER_PRODUCT:
+        return -ip
+    if metric == Metric.L2:
+        b2 = jnp.sum(block * block, axis=1, keepdims=True)   # (B, 1)
+        q2 = _sq_rowvec(qs)                                  # (1, BQ)
+        return b2 - 2.0 * ip + q2
+    if metric == Metric.COSINE:
+        bn = jnp.sqrt(jnp.sum(block * block, axis=1, keepdims=True))
+        qn = jnp.sqrt(_sq_rowvec(qs))
+        return -(ip / (bn * qn + 1e-12))
+    raise ValueError(metric)
+
+
+def _extract_topk_cols(keys_bq: jnp.ndarray, k: int):
+    """(B, BQ) masked keys -> ((k, BQ) smallest keys, (k, BQ) row indices).
+
+    Column-parallel k-step extract-min: every iteration selects one row per
+    query column with 6 full-size array passes (min, eq, tie-break where/min,
+    select, invalidate) and updates the small (k, BQ) outputs in place — no
+    vector transposes, no gathers, per-column state stays in the (1, BQ)
+    lane layout throughout (Mosaic-safe).  Invalid (all-INF) columns emit
+    INF keys and -1 ids."""
+    b, bq = keys_bq.shape
+    iota_col = jax.lax.broadcasted_iota(jnp.int32, (b, bq), 0)
+    iota_kq = jax.lax.broadcasted_iota(jnp.int32, (k, bq), 0)
+
+    def body(j, carry):
+        vals, out_keys, out_ids = carry
+        m = jnp.min(vals, axis=0, keepdims=True)                    # (1, BQ)
+        idxv = jnp.min(jnp.where(vals == m, iota_col, b), axis=0,
+                       keepdims=True)                               # (1, BQ)
+        sel = iota_col == idxv
+        keep = jnp.isfinite(m)                                      # (1, BQ)
+        out_keys = jnp.where(iota_kq == j, jnp.where(keep, m, INF), out_keys)
+        out_ids = jnp.where(iota_kq == j, jnp.where(keep, idxv, -1), out_ids)
+        vals = jnp.where(sel, INF, vals)
+        return vals, out_keys, out_ids
+
+    init = (keys_bq, jnp.full((k, bq), INF),
+            jnp.full((k, bq), -1, jnp.int32))
+    _, out_keys, out_ids = jax.lax.fori_loop(0, k, body, init)
+    return out_keys, out_ids
+
+
+def _scan_topk_batch_kernel(q_ref, c_ref, m_ref, keys_out, ids_out, *,
+                            k: int, metric: Metric):
+    """Grid (num_q_blocks, num_n_blocks): one (BLOCK_N, D)·(D, BLOCK_Q) MXU
+    matmul per tile, per-query in-register top-k.  Emits (k, BLOCK_Q) blocks
+    of LOCAL row indices; the wrapper rebases by n-block and transposes."""
+    block = c_ref[...].astype(jnp.float32)               # (B, D)
+    qs = q_ref[...].astype(jnp.float32)                  # (BQ, D)
+    keys = _keys_from_block_batch(block, qs, metric)     # (B, BQ)
+    mask = m_ref[...]                                    # (B, BQ) or (B, 1)
+    keys = jnp.where(mask != 0, keys, INF)
+    out_keys, out_ids = _extract_topk_cols(keys, k)      # (k, BQ) each
+    keys_out[...] = out_keys
+    ids_out[...] = out_ids
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "metric", "block_q", "block_n",
+                                    "interpret"))
+def scan_topk_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
+                           mask_i8: jnp.ndarray, k: int, metric: Metric,
+                           block_q: int = 128, block_n: int = 1024,
+                           interpret: bool = True):
+    """Stage 1 (Pallas), query-tiled: per (q-block, n-block) top-k candidates.
+
+    Inputs are pre-padded by ops.py: corpus (Npad, Dpad), queries (Qpad, Dpad),
+    mask (Npad, Qm) int8 with Qm ∈ {1, Qpad} (shared vs per-query masks).
+    Returns (num_n_blocks*k, Qpad) keys and LOCAL ids (kernel-native layout;
+    ops.py rebases ids by n-block and transposes to query-major)."""
+    n, d = corpus.shape
+    qn = queries.shape[0]
+    assert n % block_n == 0 and qn % block_q == 0, (n, block_n, qn, block_q)
+    num_n = n // block_n
+    num_q = qn // block_q
+    per_query_mask = mask_i8.shape[1] != 1
+    mspec = (pl.BlockSpec((block_n, block_q), lambda i, j: (j, i))
+             if per_query_mask
+             else pl.BlockSpec((block_n, 1), lambda i, j: (j, 0)))
+    kernel = functools.partial(_scan_topk_batch_kernel, k=k, metric=metric)
+    keys, ids = pl.pallas_call(
+        kernel,
+        grid=(num_q, num_n),
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),   # query tile
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),   # corpus tile
+            mspec,                                             # mask tile
+        ],
+        out_specs=[
+            pl.BlockSpec((k, block_q), lambda i, j: (j, i)),
+            pl.BlockSpec((k, block_q), lambda i, j: (j, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((num_n * k, qn), jnp.float32),
+            jax.ShapeDtypeStruct((num_n * k, qn), jnp.int32),
+        ],
+        interpret=interpret,
+    )(queries, corpus, mask_i8)
+    return keys, ids
+
+
 def _scan_topk_kernel(q_ref, c_ref, m_ref, keys_out, ids_out, *,
                       k: int, block_n: int, metric: Metric):
     i = pl.program_id(0)

@@ -178,6 +178,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         t_compile = time.time() - t0 - t_lower
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
+        if isinstance(cost, (list, tuple)):   # older jax: one dict per device
+            cost = cost[0] if cost else {}
         # trip-count-aware analysis (cost_analysis counts scan bodies once)
         hlo = analyze_hlo(compiled.as_text())
         coll = {k: float(v) for k, v in hlo.collective_bytes.items()}

@@ -71,6 +71,10 @@ class HybridRetriever:
 
     def retrieve_batch(self, query_embeddings, min_freshness=0.0,
                        safety_class=0):
-        """vmapped retrieval for a serving batch."""
-        fn = jax.vmap(lambda q: self.retrieve(q, min_freshness, safety_class))
-        return fn(query_embeddings)
+        """Native batched retrieval for a serving batch: one compiled
+        pipeline runs the query-tiled scan / multi-cluster IVF probes for the
+        whole batch (per-query filters supported via broadcast binds)."""
+        out = self.compiled.execute_batch(
+            query_embedding=jnp.asarray(query_embeddings),
+            min_freshness=min_freshness, safety_class=safety_class)
+        return out["ids"], out["sim"], out["valid"]

@@ -1,0 +1,232 @@
+"""Batched execution path: query-tiled kernels, multi-cluster IVF probes,
+and the engine's execute_batch — parity against the per-query paths.
+
+Contracts under test:
+* ``fused_scan_topk_batch`` / ``fused_range_scan_batch`` equal the per-query
+  fused kernels (ids up to ties, keys to 1e-5) across metrics, ragged
+  Q/N/D padding shapes, and every mask mode (none / shared / per-query).
+* ``ivf_topk_batch`` / ``ivf_range_batch`` with probe_batch=1 are
+  bit-identical to the sequential probes (same probe prefix, same counters);
+  with probe_batch>1 each query probes a SUPERSET prefix, so its kth key can
+  only improve.
+* batch results are permutation-invariant in the query axis.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.expr import order_key
+from repro.core.schema import Metric
+from repro.index import FlatIndex, build_ivf
+from repro.index.ivf import (ProbeConfig, ivf_range, ivf_range_batch,
+                             ivf_topk, ivf_topk_batch)
+from repro.kernels import ref
+from repro.kernels.ops import (fused_range_scan, fused_range_scan_batch,
+                               fused_scan_topk, fused_scan_topk_batch)
+
+METRICS = [Metric.INNER_PRODUCT, Metric.L2, Metric.COSINE]
+# ragged shapes: none of Q/N/D aligned to the 8/128 tile multiples
+SHAPES = [(1000, 48, 10, 7), (513, 33, 5, 1), (777, 96, 20, 33)]
+
+
+def _data(n, d, qn, seed=0):
+    rng = np.random.default_rng(seed)
+    c = jnp.asarray(rng.standard_normal((n, d)).astype(np.float32))
+    qs = jnp.asarray(rng.standard_normal((qn, d)).astype(np.float32))
+    shared = jnp.asarray(rng.random(n) < 0.5)
+    per_q = jnp.asarray(rng.random((qn, n)) < 0.3)
+    return c, qs, shared, per_q
+
+
+# ---------------------------------------------------------------------------
+# kernel parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+@pytest.mark.parametrize("n,d,k,qn", SHAPES)
+def test_scan_topk_batch_matches_single(metric, n, d, k, qn):
+    c, qs, shared, per_q = _data(n, d, qn)
+    for mask in (None, shared, per_q):
+        ids, sims, valid = fused_scan_topk_batch(c, qs, k, mask, metric,
+                                                 block_q=16, block_n=256)
+        assert ids.shape == (qn, k)
+        for qi in range(qn):
+            rm = mask if (mask is None or mask.ndim == 1) else mask[qi]
+            sids, ssims, svalid = fused_scan_topk(c, qs[qi], k, rm, metric,
+                                                  block_n=256)
+            assert np.array_equal(np.asarray(valid[qi]), np.asarray(svalid))
+            kb = np.asarray(order_key(metric, sims[qi]))[np.asarray(valid[qi])]
+            ks = np.asarray(order_key(metric, ssims))[np.asarray(svalid)]
+            np.testing.assert_allclose(kb, ks, rtol=1e-5, atol=1e-5)
+            if rm is not None:   # ids must satisfy the (per-query) mask
+                got = np.asarray(ids[qi])[np.asarray(valid[qi])]
+                assert np.asarray(rm)[got].all()
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_range_scan_batch_matches_single(metric):
+    n, d, qn = 700, 40, 5
+    c, qs, shared, per_q = _data(n, d, qn, seed=1)
+    keys = np.stack([np.asarray(ref.keys_ref(c, qs[i], metric))
+                     for i in range(qn)])
+    srt = np.sort(keys, axis=1)
+    # strictly between adjacent keys => no boundary-tie flakiness
+    rk = (srt[:, 100] + srt[:, 101]) / 2.0
+    radius = jnp.asarray(-rk if metric.is_similarity() else rk)
+    for mask in (None, shared, per_q):
+        hit, raw, cnt = fused_range_scan_batch(c, qs, radius, mask, metric,
+                                               block_q=8, block_n=128)
+        for qi in range(qn):
+            rm = mask if (mask is None or mask.ndim == 1) else mask[qi]
+            shit, sraw, scnt = fused_range_scan(c, qs[qi], radius[qi], rm,
+                                                metric, block_n=128)
+            assert np.array_equal(np.asarray(hit[qi]), np.asarray(shit))
+            assert int(cnt[qi]) == int(scnt)
+            np.testing.assert_allclose(
+                np.asarray(raw[qi])[np.asarray(hit[qi])],
+                np.asarray(sraw)[np.asarray(shit)], rtol=1e-5, atol=1e-5)
+
+
+def test_scan_topk_batch_query_permutation_invariant():
+    c, qs, _shared, per_q = _data(512, 24, 9, seed=2)
+    k = 6
+    ids, sims, valid = fused_scan_topk_batch(c, qs, k, per_q, Metric.L2,
+                                             block_q=8, block_n=128)
+    perm = np.random.default_rng(3).permutation(9)
+    ids_p, sims_p, valid_p = fused_scan_topk_batch(
+        c, qs[perm], k, per_q[perm], Metric.L2, block_q=8, block_n=128)
+    assert np.array_equal(np.asarray(ids_p), np.asarray(ids)[perm])
+    np.testing.assert_allclose(np.asarray(sims_p), np.asarray(sims)[perm],
+                               rtol=1e-6)
+    assert np.array_equal(np.asarray(valid_p), np.asarray(valid)[perm])
+
+
+# ---------------------------------------------------------------------------
+# IVF probe parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module", params=METRICS, ids=lambda m: m.value)
+def ivf_env(request):
+    metric = request.param
+    rng = np.random.default_rng(0)
+    modes = rng.standard_normal((16, 24)).astype(np.float32)
+    which = rng.integers(0, 16, size=3000)
+    x = modes[which] + 0.3 * rng.standard_normal((3000, 24)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    corpus = jnp.asarray(x)
+    idx = build_ivf(jax.random.key(0), corpus, nlist=24, metric=metric,
+                    iters=5)
+    qs = corpus[:6] + 0.01
+    mask = jnp.asarray(rng.random(3000) < 0.5)
+    return metric, corpus, idx, qs, mask
+
+
+@pytest.mark.parametrize("termination", ["counter", "bound"])
+def test_ivf_topk_batch_parity_probe_batch_1(ivf_env, termination):
+    metric, corpus, idx, qs, mask = ivf_env
+    cfg = ProbeConfig(max_probes=24, termination=termination)
+    ids, sims, valid, stats = ivf_topk_batch(idx, corpus, qs, 10, mask, cfg)
+    for qi in range(qs.shape[0]):
+        sids, ssims, svalid, sstats = ivf_topk(idx, corpus, qs[qi], 10,
+                                               mask, cfg)
+        assert np.array_equal(np.asarray(ids[qi]), np.asarray(sids))
+        np.testing.assert_allclose(np.asarray(sims[qi]), np.asarray(ssims),
+                                   rtol=1e-5, atol=1e-5)
+        assert int(stats["probes"][qi]) == int(sstats["probes"])
+        assert int(stats["distance_evals"][qi]) == \
+            int(sstats["distance_evals"])
+
+
+@pytest.mark.parametrize("probe_batch", [2, 4, 8])
+def test_ivf_topk_multi_cluster_rounds_only_improve(ivf_env, probe_batch):
+    """B clusters per round probe a superset prefix: kth key must not regress,
+    and the round count shrinks ~B-fold."""
+    metric, corpus, idx, qs, mask = ivf_env
+    cfg1 = ProbeConfig(max_probes=24)
+    cfgB = ProbeConfig(max_probes=24, probe_batch=probe_batch)
+    _, sims1, valid1, stats1 = ivf_topk_batch(idx, corpus, qs, 10, mask, cfg1)
+    _, simsB, validB, statsB = ivf_topk_batch(idx, corpus, qs, 10, mask, cfgB)
+    k1 = np.asarray(order_key(metric, sims1))
+    kB = np.asarray(order_key(metric, simsB))
+    kth1 = np.where(np.asarray(valid1)[:, -1], k1[:, -1], np.inf)
+    kthB = np.where(np.asarray(validB)[:, -1], kB[:, -1], np.inf)
+    assert (kthB <= kth1 + 1e-5).all()
+    # probes are counted per cluster; batched rounds may probe more clusters
+    # but never fewer than the sequential prefix
+    assert (np.asarray(statsB["probes"]) >= np.asarray(stats1["probes"])).all()
+
+
+def test_ivf_range_batch_parity(ivf_env):
+    metric, corpus, idx, qs, mask = ivf_env
+    flat = FlatIndex(metric, corpus)
+    _, raw0 = flat.range_mask(qs[0], 1e9 if metric.is_similarity() else -1e9)
+    keys0 = np.sort(np.asarray(order_key(metric, raw0)))
+    rk = (keys0[60] + keys0[61]) / 2.0
+    radius = -rk if metric.is_similarity() else rk
+    cfg = ProbeConfig(max_probes=24, capacity=512, termination="bound")
+    ids, sims, valid, count, stats = ivf_range_batch(idx, corpus, qs, radius,
+                                                     mask, cfg)
+    for qi in range(qs.shape[0]):
+        sids, ssims, svalid, scount, sstats = ivf_range(idx, corpus, qs[qi],
+                                                        radius, mask, cfg)
+        assert np.array_equal(np.asarray(ids[qi]), np.asarray(sids))
+        assert int(count[qi]) == int(scount)
+        assert int(stats["probes"][qi]) == int(sstats["probes"])
+
+
+def test_ivf_topk_batch_query_permutation_invariant(ivf_env):
+    metric, corpus, idx, qs, mask = ivf_env
+    cfg = ProbeConfig(max_probes=24, probe_batch=4)
+    ids, sims, valid, stats = ivf_topk_batch(idx, corpus, qs, 10, mask, cfg)
+    perm = np.random.default_rng(5).permutation(qs.shape[0])
+    ids_p, sims_p, valid_p, stats_p = ivf_topk_batch(idx, corpus, qs[perm],
+                                                     10, mask, cfg)
+    assert np.array_equal(np.asarray(ids_p), np.asarray(ids)[perm])
+    np.testing.assert_allclose(np.asarray(sims_p), np.asarray(sims)[perm],
+                               rtol=1e-6)
+    assert np.array_equal(np.asarray(stats_p["probes"]),
+                          np.asarray(stats["probes"])[perm])
+
+
+# ---------------------------------------------------------------------------
+# engine execute_batch
+# ---------------------------------------------------------------------------
+
+def test_execute_batch_matches_per_query(laion_catalog):
+    from repro.core import EngineOptions, compile_query
+    qv = np.asarray(laion_catalog.table("queries")["embedding"][:5])
+    price = np.asarray(laion_catalog.table("laion")["price"])
+    thr = float(np.quantile(price, 0.5))
+    sql = ("SELECT sample_id FROM products WHERE price < ${p} "
+           "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 10")
+    for engine in ("chase", "brute"):
+        q = compile_query(sql, laion_catalog,
+                          EngineOptions(engine=engine,
+                                        use_pallas=(engine == "brute")))
+        out = q.execute_batch(qv=qv, p=thr)
+        assert out["ids"].shape == (5, 10)
+        for i in range(5):
+            single = q(qv=qv[i], p=thr)
+            assert np.array_equal(np.asarray(out["ids"][i]),
+                                  np.asarray(single["ids"]))
+
+
+def test_execute_batch_binds_list_and_per_query_filters(laion_catalog):
+    """Per-query structured-filter constants in one batch (the serving shape:
+    same plan, different tenant/freshness thresholds per request)."""
+    from repro.core import EngineOptions, compile_query
+    qv = np.asarray(laion_catalog.table("queries")["embedding"][:4])
+    price = np.asarray(laion_catalog.table("laion")["price"])
+    thrs = [float(np.quantile(price, s)) for s in (0.3, 0.5, 0.7, 0.9)]
+    sql = ("SELECT sample_id FROM products WHERE price < ${p} "
+           "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 5")
+    q = compile_query(sql, laion_catalog, EngineOptions(engine="chase"))
+    out = q.execute_batch(binds_list=[{"qv": qv[i], "p": thrs[i]}
+                                      for i in range(4)])
+    for i in range(4):
+        single = q(qv=qv[i], p=thrs[i])
+        assert np.array_equal(np.asarray(out["ids"][i]),
+                              np.asarray(single["ids"]))
+        got = np.asarray(out["ids"][i])[np.asarray(out["valid"][i])]
+        assert (price[got] < thrs[i]).all()

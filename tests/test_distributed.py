@@ -1,11 +1,17 @@
 """Multi-device tests (subprocess with 8 fake CPU devices): distributed
-top-k merge, compressed-DP training, shard_map MoE parity, elastic reshard."""
+top-k merge, compressed-DP training, shard_map MoE parity, elastic reshard.
+
+Marked ``slow``: each test boots a fresh interpreter with a fake 8-device
+topology.  Deselected from the default suite (pytest.ini); run with
+``pytest -m slow`` or ``pytest -m ""``."""
 import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -2,7 +2,11 @@
 import numpy as np
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.expr import distance_values, in_range, order_key
 from repro.core.schema import Metric
