@@ -39,6 +39,31 @@ def per_query_amortized(stats: dict, batch_size: int) -> dict:
     return out
 
 
+def per_left_amortized(stats: dict, n_left: int) -> dict:
+    """Per-left-row amortization for the join families (Q3-Q6).
+
+    Join builders report per-left (L,) counter arrays — (Q, L) under
+    ``execute_batch``, where the per-left figure averages over bind sets
+    too — so BENCH_join.json rows can show what one amortized MXU pipeline
+    costs per left row instead of burying the win in wall-clock.  Scalars
+    (pre-batching totals summed over ``n_left`` rows) pass through as
+    totals."""
+    out = {}
+    for key in ("distance_evals", "probes"):
+        if key not in stats:
+            continue
+        v = np.asarray(stats[key])
+        denom = n_left if v.ndim == 0 else v.size
+        out[f"{key}_total"] = int(v.sum())
+        out[f"{key}_per_left"] = round(float(v.sum()) / max(denom, 1), 1)
+    return out
+
+
+JOIN_SQL = ("SELECT queries.id AS qid, images.sample_id AS tid "
+            "FROM queries JOIN images "
+            "ON DISTANCE(queries.embedding, images.embedding) <= ${r}")
+
+
 def run(env: BenchEnv, rows: list, n_rows: int = 2000):
     small = make_laion_catalog(n_rows=n_rows, n_queries=2, dim=env.cfg.dim,
                                n_modes=16, seed=env.cfg.seed)
@@ -47,6 +72,7 @@ def run(env: BenchEnv, rows: list, n_rows: int = 2000):
     idx = build_ivf(jax.random.key(0), small.table("laion")["vec"],
                     nlist=32, metric=env.cfg.metric, iters=3)
     small.register_index("products", "embedding", idx)
+    small.register_index("images", "embedding", idx)   # t5 join row (Q3)
     qv = np.asarray(small.table("queries")["embedding"][0])
     thr = float(np.quantile(np.asarray(small.table("laion")["price"]), 0.5))
 
@@ -76,3 +102,16 @@ def run(env: BenchEnv, rows: list, n_rows: int = 2000):
     rows.append(Row("t5_chase_batched8", 0.0,
                     executable_invocations=1,
                     **per_query_amortized(outb["stats"], 8)))
+
+    # join family: the left rows ARE the batch — one executable invocation
+    # runs every per-left probe; counters amortize per left row
+    nleft = small.table("queries").num_rows
+    radius = float(np.quantile(
+        np.asarray(small.table("queries")["embedding"])
+        @ np.asarray(small.table("laion")["vec"]).T, 0.98))
+    qj = compile_query(JOIN_SQL, small,
+                       EngineOptions(engine="chase", probe=env.cfg.probe))
+    outj = qj(r=radius)
+    rows.append(Row("t5_chase_join_batched", 0.0,
+                    executable_invocations=1, left_rows=nleft,
+                    **per_left_amortized(outj["stats"], nleft)))

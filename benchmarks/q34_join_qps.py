@@ -1,0 +1,155 @@
+"""Q3/Q4 — batch-native join throughput (the batched-join acceptance sweep).
+
+The left side of a vector join IS a query batch (ISSUE 2 / Sanca et al.):
+this bench sweeps left-table size L ∈ {8, 64, 256} and compares the two
+physical lowerings of the join families on identical plans:
+
+* ``perleft`` — the legacy inner loop: one single-query scan/probe per left
+  row (``join_lowering='perleft'``).  On the flat path that is one
+  matvec-shaped Pallas kernel pass per left row.
+* ``batch``   — the batch-native lowering: all L left embeddings gathered
+  into one (L, d) query batch through the query-tiled kernels
+  (``fused_scan_topk_batch`` / ``fused_range_topk_batch``) or the
+  multi-cluster IVF probes (``ivf_topk_batch`` / ``ivf_range_batch``).
+
+Both lowerings are ONE compiled executable; the measured difference is
+purely the operator shape (L tiny pipelines vs one amortized MXU pipeline).
+Reports join QPS (left rows completed per second) and per-left amortized
+distance-eval/probe counters, and writes ``BENCH_join.json`` (consumed by
+the acceptance gate: flat-path Q3/Q4 batch QPS at L=64 must be ≥ 3× the
+per-left loop in interpret mode).
+
+Standalone:  PYTHONPATH=src python -m benchmarks.q34_join_qps [--full]
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import BenchEnv, Row, timeit
+from .counters import per_left_amortized
+
+LEFT_SIZES = (8, 64, 256)
+JOIN_ROWS = 2000   # right-table size: interpret-mode scans are CPU-emulated,
+                   # keep the sweep CI-scale (mirrors q7's FLAT_ROWS)
+GATE_L = 64        # acceptance: flat speedup at this L must be >= 3x
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_join.json")
+
+SQL_Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+
+SQL_Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+) AS ranked WHERE ranked.rank <= {K}
+"""
+
+
+def _catalog(env: BenchEnv, nleft: int):
+    """A JOIN_ROWS-row catalog whose left (queries/users) table has L rows."""
+    import dataclasses
+
+    import jax
+
+    from repro.data import make_laion_catalog
+    from repro.index import build_ivf
+
+    cat = make_laion_catalog(n_rows=min(env.cfg.n_rows, JOIN_ROWS),
+                             n_queries=nleft, dim=env.cfg.dim, n_modes=16,
+                             seed=env.cfg.seed, metric=env.cfg.metric)
+    idx = build_ivf(jax.random.key(env.cfg.seed), cat.table("laion")["vec"],
+                    nlist=32, metric=env.cfg.metric, iters=3)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    # radius tuned to ~40 in-range rows per left row
+    radius = float(np.median(np.partition(sims, -40, axis=1)[:, -40]))
+    probe = dataclasses.replace(env.cfg.probe, probe_batch=4)
+    return cat, radius, probe
+
+
+def _workloads(radius, probe, k: int):
+    """(sql, binds, opts-maker) per workload; flat rides the Pallas kernels
+    in BOTH lowerings (perleft = one single-query kernel pass per left row),
+    ivf rides the probe layer (perleft = one while_loop probe per left row)."""
+    sql4 = SQL_Q4.replace("{K}", str(k))
+    return {
+        "q3_flat": (SQL_Q3, {"r": radius},
+                    lambda low: EngineOptions(engine="brute", use_pallas=True,
+                                              max_pairs=128,
+                                              join_lowering=low)),
+        "q4_flat": (sql4, {},
+                    lambda low: EngineOptions(engine="brute", use_pallas=True,
+                                              join_lowering=low)),
+        "q3_ivf": (SQL_Q3, {"r": radius},
+                   lambda low: EngineOptions(engine="chase", probe=probe,
+                                             max_pairs=128,
+                                             join_lowering=low)),
+        "q4_ivf": (sql4, {},
+                   lambda low: EngineOptions(engine="chase", probe=probe,
+                                             join_lowering=low)),
+    }
+
+
+def run(env: BenchEnv, rows: list, left_sizes=LEFT_SIZES) -> dict:
+    K = min(env.cfg.k_top, 10)
+    report: dict = {"right_rows": JOIN_ROWS, "dim": env.cfg.dim, "k": K,
+                    "gate_left_size": GATE_L, "workloads": {}}
+    for nleft in left_sizes:
+        cat, radius, probe = _catalog(env, nleft)
+        for name, (sql, binds, mk_opts) in _workloads(radius, probe,
+                                                      K).items():
+            entry = {"left_rows": nleft}
+            for low in ("perleft", "batch"):
+                q = compile_query(sql, cat, mk_opts(low))
+                ms = timeit(lambda: q(**binds), repeats=3)
+                out = q(**binds)
+                entry[f"ms_{low}"] = round(ms, 3)
+                entry[f"qps_{low}"] = round(1e3 * nleft / ms, 1)
+                if low == "batch":
+                    entry.update(per_left_amortized(out["stats"], nleft))
+            entry["speedup"] = round(entry["qps_batch"]
+                                     / entry["qps_perleft"], 2)
+            report["workloads"].setdefault(name, []).append(entry)
+            rows.append(Row(f"q34_{name}_L{nleft}", entry["ms_batch"],
+                            **{k: v for k, v in entry.items()
+                               if k != "left_rows"}))
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    from .common import get_env
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale catalog (default: smoke)")
+    args = ap.parse_args()
+    env = get_env(smoke=not args.full)
+    rows: list[Row] = []
+    report = run(env, rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    for name in ("q3_flat", "q4_flat"):
+        gate = next(e for e in report["workloads"][name]
+                    if e["left_rows"] == GATE_L)
+        print(f"\n{name} batch-vs-perleft speedup at L={GATE_L}: "
+              f"{gate['speedup']}x", file=sys.stderr)

@@ -51,4 +51,5 @@ def run(env: BenchEnv, rows: list):
             recs.append(len(got & gt[qi]) / max(len(gt[qi]), 1))
         rows.append(Row(f"q4_{engine}", ms,
                         recall=round(float(np.mean(recs)), 4),
-                        evals=int(out["stats"]["distance_evals"])))
+                        evals=int(np.asarray(
+                            out["stats"]["distance_evals"]).sum())))

@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI smoke: the tier-1 suite (fast tests only — `slow`-marked subprocess
 # integration tests are deselected by pytest.ini) plus the quick benchmark
-# sweep (q1 latency/recall, q7 batched QPS, t5 counters) on the tiny catalog.
+# sweep (q1 latency/recall, q7 batched QPS, q34 batch-native joins, t5
+# counters) on the tiny catalog — q34 exercises the join families end-to-end
+# on both the batch-native and the per-left-loop lowering.
 #
 #   bash scripts/smoke.sh            # full smoke
 #   SMOKE_SLOW=1 bash scripts/smoke.sh   # also run the slow marker set

@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from .expr import Bindings, Param
-from .physical import BATCH_BUILDERS, BUILDERS, EngineOptions
+from .physical import (BATCH_BUILDERS, BUILDERS, JOIN_LOWERING_FAMILIES,
+                       EngineOptions)
 from .plan import PlanNode
 from .rewriter import rewrite
 from .schema import Catalog
@@ -33,6 +34,7 @@ class CompiledQuery:
     _jitted: Any
     _arrays: Any
     _batch_jitted: Any = None
+    batch_native: bool = False
 
     def __call__(self, **binds):
         return self._jitted(self._arrays, dict(binds))
@@ -42,10 +44,14 @@ class CompiledQuery:
 
         Accepts either ``binds_list`` (a list of per-query bind dicts, which
         get stacked) or keyword binds already stacked with a leading Q axis
-        (scalars broadcast).  Query classes with a native batched lowering
-        (VKNN-SF, DR-SF) run the query-tiled kernels / multi-cluster IVF
-        probes; other classes vmap their single-query pipeline.  Every output
-        gains a leading Q axis; stats report per-query counters."""
+        (scalars broadcast).  Every hybrid class has a native batched
+        lowering: VKNN-SF / DR-SF run the query-tiled kernels and
+        multi-cluster IVF probes directly, and the join families (Q3-Q6)
+        flatten (bind sets x left rows) into ONE kernel-level query batch.
+        The vmap-of-scalar fallback survives only under
+        ``join_lowering='perleft'`` (the benchmark baseline).  Every output
+        gains a leading Q axis; stats report per-query counters (per
+        (bind set, left row) for joins)."""
         binds = self._stack_binds(binds_list, stacked)
         return self._batch_jitted(self._arrays, binds)
 
@@ -85,8 +91,18 @@ class CompiledQuery:
         return self._jitted.lower(self._arrays, dict(binds))
 
     def explain(self) -> str:
+        qc = self.analysis.query_class
+        if not self.batch_native:
+            batch = "vmap-of-scalar fallback (perleft join lowering)"
+        elif qc in (QueryClass.DIST_JOIN, QueryClass.KNN_JOIN,
+                    QueryClass.CATEGORY_JOIN):
+            batch = ("native (bind sets x left rows flattened into one "
+                     "kernel-level query batch)")
+        else:
+            batch = "native (query-tiled kernels / multi-cluster probes)"
         out = [f"-- engine: {self.options.engine}",
                f"-- class:  {self.analysis.query_class.value}",
+               f"-- batch:  {batch}",
                "-- logical plan:", self.logical_plan.pretty(),
                "-- rewritten plan:", self.rewritten_plan.pretty()]
         return "\n".join(out)
@@ -138,10 +154,13 @@ def compile_query(sql: str, catalog: Catalog,
     arrays = _gather_arrays(a, catalog)
     jitted = jax.jit(fn)
     batch_builder = BATCH_BUILDERS.get(a.query_class)
-    if batch_builder is not None:
+    batch_native = batch_builder is not None and not (
+        options.join_lowering == "perleft"
+        and a.query_class in JOIN_LOWERING_FAMILIES)
+    if batch_native:
         bfn = batch_builder(a, catalog, options, Bindings(static_binds))
     else:
         def bfn(arrs, binds, _fn=fn):
             return jax.vmap(lambda b: _fn(arrs, b))(binds)
     return CompiledQuery(sql, a, plan, rewritten, options, jitted, arrays,
-                         jax.jit(bfn))
+                         jax.jit(bfn), batch_native)

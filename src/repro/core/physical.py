@@ -32,7 +32,8 @@ import jax.numpy as jnp
 
 from ..index.flat import FlatIndex, masked_topk
 from ..index.ivf import (IVFIndex, ProbeConfig, ivf_range, ivf_range_batch,
-                         ivf_range_category, ivf_topk, ivf_topk_batch)
+                         ivf_range_category, ivf_range_category_batch,
+                         ivf_topk, ivf_topk_batch)
 from .expr import (Bindings, Column, Const, Cmp, BoolOp, Arith, Distance,
                    Expr, Param, distance_values, evaluate, in_range, order_key)
 from .schema import Catalog, ColumnKind, Metric, Table
@@ -49,6 +50,11 @@ class EngineOptions:
     # None -> kernels.default_interpret(): interpret on CPU, compiled Mosaic
     # kernels on TPU/GPU, without callers threading the flag.
     interpret_pallas: bool | None = None
+    # Q3-Q6 physical lowering: 'batch' treats the left rows as ONE query
+    # batch on the batched kernels/probes (DESIGN.md §7); 'perleft' keeps the
+    # legacy per-left-row scan loop (and forces the vmap-of-scalar
+    # execute_batch fallback) — the measured baseline in benchmarks/q34.
+    join_lowering: str = "batch"   # batch | perleft
 
 
 # ---------------------------------------------------------------------------
@@ -78,15 +84,8 @@ def _row_mask_fn(pred: Expr | None, table: Table):
     return fn
 
 
-def _join_mask_fn(pred: Expr | None, ltab: Table, rtab: Table,
-                  lalias: str | None, ralias: str | None):
-    """Residual join predicate -> (left_row_idx, binds) -> (Nright,) bool.
-
-    Left columns resolve to scalars at ``left_row_idx`` (vmap lane), right
-    columns to full arrays — the per-left-row filter of the KnnSubquery."""
-    if pred is None:
-        return None
-
+def _owner_fn(ltab: Table, rtab: Table, lalias: str | None,
+              ralias: str | None):
     def owner(col: Column) -> str:
         if col.table in (lalias, ltab.name):
             return "l"
@@ -98,38 +97,78 @@ def _join_mask_fn(pred: Expr | None, ltab: Table, rtab: Table,
             raise ValueError(f"ambiguous column {col.name}")
         return "l" if inl else "r"
 
-    def fn(lidx, binds: Bindings) -> jnp.ndarray:
-        def ev(e: Expr):
-            if isinstance(e, Column):
-                if owner(e) == "l":
-                    return ltab[e.name][lidx]
-                return rtab[e.name]
-            if isinstance(e, Const):
-                return jnp.asarray(e.value)
-            if isinstance(e, Param):
-                return jnp.asarray(binds[e.name])
-            if isinstance(e, Cmp):
-                lo, hi = ev(e.lhs), ev(e.rhs)
-                return {"<": lambda: lo < hi, "<=": lambda: lo <= hi,
-                        ">": lambda: lo > hi, ">=": lambda: lo >= hi,
-                        "=": lambda: lo == hi, "<>": lambda: lo != hi}[e.op]()
-            if isinstance(e, BoolOp):
-                if e.op == "not":
-                    return ~ev(e.operands[0])
-                vals = [ev(o) for o in e.operands]
-                out = vals[0]
-                for v in vals[1:]:
-                    out = (out & v) if e.op == "and" else (out | v)
-                return out
-            if isinstance(e, Arith):
-                lo, hi = ev(e.lhs), ev(e.rhs)
-                return {"+": lambda: lo + hi, "-": lambda: lo - hi,
-                        "*": lambda: lo * hi, "/": lambda: lo / hi}[e.op]()
-            raise TypeError(f"unsupported join-predicate node {type(e)}")
+    return owner
 
-        m = ev(pred)
-        n = rtab.num_rows
-        return jnp.broadcast_to(m, (n,))
+
+def _eval_join_pred(pred: Expr, owner, ev_left, ev_right,
+                    binds: Bindings) -> jnp.ndarray:
+    """One interpreter for both join-mask lowerings; ``ev_left``/``ev_right``
+    decide the column shape (scalar-at-lidx vs (L, 1) / (N,) vs (1, N))."""
+    def ev(e: Expr):
+        if isinstance(e, Column):
+            return ev_left(e.name) if owner(e) == "l" else ev_right(e.name)
+        if isinstance(e, Const):
+            return jnp.asarray(e.value)
+        if isinstance(e, Param):
+            return jnp.asarray(binds[e.name])
+        if isinstance(e, Cmp):
+            lo, hi = ev(e.lhs), ev(e.rhs)
+            return {"<": lambda: lo < hi, "<=": lambda: lo <= hi,
+                    ">": lambda: lo > hi, ">=": lambda: lo >= hi,
+                    "=": lambda: lo == hi, "<>": lambda: lo != hi}[e.op]()
+        if isinstance(e, BoolOp):
+            if e.op == "not":
+                return ~ev(e.operands[0])
+            vals = [ev(o) for o in e.operands]
+            out = vals[0]
+            for v in vals[1:]:
+                out = (out & v) if e.op == "and" else (out | v)
+            return out
+        if isinstance(e, Arith):
+            lo, hi = ev(e.lhs), ev(e.rhs)
+            return {"+": lambda: lo + hi, "-": lambda: lo - hi,
+                    "*": lambda: lo * hi, "/": lambda: lo / hi}[e.op]()
+        raise TypeError(f"unsupported join-predicate node {type(e)}")
+
+    return ev(pred)
+
+
+def _join_mask_fn(pred: Expr | None, ltab: Table, rtab: Table,
+                  lalias: str | None, ralias: str | None):
+    """Residual join predicate -> (left_row_idx, binds) -> (Nright,) bool.
+
+    Left columns resolve to scalars at ``left_row_idx`` (vmap lane), right
+    columns to full arrays — the per-left-row filter of the KnnSubquery."""
+    if pred is None:
+        return None
+    owner = _owner_fn(ltab, rtab, lalias, ralias)
+
+    def fn(lidx, binds: Bindings) -> jnp.ndarray:
+        m = _eval_join_pred(pred, owner,
+                            lambda name: ltab[name][lidx],
+                            lambda name: rtab[name], binds)
+        return jnp.broadcast_to(m, (rtab.num_rows,))
+
+    return fn
+
+
+def _join_mask_batch_fn(pred: Expr | None, ltab: Table, rtab: Table,
+                        lalias: str | None, ralias: str | None):
+    """Residual join predicate -> (binds) -> (L, Nright) bool, ALL left rows.
+
+    The batch-native twin of :func:`_join_mask_fn`: left columns evaluate as
+    (L, 1), right columns as (1, N), and broadcasting produces every
+    (left row, right row) pair's mask in one columnar pass — the (Q, N) mask
+    layout the batched kernels/probes consume, with the left rows playing Q."""
+    if pred is None:
+        return None
+    owner = _owner_fn(ltab, rtab, lalias, ralias)
+
+    def fn(binds: Bindings) -> jnp.ndarray:
+        m = _eval_join_pred(pred, owner,
+                            lambda name: ltab[name][:, None],
+                            lambda name: rtab[name][None, :], binds)
+        return jnp.broadcast_to(m, (ltab.num_rows, rtab.num_rows))
 
     return fn
 
@@ -155,6 +194,68 @@ def _flat_topk(opts: EngineOptions, flat: FlatIndex, q, k, row_mask):
         return fused_scan_topk(flat.vectors, q, k, row_mask, flat.metric,
                                interpret=opts.interpret_pallas)
     return flat.topk(q, k, row_mask)
+
+
+def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
+                           qs, radius, row_mask, capacity: int):
+    """Flat range scan over a (M, d) query batch, compacted to ``capacity``.
+
+    Dispatch: the query-tiled Pallas kernel (``use_pallas``) or a vmapped
+    exact scan.  ``radius`` is a scalar or (M,); ``row_mask`` None or (M, N).
+    Results are ordered best-first (ascending order key).  Returns
+    (ids (M, P), sims, valid, count (M,), per-row stats) with
+    P = min(capacity, N)."""
+    m, n = qs.shape[0], corpus.shape[0]
+    cap = min(int(capacity), n)
+    radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
+    if opts.use_pallas:
+        from ..kernels.ops import fused_range_topk_batch
+        ids, sims, valid, count = fused_range_topk_batch(
+            corpus, qs, radius, row_mask, metric, cap,
+            interpret=opts.interpret_pallas)
+    else:
+        flat = FlatIndex(metric, corpus)
+        if row_mask is None:
+            hit, raw = jax.vmap(lambda q, r: flat.range_mask(q, r, None))(
+                qs, radius)
+        else:
+            hit, raw = jax.vmap(flat.range_mask)(qs, radius, row_mask)
+        keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
+        neg, sel = jax.lax.top_k(-keys, cap)                   # row-wise
+        valid = jnp.isfinite(-neg)
+        ids = jnp.where(valid, sel.astype(jnp.int32), -1)
+        sims = jnp.where(valid, jnp.take_along_axis(raw, sel, axis=1), 0.0)
+        count = jnp.sum(hit, axis=1)
+    stats = {"probes": jnp.zeros((m,), jnp.int32),
+             "distance_evals": jnp.full((m,), n, jnp.int32)}
+    return ids, sims, valid, count, stats
+
+
+def _stacked_batch_size(binds: dict) -> int:
+    """Leading Q axis of stacked binds (static at trace time)."""
+    dims = [v.shape[0] for v in binds.values()
+            if hasattr(v, "ndim") and v.ndim >= 1]
+    if not dims:
+        raise ValueError("batched join execution needs at least one stacked "
+                         "bind to carry the batch size; use binds_list")
+    return dims[0]
+
+
+def _flatten_left_batch(lvec, binds: dict, mask_b):
+    """(Q bind sets x L left rows) -> ONE kernel query batch.
+
+    Replicates the (L, d) left block per bind set and evaluates the per-bind
+    join masks into the flattened (Q·L, N) layout (q-major, matching
+    ``reshape`` on the outputs).  On the flat path the replication recomputes
+    (L, N) distances Q-fold — bind sets only vary radius/masks, applied
+    post-matmul — acceptable for parameter batches (Q small); a
+    share-the-matmul flat fast path is future work."""
+    nleft, d = lvec.shape
+    qn = _stacked_batch_size(binds)
+    qs = jnp.broadcast_to(lvec[None], (qn, nleft, d)).reshape(-1, d)
+    rm = (jax.vmap(mask_b)(binds).reshape(qn * nleft, -1)
+          if mask_b else None)
+    return qn, nleft, qs, rm
 
 
 # ---------------------------------------------------------------------------
@@ -276,9 +377,111 @@ def build_dr_sf(a: Analysis, catalog: Catalog, opts: EngineOptions,
 # ---------------------------------------------------------------------------
 # Q3 — distance join
 # ---------------------------------------------------------------------------
+#
+# Batch-native lowering (the default): the left side of a vector join IS a
+# query batch, so the (masked) left embeddings are gathered into one (L, d)
+# batch and pushed through ivf_range_batch / the query-tiled range kernel in
+# a single shot — per-left-row join predicates become the (L, N) mask the
+# batched operators already consume, and stats come back as per-left (L,)
+# arrays (``benchmarks.counters.per_left_amortized`` reports them).  The
+# legacy per-left-row loop survives behind join_lowering='perleft' as the
+# measured baseline.  Ordering policy: flat plans emit best-first per left
+# row; IVF plans emit probe-discovery order (identical to the per-left loop
+# with probe_batch=1).
+
+
+def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
+    """(arrays, qs (M,d), radius, rm (M,N)|None) -> Q3 result batch."""
+    metric = _metric_of(catalog, a.right_table, a.right_vector)
+    index = catalog.index_for(a.right_table, a.right_vector)
+    cfg = dataclasses.replace(opts.probe, capacity=opts.max_pairs)
+
+    def core(arrays, qs, radius, rm):
+        corpus = arrays["corpus"]
+        m = qs.shape[0]
+        radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
+        if opts.engine in ("chase", "vbase") and index is not None:
+            idx = arrays["index"]
+            if opts.engine == "chase":
+                ids, sims, valid, count, stats = ivf_range_batch(
+                    idx, corpus, qs, radius, rm, cfg)
+            else:
+                ids, _s, valid, count, stats = ivf_range_batch(
+                    idx, corpus, qs, radius, None, cfg)
+                safe = jnp.maximum(ids, 0)
+                raw = distance_values(metric, corpus[safe],
+                                      qs[:, None, :])          # REDUNDANT
+                valid = valid & in_range(metric, raw, radius[:, None])
+                if rm is not None:
+                    valid = valid & jnp.take_along_axis(rm, safe, axis=1)
+                sims = jnp.where(valid, raw, 0.0)
+                count = jnp.sum(valid, axis=1)
+                # legacy-parity quirk: the per-left Q3 vbase plan never
+                # counted its redundant re-check evals; keep counters
+                # identical across lowerings
+            return ids, sims, valid, count, stats
+        return _flat_range_topk_batch(opts, metric, corpus, qs, radius, rm,
+                                      opts.max_pairs)
+
+    return core
+
 
 def build_dist_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     binds_static: Bindings) -> Callable:
+    if opts.join_lowering == "perleft":
+        return _build_dist_join_perleft(a, catalog, opts, binds_static)
+    ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
+    mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
+                                 a.right_alias)
+    core = _dist_join_core(a, catalog, opts)
+    radius_expr = a.radius
+
+    def fn(arrays, binds):
+        lvec = arrays["left"]                                  # (L, d)
+        nleft = lvec.shape[0]
+        radius = evaluate(radius_expr, rtab, binds)
+        rm = mask_b(binds) if mask_b else None                 # (L, N)
+        ids, sims, valid, counts, stats = core(arrays, lvec, radius, rm)
+        return {"qid": jnp.broadcast_to(
+                    jnp.arange(nleft, dtype=jnp.int32)[:, None], ids.shape),
+                "tid": ids, "sim": sims, "valid": valid, "count": counts,
+                "stats": stats}
+
+    return fn
+
+
+def build_dist_join_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
+                          binds_static: Bindings) -> Callable:
+    """Q bind sets x L left rows, flattened into ONE kernel query batch."""
+    ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
+    mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
+                                 a.right_alias)
+    core = _dist_join_core(a, catalog, opts)
+    radius_expr = a.radius
+
+    def fn(arrays, binds):
+        qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
+                                                mask_b)
+        radius = jnp.broadcast_to(
+            jax.vmap(lambda b: evaluate(radius_expr, rtab, b))(binds), (qn,))
+        ids, sims, valid, counts, stats = core(
+            arrays, qs, jnp.repeat(radius, nleft), rm)
+        pairs = ids.shape[1]
+        shape = (qn, nleft, pairs)
+        return {"qid": jnp.broadcast_to(
+                    jnp.arange(nleft, dtype=jnp.int32)[None, :, None], shape),
+                "tid": ids.reshape(shape), "sim": sims.reshape(shape),
+                "valid": valid.reshape(shape),
+                "count": counts.reshape(qn, nleft),
+                "stats": jax.tree.map(lambda v: v.reshape(qn, nleft), stats)}
+
+    return fn
+
+
+def _build_dist_join_perleft(a: Analysis, catalog: Catalog,
+                             opts: EngineOptions,
+                             binds_static: Bindings) -> Callable:
+    """Legacy lowering: one scan/probe per left row (vmapped matvecs)."""
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     pair_mask = _join_mask_fn(a.join_predicate, ltab, rtab, a.left_alias,
@@ -312,8 +515,16 @@ def build_dist_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     sims = jnp.where(valid, raw, 0.0)
                     count = jnp.sum(valid)
             else:
-                flat = FlatIndex(metric, corpus)
-                hit, raw = flat.range_mask(q, radius, rm)
+                if opts.use_pallas:
+                    # single-query kernel per left row: the matvec-shaped
+                    # baseline the query-tiled lowering replaces
+                    from ..kernels.ops import fused_range_scan
+                    hit, raw, _cnt = fused_range_scan(
+                        corpus, q, radius, rm, metric,
+                        interpret=opts.interpret_pallas)
+                else:
+                    flat = FlatIndex(metric, corpus)
+                    hit, raw = flat.range_mask(q, radius, rm)
                 keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
                 neg, sel = jax.lax.top_k(-keys, opts.max_pairs)
                 valid = jnp.isfinite(-neg)
@@ -329,7 +540,7 @@ def build_dist_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
         return {"qid": jnp.broadcast_to(
                     jnp.arange(nleft, dtype=jnp.int32)[:, None], ids.shape),
                 "tid": ids, "sim": sims, "valid": valid, "count": counts,
-                "stats": jax.tree.map(jnp.sum, stats)}
+                "stats": stats}
 
     return fn
 
@@ -338,8 +549,113 @@ def build_dist_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
 # Q4 — entity-centric KNN join
 # ---------------------------------------------------------------------------
 
+def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
+                   k: int):
+    """(arrays, qs (M,d), rm (M,N)|None) -> (ids, sims, valid, stats)."""
+    metric = _metric_of(catalog, a.right_table, a.right_vector)
+    index = catalog.index_for(a.right_table, a.right_vector)
+    cfg = opts.probe
+
+    def core(arrays, qs, rm):
+        corpus = arrays["corpus"]
+        m, n = qs.shape[0], corpus.shape[0]
+        if opts.engine == "chase" and index is not None:
+            # R2: ANN top-k, all left rows in one probe batch — the 7500x
+            # path with the matvec loop batched away
+            ids, sims, valid, stats = ivf_topk_batch(
+                arrays["index"], corpus, qs, k, rm, cfg)
+        elif opts.engine == "brute_sort":
+            # Fig. 5a plan: window sorts the WHOLE partition (|B| log |B|)
+            # per left row — the full sort is the measured inefficiency
+            raw = distance_values(metric, corpus[None], qs[:, None, :])
+            keys = order_key(metric, raw)                     # (M, N)
+            if rm is not None:
+                keys = jnp.where(rm, keys, jnp.inf)
+            perm = jnp.argsort(keys, axis=1)       # full sort, on purpose
+            sel = perm[:, :k]
+            skeys = jnp.take_along_axis(keys, sel, axis=1)
+            valid = jnp.isfinite(skeys)
+            ids = jnp.where(valid, sel.astype(jnp.int32), -1)
+            sims = jnp.where(valid,
+                             -skeys if metric.is_similarity() else skeys,
+                             0.0)
+            stats = {"probes": jnp.zeros((m,), jnp.int32),
+                     "distance_evals": jnp.full((m,), n, jnp.int32)}
+        else:  # brute (compiled top-k; LingoDB-V-like)
+            if opts.use_pallas:
+                from ..kernels.ops import fused_scan_topk_batch
+                ids, sims, valid = fused_scan_topk_batch(
+                    corpus, qs, k, rm, metric,
+                    interpret=opts.interpret_pallas)
+            else:
+                flat = FlatIndex(metric, corpus)
+                if rm is None:
+                    ids, sims, valid = jax.vmap(
+                        lambda q: flat.topk(q, k, None))(qs)
+                else:
+                    ids, sims, valid = jax.vmap(
+                        lambda q, r: flat.topk(q, k, r))(qs, rm)
+            stats = {"probes": jnp.zeros((m,), jnp.int32),
+                     "distance_evals": jnp.full((m,), n, jnp.int32)}
+        return ids, sims, valid, stats
+
+    return core
+
+
 def build_knn_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                    binds_static: Bindings) -> Callable:
+    if opts.join_lowering == "perleft":
+        return _build_knn_join_perleft(a, catalog, opts, binds_static)
+    ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
+    k = _static_int(a.k, binds_static, "K")
+    mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
+                                 a.right_alias)
+    core = _knn_join_core(a, catalog, opts, k)
+
+    def fn(arrays, binds):
+        lvec = arrays["left"]                                  # (L, d)
+        nleft = lvec.shape[0]
+        rm = mask_b(binds) if mask_b else None                 # (L, N)
+        ids, sims, valid, stats = core(arrays, lvec, rm)
+        ranks = jnp.broadcast_to(jnp.arange(1, k + 1, dtype=jnp.int32)[None],
+                                 ids.shape)
+        return {"qid": jnp.broadcast_to(
+                    jnp.arange(nleft, dtype=jnp.int32)[:, None], ids.shape),
+                "tid": ids, "sim": sims, "valid": valid, "rank": ranks,
+                "stats": stats}
+
+    return fn
+
+
+def build_knn_join_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
+                         binds_static: Bindings) -> Callable:
+    """Q bind sets x L left rows, flattened into ONE kernel query batch."""
+    ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
+    k = _static_int(a.k, binds_static, "K")
+    mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
+                                 a.right_alias)
+    core = _knn_join_core(a, catalog, opts, k)
+
+    def fn(arrays, binds):
+        qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
+                                                mask_b)
+        ids, sims, valid, stats = core(arrays, qs, rm)
+        shape = (qn, nleft, k)
+        return {"qid": jnp.broadcast_to(
+                    jnp.arange(nleft, dtype=jnp.int32)[None, :, None], shape),
+                "tid": ids.reshape(shape), "sim": sims.reshape(shape),
+                "valid": valid.reshape(shape),
+                "rank": jnp.broadcast_to(
+                    jnp.arange(1, k + 1, dtype=jnp.int32)[None, None], shape),
+                "stats": jax.tree.map(lambda v: v.reshape(qn, nleft), stats)}
+
+    return fn
+
+
+def _build_knn_join_perleft(a: Analysis, catalog: Catalog,
+                            opts: EngineOptions,
+                            binds_static: Bindings) -> Callable:
+    """Legacy lowering: one scan/probe per left row (vmapped matvecs)."""
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     k = _static_int(a.k, binds_static, "K")
@@ -390,7 +706,7 @@ def build_knn_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
         return {"qid": jnp.broadcast_to(
                     jnp.arange(nleft, dtype=jnp.int32)[:, None], ids.shape),
                 "tid": ids, "sim": sims, "valid": valid, "rank": ranks,
-                "stats": jax.tree.map(jnp.sum, stats)}
+                "stats": stats}
 
     return fn
 
@@ -409,6 +725,61 @@ def _rank_per_category(metric: Metric, ids, keys, valid, cats, C: int, K: int):
     ck, cids, cvalid = jax.vmap(per_cat)(jnp.arange(C, dtype=jnp.int32))
     sims = jnp.where(cvalid, -ck if metric.is_similarity() else ck, 0.0)
     return cids, sims, cvalid
+
+
+def _rank_per_category_batch(metric: Metric, ids, keys, valid, cats,
+                             C: int, K: int):
+    """Vectorized window rank: (M, P) probe buffers -> (M, C, K) results.
+
+    One (M, C, P) masked top-k over the whole batch — the category ranking
+    runs for every left row / bind set at once instead of per query."""
+    return jax.vmap(lambda i, k2, v, c: _rank_per_category(
+        metric, i, k2, v, c, C, K))(ids, keys, valid, cats)
+
+
+def _category_core(opts: EngineOptions, metric: Metric, index,
+                   C: int, k: int, vbase_extra_evals: bool):
+    """(arrays, qs (M,d), radius, rm (M,N)|None) -> (M, C, K) ranked batch.
+
+    Shared by the Q5 bind-batch lowering and the Q6 left-row batch: probe a
+    (M, d) query batch (Algorithm 2's record table batched when updateState
+    applies), then run the window rank for all M queries at once."""
+    cfg = dataclasses.replace(opts.probe, num_categories=C, k_per_category=k)
+    use_update_state = opts.engine == "chase"
+
+    def core(arrays, qs, radius, rm):
+        corpus = arrays["corpus"]
+        cats = arrays["categories"]
+        m = qs.shape[0]
+        radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
+        if index is not None and opts.engine in ("chase", "vbase",
+                                                 "chase_no_updatestate"):
+            idx = arrays["index"]
+            if use_update_state:
+                ids, sims, valid, count, stats = ivf_range_category_batch(
+                    idx, corpus, cats, qs, radius, rm, cfg)
+            else:
+                ids, sims, valid, count, stats = ivf_range_batch(
+                    idx, corpus, qs, radius, rm, cfg)
+            if opts.engine == "vbase":
+                safe = jnp.maximum(ids, 0)
+                raw = distance_values(metric, corpus[safe],
+                                      qs[:, None, :])          # REDUNDANT
+                sims = jnp.where(valid, raw, 0.0)
+                if vbase_extra_evals:
+                    stats = dict(stats)
+                    stats["distance_evals"] = stats["distance_evals"] \
+                        + cfg.capacity
+        else:
+            ids, sims, valid, count, stats = _flat_range_topk_batch(
+                opts, metric, corpus, qs, radius, rm, cfg.capacity)
+        keys = jnp.where(valid, order_key(metric, sims), jnp.inf)
+        bcats = jnp.where(valid, cats[jnp.maximum(ids, 0)], -1)
+        cids, csims, cvalid = _rank_per_category_batch(
+            metric, ids, keys, valid, bcats, C, k)
+        return cids, csims, cvalid, stats
+
+    return core
 
 
 def build_category_partition(a: Analysis, catalog: Catalog,
@@ -470,8 +841,115 @@ def build_category_partition(a: Analysis, catalog: Catalog,
     return fn
 
 
+def build_category_partition_batch(a: Analysis, catalog: Catalog,
+                                   opts: EngineOptions,
+                                   binds_static: Bindings) -> Callable:
+    """Q5 over Q bind sets: one batched category probe + one window rank."""
+    table = catalog.table(a.table)
+    metric = _metric_of(catalog, a.table, a.vector_column)
+    k = _static_int(a.k, binds_static, "K")
+    cat_col = a.category_column.name
+    C = table.schema[cat_col].num_categories
+    assert C, f"category column {cat_col} needs num_categories"
+    mask_fn = _row_mask_fn(a.structured_predicate, table)
+    qparam = a.query_expr
+    index = catalog.index_for(a.table, a.vector_column)
+    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=True)
+    radius_expr = a.radius
+
+    def fn(arrays, binds):
+        qs = jnp.asarray(binds[qparam.name])                      # (Q, D)
+        qn = qs.shape[0]
+        radius = jnp.broadcast_to(
+            jax.vmap(lambda b: evaluate(radius_expr, table, b))(binds), (qn,))
+        row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
+        cids, csims, cvalid, stats = core(arrays, qs, radius, row_mask)
+        return {"ids": cids, "sim": csims, "valid": cvalid,
+                "category": jnp.broadcast_to(
+                    jnp.arange(C, dtype=jnp.int32)[None, :, None],
+                    cids.shape),
+                "stats": stats}
+
+    return fn
+
+
 def build_category_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                         binds_static: Bindings) -> Callable:
+    if opts.join_lowering == "perleft":
+        return _build_category_join_perleft(a, catalog, opts, binds_static)
+    ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
+    metric = _metric_of(catalog, a.right_table, a.right_vector)
+    k = _static_int(a.k, binds_static, "K")
+    cat_col = a.category_column.name
+    C = rtab.schema[cat_col].num_categories
+    assert C, f"category column {cat_col} needs num_categories"
+    mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
+                                 a.right_alias)
+    index = catalog.index_for(a.right_table, a.right_vector)
+    # legacy-parity quirk: the per-left Q6 vbase plan never counted its
+    # redundant re-sort evals — keep counters identical across lowerings
+    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False)
+    radius_expr = a.radius
+
+    def fn(arrays, binds):
+        lvec = arrays["left"]                                  # (L, d)
+        nleft = lvec.shape[0]
+        radius = evaluate(radius_expr, rtab, binds)
+        rm = mask_b(binds) if mask_b else None                 # (L, N)
+        cids, csims, cvalid, stats = core(arrays, lvec, radius, rm)
+        return {"qid": jnp.broadcast_to(
+                    jnp.arange(nleft, dtype=jnp.int32)[:, None, None],
+                    cids.shape),
+                "tid": cids, "sim": csims, "valid": cvalid,
+                "category": jnp.broadcast_to(
+                    jnp.arange(C, dtype=jnp.int32)[None, :, None],
+                    cids.shape),
+                "stats": stats}
+
+    return fn
+
+
+def build_category_join_batch(a: Analysis, catalog: Catalog,
+                              opts: EngineOptions,
+                              binds_static: Bindings) -> Callable:
+    """Q bind sets x L left rows, flattened into ONE kernel query batch."""
+    ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
+    metric = _metric_of(catalog, a.right_table, a.right_vector)
+    k = _static_int(a.k, binds_static, "K")
+    cat_col = a.category_column.name
+    C = rtab.schema[cat_col].num_categories
+    assert C, f"category column {cat_col} needs num_categories"
+    mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
+                                 a.right_alias)
+    index = catalog.index_for(a.right_table, a.right_vector)
+    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False)
+    radius_expr = a.radius
+
+    def fn(arrays, binds):
+        qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
+                                                mask_b)
+        radius = jnp.broadcast_to(
+            jax.vmap(lambda b: evaluate(radius_expr, rtab, b))(binds), (qn,))
+        cids, csims, cvalid, stats = core(
+            arrays, qs, jnp.repeat(radius, nleft), rm)
+        shape = (qn, nleft, C, k)
+        return {"qid": jnp.broadcast_to(
+                    jnp.arange(nleft, dtype=jnp.int32)[None, :, None, None],
+                    shape),
+                "tid": cids.reshape(shape), "sim": csims.reshape(shape),
+                "valid": cvalid.reshape(shape),
+                "category": jnp.broadcast_to(
+                    jnp.arange(C, dtype=jnp.int32)[None, None, :, None],
+                    shape),
+                "stats": jax.tree.map(lambda v: v.reshape(qn, nleft), stats)}
+
+    return fn
+
+
+def _build_category_join_perleft(a: Analysis, catalog: Catalog,
+                                 opts: EngineOptions,
+                                 binds_static: Bindings) -> Callable:
+    """Legacy lowering: one category probe per left row (vmapped matvecs)."""
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     k = _static_int(a.k, binds_static, "K")
@@ -532,7 +1010,7 @@ def build_category_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 "tid": cids, "sim": csims, "valid": cvalid,
                 "category": jnp.broadcast_to(
                     jnp.arange(C, dtype=jnp.int32)[None, :, None], cids.shape),
-                "stats": jax.tree.map(jnp.sum, stats)}
+                "stats": stats}
 
     return fn
 
@@ -672,28 +1150,8 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
             stats["distance_evals"] = stats["distance_evals"] + cfg.capacity
         else:
             # PASE/pgvector cannot route range queries to the ANN index (§2.3)
-            capacity = min(cfg.capacity, n)
-            if opts.use_pallas:
-                from ..kernels.ops import fused_range_scan_batch
-                hit, raw, _cnt = fused_range_scan_batch(
-                    corpus, qs, radius, row_mask, metric,
-                    interpret=opts.interpret_pallas)
-            else:
-                flat = FlatIndex(metric, corpus)
-                if row_mask is None:
-                    hit, raw = jax.vmap(
-                        lambda q, r: flat.range_mask(q, r, None))(qs, radius)
-                else:
-                    hit, raw = jax.vmap(flat.range_mask)(qs, radius, row_mask)
-            keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
-            neg, sel = jax.lax.top_k(-keys, capacity)              # row-wise
-            valid = jnp.isfinite(-neg)
-            ids = jnp.where(valid, sel.astype(jnp.int32), -1)
-            sims = jnp.where(valid, jnp.take_along_axis(raw, sel, axis=1),
-                             0.0)
-            count = jnp.sum(hit, axis=1)
-            stats = {"probes": jnp.zeros((qn,), jnp.int32),
-                     "distance_evals": jnp.full((qn,), n, jnp.int32)}
+            ids, sims, valid, count, stats = _flat_range_topk_batch(
+                opts, metric, corpus, qs, radius, row_mask, cfg.capacity)
         return {"ids": ids, "sim": sims, "valid": valid, "count": count,
                 "stats": stats}
 
@@ -709,8 +1167,23 @@ BUILDERS = {
     QueryClass.CATEGORY_JOIN: build_category_join,
 }
 
-# classes with a NATIVE batched lowering; others vmap their scalar pipeline
+# Every hybrid class now has a NATIVE batched lowering.  Join families
+# flatten (bind sets x left rows) into one kernel-level query batch; the
+# vmap-of-scalar fallback remains only for join_lowering='perleft'
+# (core/compiler.py gates it — the measured baseline).
 BATCH_BUILDERS = {
     QueryClass.VKNN_SF: build_vknn_sf_batch,
     QueryClass.DR_SF: build_dr_sf_batch,
+    QueryClass.DIST_JOIN: build_dist_join_batch,
+    QueryClass.KNN_JOIN: build_knn_join_batch,
+    QueryClass.CATEGORY_PARTITION: build_category_partition_batch,
+    QueryClass.CATEGORY_JOIN: build_category_join_batch,
 }
+
+# the join classes whose lowering obeys opts.join_lowering: 'perleft' swaps
+# their single-call builder for the legacy loop AND forces the vmap
+# execute_batch fallback.  Q5 (CATEGORY_PARTITION) has no per-left loop, so
+# the flag never touches it — its bind-batch builder is always native.
+JOIN_LOWERING_FAMILIES = frozenset({
+    QueryClass.DIST_JOIN, QueryClass.KNN_JOIN, QueryClass.CATEGORY_JOIN,
+})

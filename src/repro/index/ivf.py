@@ -384,6 +384,35 @@ def ivf_range_category(index: IVFIndex, corpus: jnp.ndarray,
 # granularity: a finished query's state freezes (``active`` mask) while
 # stragglers keep probing — with probe_batch=1 the probe sequence, merges, and
 # counters are bit-identical to the sequential functions.
+#
+# Lock-step straggler tradeoff (DESIGN.md §6/§7): when the batch mixes
+# heterogeneous queries — e.g. join left rows whose structured masks have very
+# different selectivity — the while_loop runs until the SLOWEST query
+# terminates.  The guarantees that keep this sound rather than wasteful:
+#   * frozen queries do no work that is observable: their buffers, counters,
+#     and stats stop advancing the round they terminate, so per-query
+#     ``probes`` / ``distance_evals`` counters report each query's OWN
+#     termination point, not the batch's wall-clock round count;
+#   * counters advance in CLUSTER units (a round adds ``n_probed``), so the
+#     ``stop_after_no_improve`` / ``out_range_stop`` / ``no_new_category_stop``
+#     knobs stay calibrated for any probe_batch: a query's batched probe count
+#     exceeds its sequential count by at most one round's rounding,
+#     ``ceil(sequential / B) * B``;
+#   * an optional per-query ``probe_budget`` (cluster units) caps heavy
+#     queries individually, so one adversarial left row cannot hold the whole
+#     batch hostage — light rows still freeze at their own termination and a
+#     budgeted row freezes at its cap (tests/test_join_batched.py).
+# The wall-clock cost of stragglers is real (every round gathers B·cap rows
+# for the LIVE queries); the ROADMAP's dynamic batch scheduler (size/effort
+# bucketing) is the planned systemic fix.
+
+
+def _apply_budget(active, probes, probe_budget, qn: int):
+    """Freeze queries that exhausted their per-query cluster budget."""
+    if probe_budget is None:
+        return active
+    budget = jnp.broadcast_to(jnp.asarray(probe_budget, jnp.int32), (qn,))
+    return active & (probes < budget)
 
 def _round_schedule(index: IVFIndex, cfg: ProbeConfig):
     """(B, n_rounds, max_probes) for the round-granular probe loop."""
@@ -433,7 +462,8 @@ def _scan_clusters_batch(index: IVFIndex, corpus: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("k", "cfg"))
 def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
                    k: int, row_mask: jnp.ndarray | None = None,
-                   cfg: ProbeConfig = ProbeConfig()):
+                   cfg: ProbeConfig = ProbeConfig(),
+                   probe_budget: jnp.ndarray | None = None):
     """Batched filtered top-k: (Q, d) queries, multi-cluster probe rounds.
 
     ``row_mask`` is None, a shared (N,) mask, or per-query (Q, N).  Returns
@@ -441,7 +471,9 @@ def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
     With ``cfg.probe_batch == 1`` results match :func:`ivf_topk` exactly
     (same probe prefix, same merges); with B > 1 each query probes a prefix
     that is a superset of its sequential prefix, so its kth key can only
-    improve."""
+    improve.  ``probe_budget`` optionally caps each query's probed clusters
+    individually (scalar or (Q,) int), the straggler valve for heterogeneous
+    batches — a budgeted query freezes with its best-so-far results."""
     qn = qs.shape[0]
     B, n_rounds, max_probes = _round_schedule(index, cfg)
     order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
@@ -483,6 +515,7 @@ def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
             done = have_k & (no_imp2 >= cfg.stop_after_no_improve)
         done = done & (p_next >= cfg.min_probes)
         active2 = active & ~done & (p_next < max_probes)
+        active2 = _apply_budget(active2, probes2, probe_budget, qn)
         return (r + 1, bk2, bi2, no_imp2, probes2, evals2, active2)
 
     init = (jnp.int32(0),
@@ -499,12 +532,15 @@ def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
 @functools.partial(jax.jit, static_argnames=("cfg",))
 def ivf_range_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
                     radius, row_mask: jnp.ndarray | None = None,
-                    cfg: ProbeConfig = ProbeConfig()):
+                    cfg: ProbeConfig = ProbeConfig(),
+                    probe_budget: jnp.ndarray | None = None):
     """Batched DR-SF probe (Algorithm 1 over a query batch).
 
     ``radius`` is a scalar or per-query (Q,) raw metric values.  Returns
     (ids (Q, capacity), sims, valid, count (Q,), stats with (Q,) arrays).
-    probe_batch=1 matches :func:`ivf_range` per query exactly."""
+    probe_batch=1 matches :func:`ivf_range` per query exactly.
+    ``probe_budget`` (scalar or (Q,) clusters) individually caps stragglers;
+    results are ordered by probe discovery, not by key."""
     qn = qs.shape[0]
     B, n_rounds, max_probes = _round_schedule(index, cfg)
     order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
@@ -557,6 +593,7 @@ def ivf_range_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
             done = has_in2 & (out_cnt2 >= cfg.out_range_stop)
         done = done & (p_next >= cfg.min_probes)
         active2 = active & ~done & (p_next < max_probes)
+        active2 = _apply_budget(active2, probes2, probe_budget, qn)
         return (r + 1, out_ids2, out_keys2, count2, has_in2, out_cnt2,
                 probes2, evals2, active2)
 
@@ -573,4 +610,120 @@ def ivf_range_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
                      -out_keys if index.metric.is_similarity() else out_keys,
                      0.0)
     stats = {"probes": probes, "distance_evals": evals}
+    return out_ids, sims, valid, count, stats
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def ivf_range_category_batch(index: IVFIndex, corpus: jnp.ndarray,
+                             categories: jnp.ndarray, qs: jnp.ndarray,
+                             radius, row_mask: jnp.ndarray | None = None,
+                             cfg: ProbeConfig = ProbeConfig(num_categories=8),
+                             probe_budget: jnp.ndarray | None = None):
+    """Batched category probe (Algorithm 2 over a query batch).
+
+    The updateState record table gains a leading Q axis: per-query seen mask
+    (Q, C), per-category hit counts (Q, C), and the per-category best-K key
+    queues (Q, C, K).  Category convergence / dynamic range shrinkage decide
+    termination per query; as everywhere on the batched path the ``active``
+    mask freezes finished queries at ROUND granularity and counters advance
+    in CLUSTER units.  probe_batch=1 matches :func:`ivf_range_category` per
+    query exactly.  Returns (ids (Q, capacity), sims, valid, count (Q,),
+    stats with per-query (Q,) arrays)."""
+    C = cfg.num_categories
+    K = cfg.k_per_category
+    assert C > 0, "category probe needs static num_categories"
+    qn = qs.shape[0]
+    B, n_rounds, max_probes = _round_schedule(index, cfg)
+    order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
+    radius_key = order_key(index.metric, jnp.broadcast_to(
+        jnp.asarray(radius, jnp.float32), (qn,)))
+    capacity = cfg.capacity
+
+    def cond(state):
+        r, *_rest, active = state
+        return (r < n_rounds) & jnp.any(active)
+
+    def body(state):
+        (r, out_ids, out_keys, count, has_in, out_cnt, seen, counts, kth,
+         no_new, probes, evals, active) = state
+        cl = jax.lax.dynamic_slice_in_dim(order, r * B, B, axis=1)
+        ids, keys, valid, rm_hit, nev = _scan_clusters_batch(
+            index, corpus, qs, cl, row_mask)
+        in_range_hit = valid & (keys <= radius_key[:, None])  # range only
+        hit = in_range_hit & rm_hit & active[:, None]
+        n_range = jnp.sum(in_range_hit, axis=1)
+        n_hits = jnp.sum(hit, axis=1)
+        safe = jnp.maximum(ids, 0)
+        cats = jnp.where(hit, categories[safe], -1)           # (Q, B·cap)
+
+        # record-table update — hits of frozen queries are already masked out,
+        # so the category state freezes automatically with ``active``
+        onehot = cats[..., None] == jnp.arange(C)[None, None, :]  # (Q,Bc,C)
+        cat_hits = jnp.sum(onehot, axis=1)                    # (Q, C)
+        seen2 = seen | (cat_hits > 0)
+        n_new = jnp.sum(seen2, axis=1) - jnp.sum(seen, axis=1)
+        counts2 = counts + cat_hits
+        cand = jnp.where(onehot, keys[..., None], INF)        # (Q, B·cap, C)
+        merged = jnp.concatenate([kth, jnp.swapaxes(cand, 1, 2)], axis=2)
+        kth2 = -jax.lax.top_k(-merged, K)[0]                  # (Q, C, K)
+
+        pos = count[:, None] + jnp.cumsum(hit, axis=1) - 1
+        ok = hit & (pos < capacity)
+        safe_pos = jnp.where(ok, pos, capacity)
+
+        def append(oi, okeys, ok_, sp, idsr, keysr):
+            oi = oi.at[sp].set(jnp.where(ok_, idsr, -1), mode="drop")
+            okeys = okeys.at[sp].set(jnp.where(ok_, keysr, INF), mode="drop")
+            return oi, okeys
+
+        out_ids2, out_keys2 = jax.vmap(append)(out_ids, out_keys, ok,
+                                               safe_pos, ids, keys)
+        count2 = jnp.where(active, jnp.minimum(count + n_hits, capacity),
+                           count)
+        has_in2 = jnp.where(active, has_in | (n_range > 0), has_in)
+        n_probed = jnp.minimum(B, max_probes - r * B)
+        out_cnt2 = jnp.where(
+            active,
+            jnp.where(n_range > 0, 0,
+                      jnp.where(has_in, out_cnt + n_probed, 0)),
+            out_cnt)
+        no_new2 = jnp.where(active,
+                            jnp.where(n_new > 0, 0, no_new + n_probed),
+                            no_new)
+        probes2 = probes + jnp.where(active, n_probed, 0)
+        evals2 = evals + jnp.where(active, nev, 0)
+        p_next = (r + 1) * B
+        next_bound = bounds[:, jnp.minimum(p_next, index.nlist - 1)]
+        frontier = next_bound if cfg.termination == "bound" else radius_key
+        converged = (counts2 >= K) & (kth2[:, :, K - 1] <= frontier[:, None])
+        rest = jnp.sum(seen2 & ~converged, axis=1)            # T.restElements
+        cat_done = ((rest == 0) & (no_new2 >= cfg.no_new_category_stop)
+                    & jnp.any(seen2, axis=1))
+        if cfg.termination == "bound":
+            range_done = next_bound > radius_key
+        else:
+            range_done = has_in2 & (out_cnt2 >= cfg.out_range_stop)
+        done = (cat_done | range_done) & (p_next >= cfg.min_probes)
+        active2 = active & ~done & (p_next < max_probes)
+        active2 = _apply_budget(active2, probes2, probe_budget, qn)
+        return (r + 1, out_ids2, out_keys2, count2, has_in2, out_cnt2,
+                seen2, counts2, kth2, no_new2, probes2, evals2, active2)
+
+    init = (jnp.int32(0),
+            jnp.full((qn, capacity), -1, jnp.int32),
+            jnp.full((qn, capacity), INF),
+            jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.bool_),
+            jnp.zeros((qn,), jnp.int32),
+            jnp.zeros((qn, C), jnp.bool_), jnp.zeros((qn, C), jnp.int32),
+            jnp.full((qn, C, K), INF), jnp.zeros((qn,), jnp.int32),
+            jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
+            jnp.ones((qn,), jnp.bool_))
+    (_, out_ids, out_keys, count, _hi, _oc, seen, _cn, _kth, _nn, probes,
+     evals, _a) = jax.lax.while_loop(cond, body, init)
+    valid = out_ids >= 0
+    sims = jnp.where(valid,
+                     -out_keys if index.metric.is_similarity() else out_keys,
+                     0.0)
+    stats = {"probes": probes, "distance_evals": evals,
+             "categories_seen": jnp.sum(seen, axis=1)}
     return out_ids, sims, valid, count, stats

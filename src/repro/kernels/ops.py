@@ -193,3 +193,33 @@ def fused_range_scan_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
     hit = hits[:n, :qn].T != 0
     raw = jnp.where(hit, -keys if metric.is_similarity() else keys, 0.0)
     return hit, raw, jnp.sum(counts, axis=0)[:qn]
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "capacity", "block_q",
+                                             "block_n", "interpret"))
+def fused_range_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
+                           row_mask: jnp.ndarray | None, metric: Metric,
+                           capacity: int, block_q: int = 128,
+                           block_n: int = 1024,
+                           interpret: bool | None = None):
+    """Fused range scan + per-query compaction to a fixed result buffer.
+
+    The join families' flat lowering: every (masked) left row is one lane of
+    the query-tiled range kernel, and each lane's (N,) hit vector compacts to
+    its best-``capacity`` results.  ``radius`` is a scalar or (Q,) raw metric
+    values; ``row_mask`` follows the (Npad, Qm) normalization of
+    :func:`fused_range_scan_batch` (None | shared (N,) | per-query (Q, N)).
+    Ordering policy: ascending order key (best first; the IVF range probes
+    instead emit probe-discovery order).  Returns (ids (Q, capacity), sims
+    raw-metric, valid (Q, capacity), count (Q,) total hits before
+    truncation)."""
+    from ..core.expr import order_key
+    hit, raw, counts = fused_range_scan_batch(
+        corpus, queries, radius, row_mask, metric, block_q=block_q,
+        block_n=block_n, interpret=interpret)
+    keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
+    neg, sel = jax.lax.top_k(-keys, capacity)                # row-wise
+    valid = jnp.isfinite(-neg)
+    ids = jnp.where(valid, sel.astype(jnp.int32), -1)
+    sims = jnp.where(valid, jnp.take_along_axis(raw, sel, axis=1), 0.0)
+    return ids, sims, valid, counts

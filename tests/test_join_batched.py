@@ -1,0 +1,429 @@
+"""Batch-native join families (Q3-Q6): parity against the per-left-row
+loop, execute_batch native lowering, and the lock-step straggler contract.
+
+Contracts under test (DESIGN.md §7):
+* with ``join_lowering='batch'`` every join family gathers its left rows
+  into ONE query batch on the batched kernels/probes; with
+  ``probe_batch=1`` (and the jnp flat path) results are bit-identical to
+  the legacy ``join_lowering='perleft'`` loop at every L, including
+  residual join predicates and ``max_pairs`` truncation;
+* ordering policy: flat plans emit best-first (ascending order key) per
+  left row; IVF plans emit probe-discovery order — identical across
+  lowerings; the Pallas flat path may permute equal-key ties only;
+* ``execute_batch`` on Q3-Q6 flattens (bind sets x left rows) into one
+  kernel-level query batch — no vmap-of-scalar fallback;
+* per-query counters report each query's OWN termination point (lock-step
+  freezing), stay calibrated in cluster units for any probe_batch, and
+  respect per-query probe budgets.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineOptions, Metric, compile_query
+from repro.core.semantics import QueryClass
+from repro.core.physical import BATCH_BUILDERS
+from repro.index import build_ivf
+from repro.index.ivf import (ProbeConfig, ivf_range, ivf_range_batch,
+                             ivf_range_category, ivf_range_category_batch,
+                             ivf_topk, ivf_topk_batch)
+
+PROBE = ProbeConfig(max_probes=16, capacity=256, termination="bound")
+
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+) AS ranked WHERE ranked.rank <= 5
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+
+
+def _make_catalog(n_queries: int):
+    from repro.data import make_laion_catalog
+
+    cat = make_laion_catalog(n_rows=1500, n_queries=n_queries, dim=24,
+                             n_modes=12, num_categories=4, seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=16,
+                    metric=Metric.INNER_PRODUCT, iters=3)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -40, axis=1)[:, -40]))
+    return cat, radius
+
+
+@pytest.fixture(scope="module")
+def join_env():
+    return _make_catalog(5)
+
+
+@pytest.fixture(scope="module")
+def join_env_l1():
+    return _make_catalog(1)
+
+
+def _both(sql, cat, binds, **opt_kw):
+    outs = {}
+    for low in ("batch", "perleft"):
+        q = compile_query(sql, cat,
+                          EngineOptions(join_lowering=low, **opt_kw))
+        outs[low] = jax.tree.map(np.asarray, q(**binds))
+    return outs["batch"], outs["perleft"]
+
+
+def _assert_identical(b, p):
+    """Bit-identical outputs; stats totals equal (perleft sums per row)."""
+    for key in p:
+        if key == "stats":
+            for sk in p["stats"]:
+                assert np.sum(b["stats"][sk]) == np.sum(p["stats"][sk]), sk
+            continue
+        if b[key].dtype.kind == "f":
+            np.testing.assert_allclose(b[key], p[key], rtol=1e-5, atol=1e-5,
+                                       err_msg=key)
+        else:
+            assert np.array_equal(b[key], p[key]), key
+
+
+# ---------------------------------------------------------------------------
+# lowering parity (bit-identical: probe_batch=1, jnp flat path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["chase", "vbase", "brute"])
+def test_q3_batch_matches_perleft(join_env, engine):
+    cat, radius = join_env
+    b, p = _both(Q3, cat, {"r": radius}, engine=engine, probe=PROBE,
+                 max_pairs=128)
+    _assert_identical(b, p)
+
+
+@pytest.mark.parametrize("engine", ["chase", "brute", "brute_sort"])
+def test_q4_batch_matches_perleft(join_env, engine):
+    cat, _ = join_env
+    b, p = _both(Q4, cat, {}, engine=engine, probe=PROBE)
+    _assert_identical(b, p)
+
+
+@pytest.mark.parametrize("engine",
+                         ["chase", "vbase", "brute", "chase_no_updatestate"])
+def test_q6_batch_matches_perleft(join_env, engine):
+    """chase exercises ivf_range_category_batch (batched Algorithm 2)."""
+    cat, radius = join_env
+    b, p = _both(Q6, cat, {"r": radius}, engine=engine, probe=PROBE)
+    _assert_identical(b, p)
+
+
+@pytest.mark.parametrize("sql,binds,engine", [
+    (Q3, {"r": None}, "chase"), (Q4, {}, "brute"), (Q6, {"r": None}, "chase"),
+])
+def test_join_batch_matches_perleft_at_l1(join_env_l1, sql, binds, engine):
+    """L=1: the degenerate batch is still bit-identical to the loop."""
+    cat, radius = join_env_l1
+    binds = {k: radius for k in binds}
+    b, p = _both(sql, cat, binds, engine=engine, probe=PROBE, max_pairs=64)
+    _assert_identical(b, p)
+
+
+def test_q3_max_pairs_truncation_parity(join_env):
+    """Tiny max_pairs forces buffer truncation; the clamped buffers and the
+    pre-truncation counts must match across lowerings."""
+    cat, radius = join_env
+    b, p = _both(Q3, cat, {"r": radius}, engine="chase", probe=PROBE,
+                 max_pairs=8)
+    _assert_identical(b, p)
+    assert b["tid"].shape[1] == 8
+    assert (b["count"] >= np.sum(b["valid"], axis=1)).all()
+
+
+def test_q3_pallas_flat_matches_jnp(join_env):
+    """The query-tiled Pallas flat path: same rows as the exact scan up to
+    equal-key ties (ordering policy: best-first per left row)."""
+    cat, _ = join_env
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    # tie-safe radius: the widest gap between adjacent similarity values
+    # near the target selectivity, so kernel float error can't flip a hit
+    allv = np.sort(sims, axis=None)
+    lo = allv.size - 60 * sims.shape[0]
+    window = allv[lo:lo + 120]
+    j = int(np.argmax(np.diff(window)))
+    radius = float((window[j] + window[j + 1]) / 2)
+    mk = lambda pallas: compile_query(Q3, cat, EngineOptions(
+        engine="brute", use_pallas=pallas, max_pairs=64))
+    ob = jax.tree.map(np.asarray, mk(True)(r=radius))
+    oj = jax.tree.map(np.asarray, mk(False)(r=radius))
+    assert np.array_equal(ob["valid"], oj["valid"])
+    assert np.array_equal(ob["count"], oj["count"])
+    np.testing.assert_allclose(np.sort(ob["sim"], axis=1),
+                               np.sort(oj["sim"], axis=1), rtol=1e-4,
+                               atol=1e-5)
+    for i in range(ob["tid"].shape[0]):
+        assert (set(ob["tid"][i][ob["valid"][i]].tolist())
+                == set(oj["tid"][i][oj["valid"][i]].tolist()))
+
+
+def test_q3_batch_respects_residual_predicate(join_env):
+    cat, radius = join_env
+    q = compile_query(Q3, cat, EngineOptions(engine="chase", probe=PROBE,
+                                             max_pairs=128))
+    out = jax.tree.map(np.asarray, q(r=radius))
+    qdate = np.asarray(cat.table("queries")["capture_date"])
+    cdate = np.asarray(cat.table("laion")["capture_date"])
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    for i in range(out["qid"].shape[0]):
+        tids = out["tid"][i][out["valid"][i]]
+        assert (cdate[tids] > qdate[i]).all()
+        assert (sims[i][tids] >= radius - 1e-5).all()
+
+
+# ---------------------------------------------------------------------------
+# execute_batch: native join lowering (no vmap-of-scalar fallback)
+# ---------------------------------------------------------------------------
+
+def test_join_families_have_native_batch_builders():
+    for qc in (QueryClass.DIST_JOIN, QueryClass.KNN_JOIN,
+               QueryClass.CATEGORY_PARTITION, QueryClass.CATEGORY_JOIN):
+        assert qc in BATCH_BUILDERS
+
+
+@pytest.mark.parametrize("sql,engine", [(Q3, "chase"), (Q3, "brute"),
+                                        (Q6, "chase")])
+def test_execute_batch_join_matches_singles(join_env, sql, engine):
+    cat, radius = join_env
+    radii = np.asarray([radius, radius * 0.98], np.float32)
+    q = compile_query(sql, cat, EngineOptions(engine=engine, probe=PROBE,
+                                              max_pairs=64))
+    assert q.batch_native
+    out = jax.tree.map(np.asarray, q.execute_batch(r=radii))
+    for i, r in enumerate(radii):
+        single = jax.tree.map(np.asarray, q(r=float(r)))
+        for key in single:
+            if key == "stats":
+                for sk in single["stats"]:
+                    assert np.array_equal(out["stats"][sk][i],
+                                          single["stats"][sk]), sk
+                continue
+            assert np.array_equal(out[key][i], single[key]), (key, i)
+
+
+def test_execute_batch_q5_native(join_env):
+    cat, radius = join_env
+    qv = np.asarray(cat.table("queries")["embedding"][:3])
+    q = compile_query(Q5, cat, EngineOptions(engine="chase", probe=PROBE))
+    assert q.batch_native
+    # Q5 has no per-left loop: join_lowering must not degrade its batching
+    assert compile_query(Q5, cat, EngineOptions(
+        engine="chase", probe=PROBE, join_lowering="perleft")).batch_native
+    out = jax.tree.map(np.asarray, q.execute_batch(qv=qv, r=radius))
+    assert out["ids"].shape[0] == 3
+    for i in range(3):
+        single = jax.tree.map(np.asarray, q(qv=qv[i], r=radius))
+        assert np.array_equal(out["ids"][i], single["ids"])
+        assert np.array_equal(out["stats"]["probes"][i],
+                              single["stats"]["probes"])
+
+
+def test_execute_batch_perleft_falls_back_and_agrees(join_env):
+    """The perleft baseline's execute_batch (vmap fallback) must agree with
+    the native flattened lowering — same results, different operator shape."""
+    cat, radius = join_env
+    radii = np.asarray([radius, radius * 0.98], np.float32)
+    outs = {}
+    for low in ("batch", "perleft"):
+        q = compile_query(Q3, cat, EngineOptions(engine="chase", probe=PROBE,
+                                                 max_pairs=64,
+                                                 join_lowering=low))
+        assert q.batch_native == (low == "batch")
+        outs[low] = jax.tree.map(np.asarray, q.execute_batch(r=radii))
+    assert np.array_equal(outs["batch"]["tid"], outs["perleft"]["tid"])
+    assert np.array_equal(outs["batch"]["valid"], outs["perleft"]["valid"])
+    assert np.sum(outs["batch"]["stats"]["probes"]) \
+        == np.sum(outs["perleft"]["stats"]["probes"])
+
+
+# ---------------------------------------------------------------------------
+# explain(): batched lowering is visible in the plan text
+# ---------------------------------------------------------------------------
+
+def test_explain_reports_batch_lowering(join_env):
+    cat, _ = join_env
+    native = compile_query(Q3, cat, EngineOptions(engine="chase"))
+    assert "batch:  native" in native.explain()
+    assert "left rows flattened" in native.explain()
+    fallback = compile_query(Q3, cat, EngineOptions(
+        engine="chase", join_lowering="perleft"))
+    assert "vmap-of-scalar fallback" in fallback.explain()
+    vknn = compile_query(
+        "SELECT sample_id FROM products "
+        "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 5",
+        cat, EngineOptions(engine="chase"))
+    assert "batch:  native" in vknn.explain()
+    assert "query-tiled" in vknn.explain()
+
+
+# ---------------------------------------------------------------------------
+# batched Algorithm 2 (ivf_range_category_batch) probe-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def cat_probe_env(join_env):
+    cat, radius = join_env
+    corpus = cat.table("laion")["vec"]
+    idx = cat.index_for("laion", "vec")
+    cats = cat.table("laion")["calorie_level"]
+    qs = cat.table("queries")["embedding"]
+    return idx, corpus, cats, qs, radius
+
+
+@pytest.mark.parametrize("termination", ["counter", "bound"])
+def test_ivf_range_category_batch_parity(cat_probe_env, termination):
+    idx, corpus, cats, qs, radius = cat_probe_env
+    cfg = ProbeConfig(max_probes=16, capacity=256, termination=termination,
+                      num_categories=4, k_per_category=3)
+    ids, sims, valid, count, stats = ivf_range_category_batch(
+        idx, corpus, cats, qs, radius, None, cfg)
+    for qi in range(qs.shape[0]):
+        si, ss, sv, sc, sst = ivf_range_category(idx, corpus, cats, qs[qi],
+                                                 radius, None, cfg)
+        assert np.array_equal(np.asarray(ids[qi]), np.asarray(si))
+        np.testing.assert_allclose(np.asarray(sims[qi]), np.asarray(ss),
+                                   rtol=1e-5, atol=1e-5)
+        assert int(count[qi]) == int(sc)
+        assert int(stats["probes"][qi]) == int(sst["probes"])
+        assert int(stats["distance_evals"][qi]) == int(sst["distance_evals"])
+        assert int(stats["categories_seen"][qi]) \
+            == int(sst["categories_seen"])
+
+
+def test_ivf_range_category_batch_multi_cluster_superset(cat_probe_env):
+    """probe_batch>1 probes a superset prefix: found ids only grow."""
+    idx, corpus, cats, qs, radius = cat_probe_env
+    mk = lambda B: ProbeConfig(max_probes=16, capacity=512, probe_batch=B,
+                               num_categories=4, k_per_category=3)
+    i1, _, v1, c1, s1 = ivf_range_category_batch(idx, corpus, cats, qs,
+                                                 radius, None, mk(1))
+    i4, _, v4, c4, s4 = ivf_range_category_batch(idx, corpus, cats, qs,
+                                                 radius, None, mk(4))
+    for qi in range(qs.shape[0]):
+        got1 = set(np.asarray(i1[qi])[np.asarray(v1[qi])].tolist())
+        got4 = set(np.asarray(i4[qi])[np.asarray(v4[qi])].tolist())
+        assert got1 <= got4
+        assert int(s4["probes"][qi]) >= int(s1["probes"][qi])
+
+
+# ---------------------------------------------------------------------------
+# lock-step stragglers: counters stay calibrated, budgets cap heavy rows
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def hetero_env(join_env):
+    """Heterogeneous left rows: one dense mask (light query, terminates
+    fast), the rest highly selective (stragglers probing many clusters)."""
+    cat, _ = join_env
+    corpus = cat.table("laion")["vec"]
+    idx = cat.index_for("laion", "vec")
+    qs = cat.table("queries")["embedding"]
+    rng = np.random.default_rng(7)
+    n = corpus.shape[0]
+    mask = np.asarray(rng.random((qs.shape[0], n)) < 0.02)
+    mask[0] = rng.random(n) < 0.9
+    return idx, corpus, qs, jnp.asarray(mask)
+
+
+@pytest.mark.parametrize("probe_batch", [1, 4])
+def test_straggler_counters_stay_calibrated(hetero_env, probe_batch):
+    """Each query's counters report its OWN termination point: lock-step
+    rounds never inflate a light query's probes beyond one round's rounding
+    of its sequential count (cluster-unit calibration, 'bound' exact)."""
+    idx, corpus, qs, mask = hetero_env
+    k = 5
+    cfg = ProbeConfig(max_probes=16, termination="bound",
+                      probe_batch=probe_batch)
+    cfg1 = ProbeConfig(max_probes=16, termination="bound")
+    ids, sims, valid, stats = ivf_topk_batch(idx, corpus, qs, k, mask, cfg)
+    seq_probes = []
+    for qi in range(qs.shape[0]):
+        _, _, _, sst = ivf_topk(idx, corpus, qs[qi], k, mask[qi], cfg1)
+        seq_probes.append(int(sst["probes"]))
+    batch_probes = np.asarray(stats["probes"])
+    B = probe_batch
+    for qi, sp in enumerate(seq_probes):
+        assert sp <= int(batch_probes[qi]) <= -(-sp // B) * B, qi
+    # heterogeneity is real: the dense-mask query terminates well before the
+    # selective stragglers, and its counters froze there
+    assert seq_probes[0] < max(seq_probes[1:])
+    assert int(batch_probes[0]) < int(batch_probes[1:].max())
+
+
+def test_batch_composition_does_not_change_results(hetero_env):
+    """Freezing means stragglers can't contaminate a finished query: each
+    query alone == the same query inside the heterogeneous batch."""
+    idx, corpus, qs, mask = hetero_env
+    cfg = ProbeConfig(max_probes=16, termination="bound", probe_batch=4)
+    ids, sims, valid, stats = ivf_topk_batch(idx, corpus, qs, 5, mask, cfg)
+    for qi in range(qs.shape[0]):
+        si, ss, sv, sst = ivf_topk_batch(idx, corpus, qs[qi:qi + 1], 5,
+                                         mask[qi:qi + 1], cfg)
+        assert np.array_equal(np.asarray(ids[qi]), np.asarray(si[0]))
+        assert int(stats["probes"][qi]) == int(sst["probes"][0])
+
+
+@pytest.mark.parametrize("fn", ["topk", "range", "category"])
+def test_per_query_probe_budget(hetero_env, join_env, fn):
+    """probe_budget individually caps heavy queries (round-granular: at most
+    one round of overshoot) while unbudgeted queries are untouched."""
+    idx, corpus, qs, mask = hetero_env
+    cats = join_env[0].table("laion")["calorie_level"]
+    B = 2
+    budget = np.full(qs.shape[0], 16, np.int32)
+    budget[1] = 3                                  # cap one straggler
+    budget = jnp.asarray(budget)
+    if fn == "topk":
+        cfg = ProbeConfig(max_probes=16, probe_batch=B)
+        run = lambda pb: ivf_topk_batch(idx, corpus, qs, 5, mask, cfg,
+                                        probe_budget=pb)[3]
+    elif fn == "range":
+        cfg = ProbeConfig(max_probes=16, capacity=256, probe_batch=B)
+        run = lambda pb: ivf_range_batch(idx, corpus, qs, 0.9, mask, cfg,
+                                         probe_budget=pb)[4]
+    else:
+        cfg = ProbeConfig(max_probes=16, capacity=256, probe_batch=B,
+                          num_categories=4, k_per_category=3)
+        run = lambda pb: ivf_range_category_batch(
+            idx, corpus, cats, qs, 0.9, mask, cfg, probe_budget=pb)[4]
+    free = np.asarray(run(None)["probes"])
+    capped = np.asarray(run(budget)["probes"])
+    assert int(capped[1]) <= 3 + (B - 1)           # round-granular cap
+    keep = np.arange(qs.shape[0]) != 1
+    assert np.array_equal(capped[keep], free[keep])
