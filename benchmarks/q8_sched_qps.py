@@ -1,0 +1,262 @@
+"""Q8 — serving latency/QPS under Poisson arrivals (the scheduler bench).
+
+Two measurements of the size-bucketed execution stack (DESIGN.md §8):
+
+* **Arrival sweep**: Poisson request arrivals at 3 rates (relative to the
+  measured batch-service capacity) through three serving policies on the
+  SAME compiled plan:
+    - ``naive``   — per-request loop: one single-query pipeline call each
+      (the pre-batching deployment shape; no queueing wins, no batch wins),
+    - ``fixed_q`` — static batching: wait for exactly MAX_BATCH requests
+      (remainder waits for the last arrival), execute at that fixed Q —
+      great amortization, unbounded fill-wait at low rates,
+    - ``sched``   — the :class:`BatchScheduler` deadline policy: drain on a
+      full batch OR when the oldest request waited ``max_wait_ms``, execute
+      through the per-bucket executor cache.
+  All three run on one virtual clock with REAL measured execution times;
+  reported: p50/p95 latency and QPS.
+* **Effort row**: the q34-shaped heterogeneous-LEFT workload — join left
+  rows as a query batch (the PR-2 flattening), residual predicate
+  selectivity spanning permissive to needle-selective, so lock-step IVF
+  rounds couple light lefts to stragglers.  Compares one lock-step bucketed
+  execution against :func:`run_effort_bucketed` (pilot = p75 of a warmup
+  run's per-query probe counters + 1 — the scheduler's effort-calibration
+  heuristic); the acceptance gate is effort > lock-step in interpret mode.
+
+Writes ``BENCH_sched.json``.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.q8_sched_qps [--full]
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import BenchEnv, Row
+
+SCHED_ROWS = 2000    # arrival-sweep catalog (interpret-mode friendly)
+EFFORT_ROWS = 8000   # effort row needs rounds expensive enough to matter
+N_LEFT = 64          # heterogeneous-left workload width
+N_REQ = 64           # requests per simulated rate
+MAX_BATCH = 32
+MAX_WAIT_MS = 5.0
+RATE_MULTIPLIERS = (0.3, 1.0, 3.0)   # x measured batch capacity
+K = 10
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sched.json")
+
+SQL = ("SELECT sample_id FROM images WHERE capture_date > ${d} "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT {K}")
+
+
+def _catalog(env: BenchEnv, n_rows: int, n_queries: int, nlist: int):
+    import jax
+
+    from repro.data import make_laion_catalog
+    from repro.index import build_ivf
+
+    cat = make_laion_catalog(n_rows=n_rows, n_queries=n_queries,
+                             dim=env.cfg.dim, n_modes=16, seed=env.cfg.seed)
+    idx = build_ivf(jax.random.key(env.cfg.seed), cat.table("laion")["vec"],
+                    nlist=nlist, metric=env.cfg.metric, iters=4)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    return cat
+
+
+def _block(out):
+    import jax
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return out
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    _block(fn())
+    return time.perf_counter() - t0
+
+
+def _requests(cat, n: int, sel_lo=0.2, sel_hi=0.8, seed=11):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    base = np.asarray(cat.table("queries")["embedding"])
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    reps = -(-n // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:n]
+    qs = (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+    ds = np.quantile(dates, rng.uniform(sel_lo, sel_hi, n)).astype(np.int32)
+    return [dict(qv=jnp.asarray(qs[i]), d=jnp.asarray(ds[i]))
+            for i in range(n)]
+
+
+def _stats(records) -> dict:
+    from repro.serving.scheduler import latency_stats
+    stats = latency_stats(records)
+    return {"p50_ms": stats["p50_ms"], "p95_ms": stats["p95_ms"],
+            "qps": stats["qps"]}
+
+
+def _sim_naive(q, arrivals, binds_list) -> dict:
+    from repro.serving.scheduler import SimRecord
+    server_free, records = 0.0, []
+    for r, (t, b) in enumerate(zip(arrivals, binds_list)):
+        start = max(server_free, float(t))
+        finish = start + _timed(lambda: q(**b))
+        records.append(SimRecord(r, float(t), start, finish, 1))
+        server_free = finish
+    return _stats(records)
+
+
+def _sim_fixed(q, arrivals, binds_list, batch: int) -> dict:
+    from repro.serving.scheduler import SimRecord
+    n = len(binds_list)
+    server_free, records = 0.0, []
+    i = 0
+    while i < n:
+        j = min(i + batch, n)
+        start = max(server_free, float(arrivals[j - 1]))  # wait for the fill
+        chunk = binds_list[i:j] + [binds_list[j - 1]] * (batch - (j - i))
+        finish = start + _timed(
+            lambda: q.execute_batch(binds_list=[
+                {k: np.asarray(v) for k, v in b.items()} for b in chunk]))
+        for r in range(i, j):
+            records.append(SimRecord(r, float(arrivals[r]), start, finish,
+                                     j - i))
+        server_free = finish
+        i = j
+    return _stats(records)
+
+
+def _sim_sched(q, arrivals, binds_list) -> dict:
+    from repro.serving.scheduler import BatchScheduler, SchedulerConfig
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=MAX_BATCH,
+                                              max_wait_ms=MAX_WAIT_MS))
+    records = sched.simulate(np.asarray(arrivals, np.float64), binds_list)
+    return _stats(records)
+
+
+def _arrival_sweep(env: BenchEnv, rows: list, report: dict) -> None:
+    # index-less fused-kernel workload: the path where batch amortization is
+    # real in interpret mode (q7: flat b64 ≈ 6-7x b1), so the POLICY
+    # difference is visible — naive pays per-request kernel launches,
+    # fixed_q pays fill-wait, the scheduler pays neither
+    cat = _catalog(env, SCHED_ROWS, 8, 32)
+    sql = SQL.replace("{K}", str(K))
+    q = compile_query(sql, cat, EngineOptions(engine="brute",
+                                              use_pallas=True))
+    reqs = _requests(cat, N_REQ)
+    # warm every executable the sweep touches (compile out of the clock)
+    _block(q(**reqs[0]))
+    _block(q.execute_batch(binds_list=[
+        {k: np.asarray(v) for k, v in reqs[0].items()}] * MAX_BATCH))
+    b = 1
+    while b <= MAX_BATCH:                      # every bucket a drain can hit
+        _block(q.execute_bucketed(binds_list=[
+            {k: np.asarray(v) for k, v in reqs[0].items()}] * b))
+        b *= 2
+    # capacity: batch-service rate of the fixed batch
+    t_batch = min(_timed(lambda: q.execute_batch(binds_list=[
+        {k: np.asarray(v) for k, v in r.items()}
+        for r in reqs[:MAX_BATCH]])) for _ in range(3))
+    capacity = MAX_BATCH / t_batch
+    rng = np.random.default_rng(env.cfg.seed)
+    report["poisson"] = []
+    for mult in RATE_MULTIPLIERS:
+        rate = capacity * mult
+        arrivals = np.sort(rng.exponential(1.0 / rate, N_REQ).cumsum())
+        entry = {"rate_multiplier": mult, "rate_qps": round(rate, 1)}
+        for name, sim in (("naive", _sim_naive),
+                          ("fixed_q", lambda q_, a, b: _sim_fixed(
+                              q_, a, b, MAX_BATCH)),
+                          ("sched", _sim_sched)):
+            entry[name] = sim(q, arrivals, reqs)
+            rows.append(Row(f"q8_{name}_x{mult}",
+                            entry[name]["p50_ms"],
+                            p95_ms=entry[name]["p95_ms"],
+                            qps=entry[name]["qps"],
+                            rate_qps=entry["rate_qps"]))
+        report["poisson"].append(entry)
+
+
+def _effort_row(env: BenchEnv, rows: list, report: dict) -> None:
+    import dataclasses
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serving.scheduler import run_effort_bucketed
+    cat = _catalog(env, EFFORT_ROWS, N_LEFT, 64)
+    probe = dataclasses.replace(env.cfg.probe, probe_batch=2, max_probes=64)
+    sql = SQL.replace("{K}", str(K))
+    q = compile_query(sql, cat, EngineOptions(engine="chase", probe=probe))
+    # q34-shaped heterogeneous LEFT rows: most residual predicates are
+    # permissive, a few are needle-selective -> classic straggler coupling
+    rng = np.random.default_rng(env.cfg.seed)
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    sel = np.concatenate([rng.uniform(0.0, 0.5, N_LEFT - 8),
+                          np.full(8, 0.9995)])
+    rng.shuffle(sel)
+    qs = np.asarray(cat.table("queries")["embedding"])[:N_LEFT]
+    binds = q._stack_binds(None, dict(
+        qv=jnp.asarray(qs),
+        d=jnp.asarray(np.quantile(dates, sel).astype(np.int32))))
+    lock = _block(q.executor(binds))
+    probes = np.asarray(lock["stats"]["probes"])
+    pilot = int(np.percentile(probes, 75)) + 1    # effort calibration
+    eff, info = run_effort_bucketed(q, binds, pilot_budget=pilot)
+    assert np.array_equal(np.asarray(lock["ids"]), np.asarray(eff["ids"])), \
+        "effort-bucketed result diverged from lock-step"
+    t_lock = 1e3 * min(_timed(lambda: q.executor(binds)) for _ in range(5))
+    t_eff = 1e3 * min(
+        _timed(lambda: run_effort_bucketed(q, binds, pilot_budget=pilot)[0])
+        for _ in range(5))
+    report["effort"] = {
+        "workload": "q34_hetero_left", "n_left": N_LEFT,
+        "right_rows": EFFORT_ROWS, "pilot_budget": pilot,
+        "n_light": info["n_light"], "n_heavy": info["n_heavy"],
+        "ms_lockstep": round(t_lock, 2), "ms_effort": round(t_eff, 2),
+        "speedup": round(t_lock / t_eff, 2),
+    }
+    rows.append(Row("q8_effort_vs_lockstep", t_eff,
+                    ms_lockstep=round(t_lock, 2),
+                    speedup=report["effort"]["speedup"],
+                    n_heavy=info["n_heavy"], pilot=pilot))
+
+
+def run(env: BenchEnv, rows: list) -> dict:
+    report: dict = {"dim": env.cfg.dim, "k": K, "max_batch": MAX_BATCH,
+                    "max_wait_ms": MAX_WAIT_MS, "n_requests": N_REQ,
+                    "sched_rows": SCHED_ROWS, "effort_rows": EFFORT_ROWS}
+    _arrival_sweep(env, rows, report)
+    _effort_row(env, rows, report)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    from .common import get_env
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale catalog (default: smoke)")
+    args = ap.parse_args()
+    env = get_env(smoke=not args.full)
+    rows: list[Row] = []
+    report = run(env, rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    eff = report["effort"]
+    print(f"\neffort-bucketed vs lock-step on {eff['workload']}: "
+          f"{eff['speedup']}x (pilot={eff['pilot_budget']}, "
+          f"{eff['n_heavy']}/{eff['n_heavy'] + eff['n_light']} heavy)",
+          file=sys.stderr)

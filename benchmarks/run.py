@@ -14,7 +14,7 @@ import sys
 
 from . import (ablation_updatestate, counters, q1_vknn, q2_range,
                q3_distjoin, q4_knnjoin, q5q6_category, q7_batch_qps,
-               q34_join_qps)
+               q8_sched_qps, q34_join_qps)
 from .common import Row, get_env
 
 BENCHES = {
@@ -24,6 +24,7 @@ BENCHES = {
     "q4": q4_knnjoin.run,
     "q5q6": q5q6_category.run,
     "q7": q7_batch_qps.run,
+    "q8": q8_sched_qps.run,
     "q34": q34_join_qps.run,
     "fig9": ablation_updatestate.run,
     "t5": counters.run,
@@ -36,8 +37,8 @@ def main(argv=None) -> None:
                     help="tiny corpus (CI-scale)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sweep: tiny corpus + fast subset "
-                         "(q1, q7, q34 joins, t5) — what scripts/smoke.sh "
-                         "runs")
+                         "(q1, q7, q8 scheduler, q34 joins, t5) — what "
+                         "scripts/smoke.sh runs")
     ap.add_argument("--only", default=None,
                     help="comma list of bench keys: " + ",".join(BENCHES))
     args = ap.parse_args(argv)
@@ -45,7 +46,7 @@ def main(argv=None) -> None:
     if args.only:
         keys = args.only.split(",")
     elif args.quick:
-        keys = ["q1", "q7", "q34", "t5"]
+        keys = ["q1", "q7", "q8", "q34", "t5"]
     else:
         keys = list(BENCHES)
     rows: list[Row] = []

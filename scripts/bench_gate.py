@@ -1,0 +1,121 @@
+#!/usr/bin/env python
+"""Benchmark regression gate: diff a fresh benchmark run against the
+committed baselines.
+
+Compares the working-tree ``BENCH_batch.json`` / ``BENCH_join.json``
+(freshly rewritten by ``benchmarks/run.py --quick``) against the versions
+committed at HEAD (``git show``), and fails on a QPS regression greater
+than the tolerance on the FLAT-path rows — the rows whose interpret-mode
+performance is stable enough to gate on (the ``*_ivf`` rows are
+straggler-dominated on CPU and tracked in the JSON, not gated).
+
+Rows gated:
+  * BENCH_batch.json: workloads.flat entries          (key: batch,  qps)
+  * BENCH_join.json:  workloads.q3_flat / q4_flat     (key: left_rows,
+                                                       qps_batch)
+
+Exit codes: 0 pass/skip (no committed baseline, or git unavailable),
+1 regression.  Tolerance: BENCH_GATE_TOL env var (default 0.20 = 20%).
+
+Usage:  python scripts/bench_gate.py        (after benchmarks/run.py --quick)
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+TOL = float(os.environ.get("BENCH_GATE_TOL", "0.20"))
+
+
+def _committed(path: str) -> dict | None:
+    try:
+        blob = subprocess.run(
+            ["git", "show", f"HEAD:{path}"], cwd=REPO, capture_output=True,
+            text=True, check=True).stdout
+        return json.loads(blob)
+    except (subprocess.CalledProcessError, FileNotFoundError,
+            json.JSONDecodeError):
+        return None
+
+
+def _fresh(path: str) -> dict | None:
+    full = os.path.join(REPO, path)
+    if not os.path.exists(full):
+        return None
+    with open(full) as f:
+        return json.load(f)
+
+
+def _same_config(name: str, base: dict, fresh: dict, fields: tuple) -> bool:
+    """Only compare runs with matching benchmark configuration — a smoke
+    run diffed against committed full-scale numbers (or vice versa) would
+    spuriously fail (or vacuously pass) the tolerance check."""
+    mismatched = {f: (base.get(f), fresh.get(f)) for f in fields
+                  if base.get(f) != fresh.get(f)}
+    if mismatched:
+        print(f"bench_gate: skip {name} — config mismatch vs committed "
+              f"baseline: {mismatched}")
+        return False
+    return True
+
+
+def _gate_rows(name: str, base_rows: list, fresh_rows: list, key: str,
+               qps_field: str, failures: list) -> int:
+    fresh_by_key = {e[key]: e for e in fresh_rows}
+    checked = 0
+    for b in base_rows:
+        f = fresh_by_key.get(b[key])
+        if f is None or qps_field not in b or qps_field not in f:
+            continue
+        checked += 1
+        floor = (1.0 - TOL) * b[qps_field]
+        if f[qps_field] < floor:
+            failures.append(
+                f"{name}[{key}={b[key]}].{qps_field}: "
+                f"{f[qps_field]:.1f} < {floor:.1f} "
+                f"(committed {b[qps_field]:.1f}, tol {TOL:.0%})")
+    return checked
+
+
+def main() -> int:
+    failures: list[str] = []
+    checked = 0
+
+    base = _committed("BENCH_batch.json")
+    fresh = _fresh("BENCH_batch.json")
+    if base and fresh and _same_config("BENCH_batch.json", base, fresh,
+                                       ("n_rows", "flat_rows", "dim", "k")):
+        checked += _gate_rows(
+            "batch.flat", base.get("workloads", {}).get("flat", []),
+            fresh.get("workloads", {}).get("flat", []),
+            "batch", "qps", failures)
+
+    base = _committed("BENCH_join.json")
+    fresh = _fresh("BENCH_join.json")
+    if base and fresh and _same_config("BENCH_join.json", base, fresh,
+                                       ("right_rows", "dim", "k")):
+        for wl in ("q3_flat", "q4_flat"):
+            checked += _gate_rows(
+                f"join.{wl}", base.get("workloads", {}).get(wl, []),
+                fresh.get("workloads", {}).get(wl, []),
+                "left_rows", "qps_batch", failures)
+
+    if checked == 0:
+        print("bench_gate: no committed baselines to compare against — skip")
+        return 0
+    if failures:
+        print(f"bench_gate: FAIL — {len(failures)} flat-path QPS "
+              f"regression(s) > {TOL:.0%}:")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print(f"bench_gate: OK — {checked} flat-path rows within {TOL:.0%} "
+          f"of committed QPS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # CI smoke: the tier-1 suite (fast tests only — `slow`-marked subprocess
 # integration tests are deselected by pytest.ini) plus the quick benchmark
-# sweep (q1 latency/recall, q7 batched QPS, q34 batch-native joins, t5
-# counters) on the tiny catalog — q34 exercises the join families end-to-end
-# on both the batch-native and the per-left-loop lowering.
+# sweep (q1 latency/recall, q7 batched QPS, q8 scheduler smoke, q34
+# batch-native joins, t5 counters) on the tiny catalog — q34 exercises the
+# join families end-to-end on both lowerings, q8 exercises the dynamic
+# batch scheduler (Poisson policies + effort-bucketed IVF) — then the
+# benchmark regression gate (scripts/bench_gate.py: fresh flat-path QPS
+# must stay within 20% of the committed BENCH_batch/BENCH_join baselines).
 #
 #   bash scripts/smoke.sh            # full smoke
 #   SMOKE_SLOW=1 bash scripts/smoke.sh   # also run the slow marker set
@@ -16,3 +19,4 @@ if [[ "${SMOKE_SLOW:-0}" == "1" ]]; then
     python -m pytest -x -q -m slow
 fi
 python -m benchmarks.run --quick
+python scripts/bench_gate.py

@@ -5,14 +5,33 @@ chain is: logical plan -> (semantic analysis + rewrite) -> physical builder ->
 traced JAX function -> jaxpr -> XLA HLO -> machine code.  CSE / DCE / constant
 folding (§6's "general passes") happen inside XLA.  One pipeline = one fused
 XLA computation; there is no operator interpretation at runtime.
+
+The compilation product is split in two (the size-bucketed execution stack,
+DESIGN.md §8):
+
+* :class:`CompiledPlan` — the shape-independent plan artifact: analysis,
+  plans, options, and the traced-but-unjitted single/batch pipeline
+  functions.  §6's "one plan, one executable" claim generalizes to "one
+  plan, one executable *per batch shape*" under serving traffic — which is
+  exactly the problem, because every distinct request-batch size Q retraces.
+* :class:`BucketedExecutor` — the runtime half: a lazy per-power-of-two
+  bucket executor cache.  A batch of Q queries pads up to the enclosing
+  bucket, runs the bucket's (single, reused) executable with a per-query
+  ``valid`` mask that makes pad queries inert at every layer (kernel mask
+  lanes, IVF ``active`` state), and slices outputs back to Q.
+
+:class:`CompiledQuery` remains the user-facing handle tying the two
+together (plus the exact-shape ``execute_batch`` used as the bit-parity
+reference and by callers with a fixed batch size).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .expr import Bindings, Param
 from .physical import (BATCH_BUILDERS, BUILDERS, JOIN_LOWERING_FAMILIES,
@@ -25,16 +44,162 @@ from .sql import parse_sql
 
 
 @dataclasses.dataclass
-class CompiledQuery:
+class CompiledPlan:
+    """Shape-independent compilation artifact (one per SQL + options).
+
+    ``batch_fn`` has the uniform signature
+    ``(arrays, binds, qvalid=None, probe_budget=None)``: every value in
+    ``binds`` carries a leading Q axis, ``qvalid`` is an optional (Q,) bool
+    marking size-bucket pad queries (inert: no results, zero counters), and
+    ``probe_budget`` is an optional per-query IVF cluster budget (the
+    straggler valve; ignored by index-less plans)."""
     sql: str
     analysis: Analysis
     logical_plan: PlanNode
     rewritten_plan: PlanNode
     options: EngineOptions
+    fn: Callable
+    batch_fn: Callable
+    batch_native: bool
+    batch_reason: str
+
+
+def _bucket_for(qn: int) -> int:
+    """Enclosing power-of-two size bucket (1, 2, 4, 8, ...)."""
+    if qn < 1:
+        raise ValueError(f"batch size must be >= 1, got {qn}")
+    return 1 << (qn - 1).bit_length()
+
+
+def _pad_leading(v, bucket: int) -> np.ndarray:
+    """Edge-pad the leading Q axis up to ``bucket`` (pad rows repeat the last
+    real row, so they are well-formed binds — correctness never depends on
+    their values; the ``valid`` mask makes them inert).
+
+    Host-side numpy on purpose: op-by-op jnp padding would compile a tiny
+    XLA program per DISTINCT Q, re-introducing exactly the per-batch-size
+    compile latency the bucket cache exists to kill."""
+    v = np.asarray(v)
+    pad = bucket - v.shape[0]
+    if pad == 0:
+        return v
+    return np.concatenate(
+        [v, np.broadcast_to(v[-1:], (pad,) + v.shape[1:])])
+
+
+class BucketedExecutor:
+    """Lazy per-(plan, bucket) executor cache — the serving execution tier.
+
+    One jitted executable exists per power-of-two bucket actually seen;
+    ``trace_counts[bucket]`` counts how many times that bucket's function was
+    (re)traced, so tests can assert the compile-once contract.  A batch of Q
+    requests pads to ``_bucket_for(Q)``, executes with ``valid[q] = q < Q``,
+    and slices every output leaf back to Q.  Pad queries are inert by
+    construction (kernel mask lanes / IVF ``active`` freeze), so bucketed
+    results are bit-identical to an exact-shape ``execute_batch``.
+    """
+
+    def __init__(self, plan: CompiledPlan, arrays: Any):
+        self.plan = plan
+        self.arrays = arrays
+        self._cache: dict[int, Any] = {}
+        self.trace_counts: dict[int, int] = {}
+
+    def bucket_for(self, qn: int) -> int:
+        return _bucket_for(qn)
+
+    @property
+    def buckets(self) -> list[int]:
+        """Buckets with a compiled executable (sorted)."""
+        return sorted(self._cache)
+
+    def executable(self, bucket: int):
+        """The (lazily jitted) executable for one bucket."""
+        if bucket not in self._cache:
+            self.trace_counts.setdefault(bucket, 0)
+
+            def run(arrays, binds, qvalid, probe_budget, _b=bucket):
+                self.trace_counts[_b] += 1      # advances only on (re)trace
+                return self.plan.batch_fn(arrays, binds, qvalid=qvalid,
+                                          probe_budget=probe_budget)
+
+            self._cache[bucket] = jax.jit(run)
+        return self._cache[bucket]
+
+    def run_padded(self, binds: dict, qn: int, probe_budget=None):
+        """Execute at bucket granularity WITHOUT slicing outputs back.
+
+        Returns (padded outputs, bucket, valid): every output leaf keeps its
+        leading bucket axis, so tests (and debuggers) can observe that pad
+        rows are inert — empty results, zero probe/distance counters."""
+        bucket = _bucket_for(qn)
+        padded = {k: _pad_leading(v, bucket) for k, v in binds.items()}
+        valid = np.arange(bucket) < qn
+        if probe_budget is not None:
+            budget = np.asarray(probe_budget, np.int32)
+            if budget.ndim >= 1 and budget.shape[0] == qn:
+                budget = _pad_leading(budget, bucket)
+            probe_budget = budget
+        out = self.executable(bucket)(self.arrays, padded, valid,
+                                      probe_budget)
+        return out, bucket, valid
+
+    def __call__(self, binds: dict, probe_budget=None):
+        """Bucketed execution: pad -> run bucket executable -> slice to Q.
+
+        Output slicing happens on host (numpy): a jnp slice would compile
+        one tiny executable per distinct Q — see :func:`_pad_leading`."""
+        qn = _stacked_qn(binds)
+        out, _bucket, _valid = self.run_padded(binds, qn, probe_budget)
+        return jax.tree.map(lambda v: np.asarray(v)[:qn], out)
+
+
+def _stacked_qn(binds: dict) -> int:
+    dims = [v.shape[0] for v in binds.values()
+            if hasattr(v, "ndim") and v.ndim >= 1]
+    if not dims:
+        raise ValueError("stacked binds carry no leading batch axis")
+    return dims[0]
+
+
+@dataclasses.dataclass
+class CompiledQuery:
+    """User-facing handle: plan artifact + per-bucket executor cache.
+
+    ``__call__`` runs the single-query executable; ``execute_batch`` runs the
+    exact-shape batch executable (one trace per distinct Q — the bit-parity
+    reference); ``execute_bucketed`` runs the size-bucketed serving path
+    (one executable per power-of-two bucket, any Q)."""
+    plan: CompiledPlan
     _jitted: Any
     _arrays: Any
-    _batch_jitted: Any = None
-    batch_native: bool = False
+    _batch_jitted: Any
+    executor: BucketedExecutor
+
+    # -- plan delegation (back-compat surface) ------------------------------
+    @property
+    def sql(self) -> str:
+        return self.plan.sql
+
+    @property
+    def analysis(self) -> Analysis:
+        return self.plan.analysis
+
+    @property
+    def logical_plan(self) -> PlanNode:
+        return self.plan.logical_plan
+
+    @property
+    def rewritten_plan(self) -> PlanNode:
+        return self.plan.rewritten_plan
+
+    @property
+    def options(self) -> EngineOptions:
+        return self.plan.options
+
+    @property
+    def batch_native(self) -> bool:
+        return self.plan.batch_native
 
     def __call__(self, **binds):
         return self._jitted(self._arrays, dict(binds))
@@ -51,16 +216,47 @@ class CompiledQuery:
         The vmap-of-scalar fallback survives only under
         ``join_lowering='perleft'`` (the benchmark baseline).  Every output
         gains a leading Q axis; stats report per-query counters (per
-        (bind set, left row) for joins)."""
+        (bind set, left row) for joins).
+
+        NOTE: each distinct Q traces a fresh executable.  Serving traffic
+        with varying batch sizes should use :meth:`execute_bucketed`."""
         binds = self._stack_binds(binds_list, stacked)
         return self._batch_jitted(self._arrays, binds)
+
+    def execute_bucketed(self, binds_list: list[dict] | None = None,
+                         probe_budget=None, **stacked):
+        """Size-bucketed batch execution (the serving path).
+
+        Semantically identical to :meth:`execute_batch` (bit-identical
+        outputs) but pads Q up to the enclosing power-of-two bucket and
+        reuses ONE compiled executable per bucket, so arbitrary request-batch
+        sizes cost at most log2(max_batch) compilations.  ``probe_budget``
+        (scalar or (Q,) int, cluster units) optionally caps each query's IVF
+        probes — the effort-bucket valve used by serving/scheduler.py."""
+        binds = self._stack_binds(binds_list, stacked)
+        return self.executor(binds, probe_budget=probe_budget)
 
     def _stack_binds(self, binds_list, stacked) -> dict:
         if binds_list is not None:
             if stacked:
                 raise TypeError("pass binds_list OR keyword binds, not both")
+            if not binds_list:
+                raise ValueError("binds_list is empty")
             keys = binds_list[0].keys()
-            return {k: jnp.stack([jnp.asarray(b[k]) for b in binds_list])
+            for i, b in enumerate(binds_list):
+                missing = keys - b.keys()
+                extra = b.keys() - keys
+                if missing or extra:
+                    offending = sorted(missing | extra)[0]
+                    kind = "missing" if offending in missing else "unexpected"
+                    raise ValueError(
+                        f"ragged binds_list: binds_list[{i}] has {kind} key "
+                        f"{offending!r} (binds_list[0] keys: "
+                        f"{sorted(keys)})")
+            # host-side stack: a jnp.stack over N request arrays compiles a
+            # fresh concatenate per DISTINCT N — per-batch-size compile
+            # latency the bucketed serving path exists to kill
+            return {k: np.stack([np.asarray(b[k]) for b in binds_list])
                     for k in keys}
         binds = {k: jnp.asarray(v) for k, v in stacked.items()}
         qe = self.analysis.query_expr
@@ -83,7 +279,10 @@ class CompiledQuery:
         if bad:
             raise ValueError(f"stacked binds disagree on batch size {qn}: "
                              f"{bad}")
-        return {k: jnp.broadcast_to(v, (qn,)) if v.ndim == 0 else v
+        # scalar broadcast on host (numpy): jnp.broadcast_to would compile
+        # one tiny executable per distinct Q
+        return {k: (np.broadcast_to(np.asarray(v), (qn,)) if v.ndim == 0
+                    else v)
                 for k, v in binds.items()}
 
     def lower(self, **binds):
@@ -91,18 +290,9 @@ class CompiledQuery:
         return self._jitted.lower(self._arrays, dict(binds))
 
     def explain(self) -> str:
-        qc = self.analysis.query_class
-        if not self.batch_native:
-            batch = "vmap-of-scalar fallback (perleft join lowering)"
-        elif qc in (QueryClass.DIST_JOIN, QueryClass.KNN_JOIN,
-                    QueryClass.CATEGORY_JOIN):
-            batch = ("native (bind sets x left rows flattened into one "
-                     "kernel-level query batch)")
-        else:
-            batch = "native (query-tiled kernels / multi-cluster probes)"
         out = [f"-- engine: {self.options.engine}",
                f"-- class:  {self.analysis.query_class.value}",
-               f"-- batch:  {batch}",
+               f"-- batch:  {self.plan.batch_reason}",
                "-- logical plan:", self.logical_plan.pretty(),
                "-- rewritten plan:", self.rewritten_plan.pretty()]
         return "\n".join(out)
@@ -133,6 +323,53 @@ def _gather_arrays(a: Analysis, catalog: Catalog) -> dict:
     return arrays
 
 
+def _vmap_fallback(fn: Callable) -> Callable:
+    """vmap-of-scalar batch fallback with the uniform batch_fn signature.
+
+    Pad queries cannot be skipped here (the scalar pipeline has no valid
+    lane), so inertness is enforced on the way out: invalid queries report
+    zero counters and all-False validity.  ``probe_budget`` has no lane
+    either and is ignored — callers that depend on it (effort bucketing)
+    must check ``batch_native`` first (serving/scheduler.py does)."""
+
+    def bfn(arrs, binds, qvalid=None, probe_budget=None):
+        out = jax.vmap(lambda b: fn(arrs, b))(binds)
+        if qvalid is None:
+            return out
+        masked = {}
+        for key, v in out.items():
+            if key in ("stats", "count"):
+                masked[key] = jax.tree.map(
+                    lambda s: jnp.where(
+                        qvalid.reshape((-1,) + (1,) * (s.ndim - 1)), s, 0),
+                    v)
+            elif hasattr(v, "dtype") and v.dtype == jnp.bool_:
+                masked[key] = v & qvalid.reshape(
+                    (-1,) + (1,) * (v.ndim - 1))
+            else:
+                masked[key] = v
+        return masked
+
+    return bfn
+
+
+def _batch_lowering(a: Analysis, options: EngineOptions):
+    """(batch_builder | None, batch_native, human-readable reason)."""
+    qc = a.query_class
+    batch_builder = BATCH_BUILDERS.get(qc)
+    if batch_builder is None:
+        return None, False, (f"vmap-of-scalar fallback (no native batch "
+                             f"builder registered for class {qc.value})")
+    if options.join_lowering == "perleft" and qc in JOIN_LOWERING_FAMILIES:
+        return None, False, "vmap-of-scalar fallback (perleft join lowering)"
+    if qc in JOIN_LOWERING_FAMILIES:
+        return batch_builder, True, ("native (bind sets x left rows "
+                                     "flattened into one kernel-level "
+                                     "query batch)")
+    return batch_builder, True, ("native (query-tiled kernels / "
+                                 "multi-cluster probes)")
+
+
 def compile_query(sql: str, catalog: Catalog,
                   options: EngineOptions | None = None,
                   **static_binds) -> CompiledQuery:
@@ -152,15 +389,13 @@ def compile_query(sql: str, catalog: Catalog,
     builder = BUILDERS[a.query_class]
     fn = builder(a, catalog, options, Bindings(static_binds))
     arrays = _gather_arrays(a, catalog)
-    jitted = jax.jit(fn)
-    batch_builder = BATCH_BUILDERS.get(a.query_class)
-    batch_native = batch_builder is not None and not (
-        options.join_lowering == "perleft"
-        and a.query_class in JOIN_LOWERING_FAMILIES)
+    batch_builder, batch_native, batch_reason = _batch_lowering(a, options)
     if batch_native:
         bfn = batch_builder(a, catalog, options, Bindings(static_binds))
     else:
-        def bfn(arrs, binds, _fn=fn):
-            return jax.vmap(lambda b: _fn(arrs, b))(binds)
-    return CompiledQuery(sql, a, plan, rewritten, options, jitted, arrays,
-                         jax.jit(bfn), batch_native)
+        bfn = _vmap_fallback(fn)
+    compiled_plan = CompiledPlan(sql, a, plan, rewritten, options, fn, bfn,
+                                 batch_native, batch_reason)
+    executor = BucketedExecutor(compiled_plan, arrays)
+    return CompiledQuery(compiled_plan, jax.jit(fn), arrays, jax.jit(bfn),
+                         executor)

@@ -196,14 +196,23 @@ def _flat_topk(opts: EngineOptions, flat: FlatIndex, q, k, row_mask):
     return flat.topk(q, k, row_mask)
 
 
+def _flat_evals(qvalid, m: int, n: int) -> jnp.ndarray:
+    """Per-query flat-scan distance-eval counters; size-bucket pad queries
+    (qvalid False) contribute zero."""
+    evals = jnp.full((m,), n, jnp.int32)
+    return evals if qvalid is None else jnp.where(qvalid, evals, 0)
+
+
 def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
-                           qs, radius, row_mask, capacity: int):
+                           qs, radius, row_mask, capacity: int,
+                           qvalid=None):
     """Flat range scan over a (M, d) query batch, compacted to ``capacity``.
 
     Dispatch: the query-tiled Pallas kernel (``use_pallas``) or a vmapped
-    exact scan.  ``radius`` is a scalar or (M,); ``row_mask`` None or (M, N).
-    Results are ordered best-first (ascending order key).  Returns
-    (ids (M, P), sims, valid, count (M,), per-row stats) with
+    exact scan.  ``radius`` is a scalar or (M,); ``row_mask`` None or (M, N);
+    ``qvalid`` None or (M,) bool (size-bucket pad queries register no hits
+    and zero counters).  Results are ordered best-first (ascending order
+    key).  Returns (ids (M, P), sims, valid, count (M,), per-row stats) with
     P = min(capacity, N)."""
     m, n = qs.shape[0], corpus.shape[0]
     cap = min(int(capacity), n)
@@ -212,7 +221,7 @@ def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
         from ..kernels.ops import fused_range_topk_batch
         ids, sims, valid, count = fused_range_topk_batch(
             corpus, qs, radius, row_mask, metric, cap,
-            interpret=opts.interpret_pallas)
+            interpret=opts.interpret_pallas, qvalid=qvalid)
     else:
         flat = FlatIndex(metric, corpus)
         if row_mask is None:
@@ -220,6 +229,8 @@ def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
                 qs, radius)
         else:
             hit, raw = jax.vmap(flat.range_mask)(qs, radius, row_mask)
+        if qvalid is not None:
+            hit = hit & qvalid[:, None]
         keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
         neg, sel = jax.lax.top_k(-keys, cap)                   # row-wise
         valid = jnp.isfinite(-neg)
@@ -227,7 +238,7 @@ def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
         sims = jnp.where(valid, jnp.take_along_axis(raw, sel, axis=1), 0.0)
         count = jnp.sum(hit, axis=1)
     stats = {"probes": jnp.zeros((m,), jnp.int32),
-             "distance_evals": jnp.full((m,), n, jnp.int32)}
+             "distance_evals": _flat_evals(qvalid, m, n)}
     return ids, sims, valid, count, stats
 
 
@@ -256,6 +267,21 @@ def _flatten_left_batch(lvec, binds: dict, mask_b):
     rm = (jax.vmap(mask_b)(binds).reshape(qn * nleft, -1)
           if mask_b else None)
     return qn, nleft, qs, rm
+
+
+def _flatten_valid_budget(qvalid, probe_budget, qn: int, nleft: int):
+    """Expand per-bind-set ``qvalid`` (Q,) and ``probe_budget`` (scalar |
+    (Q,) | (Q, L)) to the flattened (Q·L,) query-batch layout."""
+    fq = (None if qvalid is None
+          else jnp.repeat(jnp.asarray(qvalid, jnp.bool_), nleft))
+    if probe_budget is None:
+        fb = None
+    else:
+        b = jnp.asarray(probe_budget, jnp.int32)
+        if b.ndim == 1:
+            b = b[:, None]
+        fb = jnp.broadcast_to(b, (qn, nleft)).reshape(-1)
+    return fq, fb
 
 
 # ---------------------------------------------------------------------------
@@ -396,7 +422,7 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
     index = catalog.index_for(a.right_table, a.right_vector)
     cfg = dataclasses.replace(opts.probe, capacity=opts.max_pairs)
 
-    def core(arrays, qs, radius, rm):
+    def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         m = qs.shape[0]
         radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
@@ -404,10 +430,12 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
             idx = arrays["index"]
             if opts.engine == "chase":
                 ids, sims, valid, count, stats = ivf_range_batch(
-                    idx, corpus, qs, radius, rm, cfg)
+                    idx, corpus, qs, radius, rm, cfg,
+                    probe_budget=probe_budget, qvalid=qvalid)
             else:
                 ids, _s, valid, count, stats = ivf_range_batch(
-                    idx, corpus, qs, radius, None, cfg)
+                    idx, corpus, qs, radius, None, cfg,
+                    probe_budget=probe_budget, qvalid=qvalid)
                 safe = jnp.maximum(ids, 0)
                 raw = distance_values(metric, corpus[safe],
                                       qs[:, None, :])          # REDUNDANT
@@ -421,7 +449,7 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
                 # identical across lowerings
             return ids, sims, valid, count, stats
         return _flat_range_topk_batch(opts, metric, corpus, qs, radius, rm,
-                                      opts.max_pairs)
+                                      opts.max_pairs, qvalid=qvalid)
 
     return core
 
@@ -459,13 +487,15 @@ def build_dist_join_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     core = _dist_join_core(a, catalog, opts)
     radius_expr = a.radius
 
-    def fn(arrays, binds):
+    def fn(arrays, binds, qvalid=None, probe_budget=None):
         qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
                                                 mask_b)
+        fq, fb = _flatten_valid_budget(qvalid, probe_budget, qn, nleft)
         radius = jnp.broadcast_to(
             jax.vmap(lambda b: evaluate(radius_expr, rtab, b))(binds), (qn,))
         ids, sims, valid, counts, stats = core(
-            arrays, qs, jnp.repeat(radius, nleft), rm)
+            arrays, qs, jnp.repeat(radius, nleft), rm, qvalid=fq,
+            probe_budget=fb)
         pairs = ids.shape[1]
         shape = (qn, nleft, pairs)
         return {"qid": jnp.broadcast_to(
@@ -556,14 +586,15 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
     index = catalog.index_for(a.right_table, a.right_vector)
     cfg = opts.probe
 
-    def core(arrays, qs, rm):
+    def core(arrays, qs, rm, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         m, n = qs.shape[0], corpus.shape[0]
         if opts.engine == "chase" and index is not None:
             # R2: ANN top-k, all left rows in one probe batch — the 7500x
             # path with the matvec loop batched away
             ids, sims, valid, stats = ivf_topk_batch(
-                arrays["index"], corpus, qs, k, rm, cfg)
+                arrays["index"], corpus, qs, k, rm, cfg,
+                probe_budget=probe_budget, qvalid=qvalid)
         elif opts.engine == "brute_sort":
             # Fig. 5a plan: window sorts the WHOLE partition (|B| log |B|)
             # per left row — the full sort is the measured inefficiency
@@ -571,6 +602,8 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
             keys = order_key(metric, raw)                     # (M, N)
             if rm is not None:
                 keys = jnp.where(rm, keys, jnp.inf)
+            if qvalid is not None:
+                keys = jnp.where(qvalid[:, None], keys, jnp.inf)
             perm = jnp.argsort(keys, axis=1)       # full sort, on purpose
             sel = perm[:, :k]
             skeys = jnp.take_along_axis(keys, sel, axis=1)
@@ -580,13 +613,13 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
                              -skeys if metric.is_similarity() else skeys,
                              0.0)
             stats = {"probes": jnp.zeros((m,), jnp.int32),
-                     "distance_evals": jnp.full((m,), n, jnp.int32)}
+                     "distance_evals": _flat_evals(qvalid, m, n)}
         else:  # brute (compiled top-k; LingoDB-V-like)
             if opts.use_pallas:
                 from ..kernels.ops import fused_scan_topk_batch
                 ids, sims, valid = fused_scan_topk_batch(
                     corpus, qs, k, rm, metric,
-                    interpret=opts.interpret_pallas)
+                    interpret=opts.interpret_pallas, qvalid=qvalid)
             else:
                 flat = FlatIndex(metric, corpus)
                 if rm is None:
@@ -595,8 +628,12 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 else:
                     ids, sims, valid = jax.vmap(
                         lambda q, r: flat.topk(q, k, r))(qs, rm)
+                if qvalid is not None:
+                    valid = valid & qvalid[:, None]
+                    ids = jnp.where(valid, ids, -1)
+                    sims = jnp.where(valid, sims, 0.0)
             stats = {"probes": jnp.zeros((m,), jnp.int32),
-                     "distance_evals": jnp.full((m,), n, jnp.int32)}
+                     "distance_evals": _flat_evals(qvalid, m, n)}
         return ids, sims, valid, stats
 
     return core
@@ -636,10 +673,12 @@ def build_knn_join_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                                  a.right_alias)
     core = _knn_join_core(a, catalog, opts, k)
 
-    def fn(arrays, binds):
+    def fn(arrays, binds, qvalid=None, probe_budget=None):
         qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
                                                 mask_b)
-        ids, sims, valid, stats = core(arrays, qs, rm)
+        fq, fb = _flatten_valid_budget(qvalid, probe_budget, qn, nleft)
+        ids, sims, valid, stats = core(arrays, qs, rm, qvalid=fq,
+                                       probe_budget=fb)
         shape = (qn, nleft, k)
         return {"qid": jnp.broadcast_to(
                     jnp.arange(nleft, dtype=jnp.int32)[None, :, None], shape),
@@ -747,7 +786,7 @@ def _category_core(opts: EngineOptions, metric: Metric, index,
     cfg = dataclasses.replace(opts.probe, num_categories=C, k_per_category=k)
     use_update_state = opts.engine == "chase"
 
-    def core(arrays, qs, radius, rm):
+    def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         cats = arrays["categories"]
         m = qs.shape[0]
@@ -757,22 +796,26 @@ def _category_core(opts: EngineOptions, metric: Metric, index,
             idx = arrays["index"]
             if use_update_state:
                 ids, sims, valid, count, stats = ivf_range_category_batch(
-                    idx, corpus, cats, qs, radius, rm, cfg)
+                    idx, corpus, cats, qs, radius, rm, cfg,
+                    probe_budget=probe_budget, qvalid=qvalid)
             else:
                 ids, sims, valid, count, stats = ivf_range_batch(
-                    idx, corpus, qs, radius, rm, cfg)
+                    idx, corpus, qs, radius, rm, cfg,
+                    probe_budget=probe_budget, qvalid=qvalid)
             if opts.engine == "vbase":
                 safe = jnp.maximum(ids, 0)
                 raw = distance_values(metric, corpus[safe],
                                       qs[:, None, :])          # REDUNDANT
                 sims = jnp.where(valid, raw, 0.0)
                 if vbase_extra_evals:
+                    extra = (cfg.capacity if qvalid is None
+                             else jnp.where(qvalid, cfg.capacity, 0))
                     stats = dict(stats)
-                    stats["distance_evals"] = stats["distance_evals"] \
-                        + cfg.capacity
+                    stats["distance_evals"] = stats["distance_evals"] + extra
         else:
             ids, sims, valid, count, stats = _flat_range_topk_batch(
-                opts, metric, corpus, qs, radius, rm, cfg.capacity)
+                opts, metric, corpus, qs, radius, rm, cfg.capacity,
+                qvalid=qvalid)
         keys = jnp.where(valid, order_key(metric, sims), jnp.inf)
         bcats = jnp.where(valid, cats[jnp.maximum(ids, 0)], -1)
         cids, csims, cvalid = _rank_per_category_batch(
@@ -857,13 +900,15 @@ def build_category_partition_batch(a: Analysis, catalog: Catalog,
     core = _category_core(opts, metric, index, C, k, vbase_extra_evals=True)
     radius_expr = a.radius
 
-    def fn(arrays, binds):
+    def fn(arrays, binds, qvalid=None, probe_budget=None):
         qs = jnp.asarray(binds[qparam.name])                      # (Q, D)
         qn = qs.shape[0]
         radius = jnp.broadcast_to(
             jax.vmap(lambda b: evaluate(radius_expr, table, b))(binds), (qn,))
         row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
-        cids, csims, cvalid, stats = core(arrays, qs, radius, row_mask)
+        cids, csims, cvalid, stats = core(arrays, qs, radius, row_mask,
+                                          qvalid=qvalid,
+                                          probe_budget=probe_budget)
         return {"ids": cids, "sim": csims, "valid": cvalid,
                 "category": jnp.broadcast_to(
                     jnp.arange(C, dtype=jnp.int32)[None, :, None],
@@ -925,13 +970,15 @@ def build_category_join_batch(a: Analysis, catalog: Catalog,
     core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False)
     radius_expr = a.radius
 
-    def fn(arrays, binds):
+    def fn(arrays, binds, qvalid=None, probe_budget=None):
         qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
                                                 mask_b)
+        fq, fb = _flatten_valid_budget(qvalid, probe_budget, qn, nleft)
         radius = jnp.broadcast_to(
             jax.vmap(lambda b: evaluate(radius_expr, rtab, b))(binds), (qn,))
         cids, csims, cvalid, stats = core(
-            arrays, qs, jnp.repeat(radius, nleft), rm)
+            arrays, qs, jnp.repeat(radius, nleft), rm, qvalid=fq,
+            probe_budget=fb)
         shape = (qn, nleft, C, k)
         return {"qid": jnp.broadcast_to(
                     jnp.arange(nleft, dtype=jnp.int32)[None, :, None, None],
@@ -1037,7 +1084,7 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     index = catalog.index_for(a.table, a.vector_column)
     cfg = opts.probe
 
-    def fn(arrays, binds):
+    def fn(arrays, binds, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         n = corpus.shape[0]
         qs = jnp.asarray(binds[qparam.name])                     # (Q, D)
@@ -1045,22 +1092,26 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
         row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
         if opts.engine == "chase" and index is not None:
             idx: IVFIndex = arrays["index"]
-            ids, sims, valid, stats = ivf_topk_batch(idx, corpus, qs, k,
-                                                     row_mask, cfg)
+            ids, sims, valid, stats = ivf_topk_batch(
+                idx, corpus, qs, k, row_mask, cfg,
+                probe_budget=probe_budget, qvalid=qvalid)
         elif opts.engine == "vbase" and index is not None:
             idx = arrays["index"]
-            ids, _sims, valid, stats = ivf_topk_batch(idx, corpus, qs, k,
-                                                      row_mask, cfg)
+            ids, _sims, valid, stats = ivf_topk_batch(
+                idx, corpus, qs, k, row_mask, cfg,
+                probe_budget=probe_budget, qvalid=qvalid)
             ids, sims, valid = jax.vmap(
                 lambda q, i, v: _resort_redundant(metric, corpus, q, i, v, k)
             )(qs, ids, valid)
+            extra = k if qvalid is None else jnp.where(qvalid, k, 0)
             stats = dict(stats)
-            stats["distance_evals"] = stats["distance_evals"] + k
+            stats["distance_evals"] = stats["distance_evals"] + extra
         elif opts.engine == "pase" and index is not None:
             idx = arrays["index"]
             kk = min(opts.pase_oversample * k, n)
-            ids_o, sims_o, valid_o, stats = ivf_topk_batch(idx, corpus, qs,
-                                                           kk, None, cfg)
+            ids_o, sims_o, valid_o, stats = ivf_topk_batch(
+                idx, corpus, qs, kk, None, cfg,
+                probe_budget=probe_budget, qvalid=qvalid)
 
             def post(ids_q, sims_q, valid_q, rm_q):
                 if rm_q is not None:
@@ -1086,7 +1137,7 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 from ..kernels.ops import fused_scan_topk_batch
                 ids, sims, valid = fused_scan_topk_batch(
                     corpus, qs, k, row_mask, metric,
-                    interpret=opts.interpret_pallas)
+                    interpret=opts.interpret_pallas, qvalid=qvalid)
             else:
                 flat = FlatIndex(metric, corpus)
                 if row_mask is None:
@@ -1095,8 +1146,12 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 else:
                     ids, sims, valid = jax.vmap(
                         lambda q, rm: flat.topk(q, k, rm))(qs, row_mask)
+                if qvalid is not None:
+                    valid = valid & qvalid[:, None]
+                    ids = jnp.where(valid, ids, -1)
+                    sims = jnp.where(valid, sims, 0.0)
             stats = {"probes": jnp.zeros((qn,), jnp.int32),
-                     "distance_evals": jnp.full((qn,), n, jnp.int32)}
+                     "distance_evals": _flat_evals(qvalid, qn, n)}
         return {"ids": ids, "sim": sims, "valid": valid, "stats": stats}
 
     return fn
@@ -1115,7 +1170,7 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     def radius_of(binds):
         return evaluate(radius_expr, table, binds)
 
-    def fn(arrays, binds):
+    def fn(arrays, binds, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         n = corpus.shape[0]
         qs = jnp.asarray(binds[qparam.name])                      # (Q, D)
@@ -1125,11 +1180,13 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
         if opts.engine == "chase" and index is not None:
             idx = arrays["index"]
             ids, sims, valid, count, stats = ivf_range_batch(
-                idx, corpus, qs, radius, row_mask, cfg)
+                idx, corpus, qs, radius, row_mask, cfg,
+                probe_budget=probe_budget, qvalid=qvalid)
         elif opts.engine == "vbase" and index is not None:
             idx = arrays["index"]
             ids, _sims, valid, count, stats = ivf_range_batch(
-                idx, corpus, qs, radius, None, cfg)
+                idx, corpus, qs, radius, None, cfg,
+                probe_budget=probe_budget, qvalid=qvalid)
 
             def post(q, ids_q, valid_q, r_q, rm_q):
                 safe = jnp.maximum(ids_q, 0)
@@ -1146,12 +1203,15 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
             else:
                 sims, valid = jax.vmap(post)(qs, ids, valid, radius, row_mask)
             count = jnp.sum(valid, axis=1)
+            extra = (cfg.capacity if qvalid is None
+                     else jnp.where(qvalid, cfg.capacity, 0))
             stats = dict(stats)
-            stats["distance_evals"] = stats["distance_evals"] + cfg.capacity
+            stats["distance_evals"] = stats["distance_evals"] + extra
         else:
             # PASE/pgvector cannot route range queries to the ANN index (§2.3)
             ids, sims, valid, count, stats = _flat_range_topk_batch(
-                opts, metric, corpus, qs, radius, row_mask, cfg.capacity)
+                opts, metric, corpus, qs, radius, row_mask, cfg.capacity,
+                qvalid=qvalid)
         return {"ids": ids, "sim": sims, "valid": valid, "count": count,
                 "stats": stats}
 

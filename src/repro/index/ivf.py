@@ -66,6 +66,12 @@ class ProbeConfig:
     no_new_category_stop: int = 2   # Alg.2: clusters w/o new category
     num_categories: int = 0         # static category cardinality (Alg.2)
     k_per_category: int = 10        # Alg.2 K
+    # per-query cluster budget for the BATCHED probes (0 = unlimited): the
+    # user-facing straggler valve — a query that exhausts its budget freezes
+    # with its best-so-far results instead of holding the lock-step batch
+    # hostage.  A runtime ``probe_budget`` argument (scalar or (Q,)) overrides
+    # this static default per call.
+    probe_budget: int = 0
 
 
 def build_ivf(key: jax.Array, vectors: jnp.ndarray, nlist: int,
@@ -108,6 +114,16 @@ def build_ivf(key: jax.Array, vectors: jnp.ndarray, nlist: int,
 # ---------------------------------------------------------------------------
 # shared probe plumbing
 # ---------------------------------------------------------------------------
+
+def _max_probes(index: IVFIndex, cfg: ProbeConfig) -> int:
+    """Cluster cap for the sequential probes: ``max_probes`` bounded by the
+    index size, tightened by the ``probe_budget`` knob when set (the same
+    per-query budget semantics as the batched probes' runtime argument)."""
+    cap = min(cfg.max_probes, index.nlist)
+    if cfg.probe_budget > 0:
+        cap = min(cap, cfg.probe_budget)
+    return cap
+
 
 def _cluster_order(index: IVFIndex, q: jnp.ndarray):
     """Clusters sorted by ascending centroid order-key; returns (order, keys,
@@ -172,7 +188,7 @@ def ivf_topk(index: IVFIndex, corpus: jnp.ndarray, q: jnp.ndarray, k: int,
     ('counter'), or provably cannot ('bound').  Returns
     (ids(k,), sims(k,), valid(k,), stats)."""
     order, _, bounds = _cluster_order(index, q)
-    max_probes = min(cfg.max_probes, index.nlist)
+    max_probes = _max_probes(index, cfg)
 
     def cond(state):
         p, bk, bi, no_imp, evals = state
@@ -221,7 +237,7 @@ def ivf_range(index: IVFIndex, corpus: jnp.ndarray, q: jnp.ndarray,
     test ends it exactly ('bound').  Returns (ids(capacity,), sims, valid,
     count, stats)."""
     order, _, bounds = _cluster_order(index, q)
-    max_probes = min(cfg.max_probes, index.nlist)
+    max_probes = _max_probes(index, cfg)
     radius_key = order_key(index.metric, jnp.asarray(radius, jnp.float32))
     capacity = cfg.capacity
 
@@ -296,7 +312,7 @@ def ivf_range_category(index: IVFIndex, corpus: jnp.ndarray,
     K = cfg.k_per_category
     assert C > 0, "category probe needs static num_categories"
     order, _, bounds = _cluster_order(index, q)
-    max_probes = min(cfg.max_probes, index.nlist)
+    max_probes = _max_probes(index, cfg)
     radius_key = order_key(index.metric, jnp.asarray(radius, jnp.float32))
     capacity = cfg.capacity
 
@@ -414,6 +430,22 @@ def _apply_budget(active, probes, probe_budget, qn: int):
     budget = jnp.broadcast_to(jnp.asarray(probe_budget, jnp.int32), (qn,))
     return active & (probes < budget)
 
+
+def _resolve_budget(probe_budget, cfg: ProbeConfig):
+    """Runtime budget argument wins; else the cfg.probe_budget knob
+    (0 = unlimited -> None)."""
+    if probe_budget is not None:
+        return probe_budget
+    return cfg.probe_budget if cfg.probe_budget > 0 else None
+
+
+def _active_init(qvalid, qn: int):
+    """Initial per-query active mask: size-bucket pad queries (qvalid False)
+    never probe — their buffers, counters, and stats stay at zero."""
+    if qvalid is None:
+        return jnp.ones((qn,), jnp.bool_)
+    return jnp.asarray(qvalid, jnp.bool_).reshape(qn)
+
 def _round_schedule(index: IVFIndex, cfg: ProbeConfig):
     """(B, n_rounds, max_probes) for the round-granular probe loop."""
     max_probes = min(cfg.max_probes, index.nlist)
@@ -463,7 +495,8 @@ def _scan_clusters_batch(index: IVFIndex, corpus: jnp.ndarray,
 def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
                    k: int, row_mask: jnp.ndarray | None = None,
                    cfg: ProbeConfig = ProbeConfig(),
-                   probe_budget: jnp.ndarray | None = None):
+                   probe_budget: jnp.ndarray | None = None,
+                   qvalid: jnp.ndarray | None = None):
     """Batched filtered top-k: (Q, d) queries, multi-cluster probe rounds.
 
     ``row_mask`` is None, a shared (N,) mask, or per-query (Q, N).  Returns
@@ -472,9 +505,13 @@ def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
     (same probe prefix, same merges); with B > 1 each query probes a prefix
     that is a superset of its sequential prefix, so its kth key can only
     improve.  ``probe_budget`` optionally caps each query's probed clusters
-    individually (scalar or (Q,) int), the straggler valve for heterogeneous
-    batches — a budgeted query freezes with its best-so-far results."""
+    individually (scalar or (Q,) int; defaults to cfg.probe_budget when > 0),
+    the straggler valve for heterogeneous batches — a budgeted query freezes
+    with its best-so-far results.  ``qvalid`` (None | (Q,) bool) marks
+    size-bucket pad queries: they start with ``active=False``, so they never
+    probe and their counters stay zero."""
     qn = qs.shape[0]
+    probe_budget = _resolve_budget(probe_budget, cfg)
     B, n_rounds, max_probes = _round_schedule(index, cfg)
     order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
 
@@ -521,7 +558,7 @@ def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
     init = (jnp.int32(0),
             jnp.full((qn, k), INF), jnp.full((qn, k), -1, jnp.int32),
             jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
-            jnp.zeros((qn,), jnp.int32), jnp.ones((qn,), jnp.bool_))
+            jnp.zeros((qn,), jnp.int32), _active_init(qvalid, qn))
     _, bk, bi, _, probes, evals, _ = jax.lax.while_loop(cond, body, init)
     valid = jnp.isfinite(bk)
     sims = jnp.where(valid, -bk if index.metric.is_similarity() else bk, 0.0)
@@ -533,15 +570,19 @@ def ivf_topk_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
 def ivf_range_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
                     radius, row_mask: jnp.ndarray | None = None,
                     cfg: ProbeConfig = ProbeConfig(),
-                    probe_budget: jnp.ndarray | None = None):
+                    probe_budget: jnp.ndarray | None = None,
+                    qvalid: jnp.ndarray | None = None):
     """Batched DR-SF probe (Algorithm 1 over a query batch).
 
     ``radius`` is a scalar or per-query (Q,) raw metric values.  Returns
     (ids (Q, capacity), sims, valid, count (Q,), stats with (Q,) arrays).
     probe_batch=1 matches :func:`ivf_range` per query exactly.
-    ``probe_budget`` (scalar or (Q,) clusters) individually caps stragglers;
-    results are ordered by probe discovery, not by key."""
+    ``probe_budget`` (scalar or (Q,) clusters; defaults to cfg.probe_budget
+    when > 0) individually caps stragglers; ``qvalid`` marks size-bucket pad
+    queries (inert: empty buffers, zero counters); results are ordered by
+    probe discovery, not by key."""
     qn = qs.shape[0]
+    probe_budget = _resolve_budget(probe_budget, cfg)
     B, n_rounds, max_probes = _round_schedule(index, cfg)
     order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
     radius_key = order_key(index.metric, jnp.broadcast_to(
@@ -602,7 +643,7 @@ def ivf_range_batch(index: IVFIndex, corpus: jnp.ndarray, qs: jnp.ndarray,
             jnp.full((qn, capacity), INF),
             jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.bool_),
             jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
-            jnp.zeros((qn,), jnp.int32), jnp.ones((qn,), jnp.bool_))
+            jnp.zeros((qn,), jnp.int32), _active_init(qvalid, qn))
     (_, out_ids, out_keys, count, _hi, _oc, probes, evals,
      _a) = jax.lax.while_loop(cond, body, init)
     valid = out_ids >= 0
@@ -618,7 +659,8 @@ def ivf_range_category_batch(index: IVFIndex, corpus: jnp.ndarray,
                              categories: jnp.ndarray, qs: jnp.ndarray,
                              radius, row_mask: jnp.ndarray | None = None,
                              cfg: ProbeConfig = ProbeConfig(num_categories=8),
-                             probe_budget: jnp.ndarray | None = None):
+                             probe_budget: jnp.ndarray | None = None,
+                             qvalid: jnp.ndarray | None = None):
     """Batched category probe (Algorithm 2 over a query batch).
 
     The updateState record table gains a leading Q axis: per-query seen mask
@@ -627,12 +669,15 @@ def ivf_range_category_batch(index: IVFIndex, corpus: jnp.ndarray,
     termination per query; as everywhere on the batched path the ``active``
     mask freezes finished queries at ROUND granularity and counters advance
     in CLUSTER units.  probe_batch=1 matches :func:`ivf_range_category` per
-    query exactly.  Returns (ids (Q, capacity), sims, valid, count (Q,),
-    stats with per-query (Q,) arrays)."""
+    query exactly.  ``probe_budget`` defaults to cfg.probe_budget when > 0;
+    ``qvalid`` marks size-bucket pad queries (inert).  Returns
+    (ids (Q, capacity), sims, valid, count (Q,), stats with per-query (Q,)
+    arrays)."""
     C = cfg.num_categories
     K = cfg.k_per_category
     assert C > 0, "category probe needs static num_categories"
     qn = qs.shape[0]
+    probe_budget = _resolve_budget(probe_budget, cfg)
     B, n_rounds, max_probes = _round_schedule(index, cfg)
     order, bounds = _order_pad_batch(index, qs, B, n_rounds, max_probes)
     radius_key = order_key(index.metric, jnp.broadcast_to(
@@ -717,7 +762,7 @@ def ivf_range_category_batch(index: IVFIndex, corpus: jnp.ndarray,
             jnp.zeros((qn, C), jnp.bool_), jnp.zeros((qn, C), jnp.int32),
             jnp.full((qn, C, K), INF), jnp.zeros((qn,), jnp.int32),
             jnp.zeros((qn,), jnp.int32), jnp.zeros((qn,), jnp.int32),
-            jnp.ones((qn,), jnp.bool_))
+            _active_init(qvalid, qn))
     (_, out_ids, out_keys, count, _hi, _oc, seen, _cn, _kth, _nn, probes,
      evals, _a) = jax.lax.while_loop(cond, body, init)
     valid = out_ids >= 0

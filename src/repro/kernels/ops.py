@@ -57,6 +57,19 @@ def _block_sizes(n: int, qn: int, block_q: int, block_n: int):
     return bq, bn
 
 
+def _qvalid_row_i8(qvalid: jnp.ndarray | None, qn: int,
+                   block_q: int) -> jnp.ndarray:
+    """Normalize a per-query valid vector (None | (Q,) bool) to the padded
+    (1, Qpad) int8 row the batched kernels AND into their mask layout.
+    Query columns beyond Q (tile padding) are invalid either way."""
+    if qvalid is None:
+        row = jnp.ones((1, qn), jnp.int8)
+    else:
+        assert qvalid.shape == (qn,), (qvalid.shape, qn)
+        row = qvalid.astype(jnp.int8).reshape(1, qn)
+    return _pad_dim(row, block_q, 1, value=0)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "metric", "block_n",
                                              "interpret"))
 def fused_scan_topk(corpus: jnp.ndarray, query: jnp.ndarray, k: int,
@@ -135,13 +148,17 @@ def pairwise_keys(queries: jnp.ndarray, corpus: jnp.ndarray, metric: Metric,
 def fused_scan_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
                           row_mask: jnp.ndarray | None, metric: Metric,
                           block_q: int = 128, block_n: int = 1024,
-                          interpret: bool | None = None):
+                          interpret: bool | None = None,
+                          qvalid: jnp.ndarray | None = None):
     """Batched fused scan+filter+top-k: Q queries in one kernel launch.
 
     ``queries`` is (Q, D); ``row_mask`` is None, a shared (N,) mask, or a
     per-query (Q, N) mask.  Each (q-block, n-block) grid cell runs ONE
     (BLOCK_N, D)·(D, BLOCK_Q) MXU matmul — the per-tile corpus read is
     amortized over BLOCK_Q queries instead of re-streamed per query.
+    ``qvalid`` (None | (Q,) bool) marks size-bucket pad queries: an invalid
+    query's column folds into the mask layout as a (1, Qpad) lane, so it
+    emits no candidates (all ids -1).
     Returns (ids (Q, k), sims raw-metric (Q, k), valid (Q, k))."""
     interpret = _resolve_interpret(interpret)
     n, d = corpus.shape
@@ -150,7 +167,8 @@ def fused_scan_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
     cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), bn, 0)
     qp = _pad_dim(_pad_dim(queries.astype(jnp.float32), LANE, 1), bq, 0)
     mp = _mask_nq_i8(row_mask, n, qn, bn, bq)
-    keys, ids = scan_topk_batch_pallas(cp, qp, mp, k, metric, block_q=bq,
+    qv = _qvalid_row_i8(qvalid, qn, bq)
+    keys, ids = scan_topk_batch_pallas(cp, qp, mp, qv, k, metric, block_q=bq,
                                        block_n=bn, interpret=interpret)
     # stage 2: query-major layout, rebase local ids by n-block, merge per row
     num_n = cp.shape[0] // bn
@@ -172,9 +190,12 @@ def fused_scan_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, k: int,
 def fused_range_scan_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
                            row_mask: jnp.ndarray | None, metric: Metric,
                            block_q: int = 128, block_n: int = 1024,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           qvalid: jnp.ndarray | None = None):
     """Batched fused range scan. ``radius`` is a scalar or (Q,) raw values.
 
+    ``qvalid`` (None | (Q,) bool) marks size-bucket pad queries: an invalid
+    query registers no hits and a zero count.
     Returns (hit (Q, N), raw sims (Q, N), counts (Q,))."""
     from ..core.expr import order_key
     interpret = _resolve_interpret(interpret)
@@ -184,11 +205,13 @@ def fused_range_scan_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
     cp = _pad_dim(_pad_dim(corpus.astype(jnp.float32), LANE, 1), bn, 0)
     qp = _pad_dim(_pad_dim(queries.astype(jnp.float32), LANE, 1), bq, 0)
     mp = _mask_nq_i8(row_mask, n, qn, bn, bq)
+    qv = _qvalid_row_i8(qvalid, qn, bq)
     rk = order_key(metric, jnp.broadcast_to(
         jnp.asarray(radius, jnp.float32), (qn,)))
     rk = _pad_dim(rk.reshape(1, qn), bq, 1, value=-jnp.inf)  # padded q: no hit
     keys, hits, counts = range_scan_batch_pallas(
-        cp, qp, rk, mp, metric, block_q=bq, block_n=bn, interpret=interpret)
+        cp, qp, rk, mp, qv, metric, block_q=bq, block_n=bn,
+        interpret=interpret)
     keys = keys[:n, :qn].T                                  # (Q, N)
     hit = hits[:n, :qn].T != 0
     raw = jnp.where(hit, -keys if metric.is_similarity() else keys, 0.0)
@@ -201,14 +224,16 @@ def fused_range_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
                            row_mask: jnp.ndarray | None, metric: Metric,
                            capacity: int, block_q: int = 128,
                            block_n: int = 1024,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           qvalid: jnp.ndarray | None = None):
     """Fused range scan + per-query compaction to a fixed result buffer.
 
     The join families' flat lowering: every (masked) left row is one lane of
     the query-tiled range kernel, and each lane's (N,) hit vector compacts to
     its best-``capacity`` results.  ``radius`` is a scalar or (Q,) raw metric
     values; ``row_mask`` follows the (Npad, Qm) normalization of
-    :func:`fused_range_scan_batch` (None | shared (N,) | per-query (Q, N)).
+    :func:`fused_range_scan_batch` (None | shared (N,) | per-query (Q, N));
+    ``qvalid`` (None | (Q,) bool) marks size-bucket pad queries (no hits).
     Ordering policy: ascending order key (best first; the IVF range probes
     instead emit probe-discovery order).  Returns (ids (Q, capacity), sims
     raw-metric, valid (Q, capacity), count (Q,) total hits before
@@ -216,7 +241,7 @@ def fused_range_topk_batch(corpus: jnp.ndarray, queries: jnp.ndarray, radius,
     from ..core.expr import order_key
     hit, raw, counts = fused_range_scan_batch(
         corpus, queries, radius, row_mask, metric, block_q=block_q,
-        block_n=block_n, interpret=interpret)
+        block_n=block_n, interpret=interpret, qvalid=qvalid)
     keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
     neg, sel = jax.lax.top_k(-keys, capacity)                # row-wise
     valid = jnp.isfinite(-neg)

@@ -71,15 +71,19 @@ def range_scan_pallas(corpus: jnp.ndarray, query: jnp.ndarray,
     return keys, hits, counts
 
 
-def _range_batch_kernel(q_ref, r_ref, c_ref, m_ref, keys_out, hits_out,
-                        cnt_out, *, metric: Metric):
+def _range_batch_kernel(q_ref, r_ref, qv_ref, c_ref, m_ref, keys_out,
+                        hits_out, cnt_out, *, metric: Metric):
     """Grid (num_q_blocks, num_n_blocks): one corpus-tile matmul amortized
-    over the query tile; per-query radius row; per-(tile, query) hit counts."""
+    over the query tile; per-query radius row; per-(tile, query) hit counts.
+
+    ``qv_ref`` is the (1, BLOCK_Q) per-query valid row (size-bucket padding):
+    a pad query's column registers no hits and a zero count, without
+    materializing a (N, Q) mask when the row mask is shared."""
     block = c_ref[...].astype(jnp.float32)               # (B, D)
     qs = q_ref[...].astype(jnp.float32)                  # (BQ, D)
     radius_row = r_ref[...]                              # (1, BQ)
     keys = _keys_from_block_batch(block, qs, metric)     # (B, BQ)
-    mask = m_ref[...] != 0                               # (B, BQ) or (B, 1)
+    mask = (m_ref[...] != 0) & (qv_ref[...] != 0)        # (B, BQ) or (B, 1)
     hit = mask & (keys <= radius_row)
     keys_out[...] = jnp.where(hit, keys, INF)
     hits_out[...] = hit.astype(jnp.int8)
@@ -90,17 +94,20 @@ def _range_batch_kernel(q_ref, r_ref, c_ref, m_ref, keys_out, hits_out,
                                              "interpret"))
 def range_scan_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
                             radius_keys: jnp.ndarray, mask_i8: jnp.ndarray,
+                            qvalid_i8: jnp.ndarray,
                             metric: Metric, block_q: int = 128,
                             block_n: int = 1024, interpret: bool = True):
     """Query-tiled fused range scan.
 
     Inputs pre-padded: corpus (Npad, Dpad), queries (Qpad, Dpad),
-    radius_keys (1, Qpad) order keys, mask (Npad, Qm) int8, Qm ∈ {1, Qpad}.
+    radius_keys (1, Qpad) order keys, mask (Npad, Qm) int8, Qm ∈ {1, Qpad},
+    qvalid (1, Qpad) int8 — the per-query valid lane for size-bucket padding.
     Returns ((Npad, Qpad) masked keys, (Npad, Qpad) int8 hits,
     (num_n_blocks, Qpad) per-block per-query hit counts)."""
     n, d = corpus.shape
     qn = queries.shape[0]
     assert n % block_n == 0 and qn % block_q == 0
+    assert qvalid_i8.shape == (1, qn), (qvalid_i8.shape, qn)
     num_n = n // block_n
     num_q = qn // block_q
     per_query_mask = mask_i8.shape[1] != 1
@@ -114,6 +121,7 @@ def range_scan_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
         in_specs=[
             pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
             pl.BlockSpec((1, block_q), lambda i, j: (0, i)),
+            pl.BlockSpec((1, block_q), lambda i, j: (0, i)),  # q-valid row
             pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
             mspec,
         ],
@@ -128,5 +136,5 @@ def range_scan_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
             jax.ShapeDtypeStruct((num_n, qn), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, radius_keys, corpus, mask_i8)
+    )(queries, radius_keys, qvalid_i8, corpus, mask_i8)
     return keys, hits, counts

@@ -132,16 +132,22 @@ def _extract_topk_cols(keys_bq: jnp.ndarray, k: int):
     return out_keys, out_ids
 
 
-def _scan_topk_batch_kernel(q_ref, c_ref, m_ref, keys_out, ids_out, *,
+def _scan_topk_batch_kernel(q_ref, qv_ref, c_ref, m_ref, keys_out, ids_out, *,
                             k: int, metric: Metric):
     """Grid (num_q_blocks, num_n_blocks): one (BLOCK_N, D)·(D, BLOCK_Q) MXU
     matmul per tile, per-query in-register top-k.  Emits (k, BLOCK_Q) blocks
-    of LOCAL row indices; the wrapper rebases by n-block and transposes."""
+    of LOCAL row indices; the wrapper rebases by n-block and transposes.
+
+    ``qv_ref`` is the (1, BLOCK_Q) per-query valid row (size-bucket padding):
+    it folds into the mask layout, so a pad query's column is all-INF and
+    emits no candidates — without materializing a (N, Q) mask when the row
+    mask is shared."""
     block = c_ref[...].astype(jnp.float32)               # (B, D)
     qs = q_ref[...].astype(jnp.float32)                  # (BQ, D)
     keys = _keys_from_block_batch(block, qs, metric)     # (B, BQ)
     mask = m_ref[...]                                    # (B, BQ) or (B, 1)
-    keys = jnp.where(mask != 0, keys, INF)
+    live = (mask != 0) & (qv_ref[...] != 0)              # broadcasts (1, BQ)
+    keys = jnp.where(live, keys, INF)
     out_keys, out_ids = _extract_topk_cols(keys, k)      # (k, BQ) each
     keys_out[...] = out_keys
     ids_out[...] = out_ids
@@ -151,18 +157,21 @@ def _scan_topk_batch_kernel(q_ref, c_ref, m_ref, keys_out, ids_out, *,
                    static_argnames=("k", "metric", "block_q", "block_n",
                                     "interpret"))
 def scan_topk_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
-                           mask_i8: jnp.ndarray, k: int, metric: Metric,
+                           mask_i8: jnp.ndarray, qvalid_i8: jnp.ndarray,
+                           k: int, metric: Metric,
                            block_q: int = 128, block_n: int = 1024,
                            interpret: bool = True):
     """Stage 1 (Pallas), query-tiled: per (q-block, n-block) top-k candidates.
 
     Inputs are pre-padded by ops.py: corpus (Npad, Dpad), queries (Qpad, Dpad),
-    mask (Npad, Qm) int8 with Qm ∈ {1, Qpad} (shared vs per-query masks).
+    mask (Npad, Qm) int8 with Qm ∈ {1, Qpad} (shared vs per-query masks), and
+    qvalid (1, Qpad) int8 — the per-query valid lane for size-bucket padding.
     Returns (num_n_blocks*k, Qpad) keys and LOCAL ids (kernel-native layout;
     ops.py rebases ids by n-block and transposes to query-major)."""
     n, d = corpus.shape
     qn = queries.shape[0]
     assert n % block_n == 0 and qn % block_q == 0, (n, block_n, qn, block_q)
+    assert qvalid_i8.shape == (1, qn), (qvalid_i8.shape, qn)
     num_n = n // block_n
     num_q = qn // block_q
     per_query_mask = mask_i8.shape[1] != 1
@@ -175,6 +184,7 @@ def scan_topk_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
         grid=(num_q, num_n),
         in_specs=[
             pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),   # query tile
+            pl.BlockSpec((1, block_q), lambda i, j: (0, i)),   # q-valid row
             pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),   # corpus tile
             mspec,                                             # mask tile
         ],
@@ -187,7 +197,7 @@ def scan_topk_batch_pallas(corpus: jnp.ndarray, queries: jnp.ndarray,
             jax.ShapeDtypeStruct((num_n * k, qn), jnp.int32),
         ],
         interpret=interpret,
-    )(queries, corpus, mask_i8)
+    )(queries, qvalid_i8, corpus, mask_i8)
     return keys, ids
 
 

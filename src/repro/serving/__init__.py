@@ -1,4 +1,8 @@
 from .decode import build_serve_step, generate, prefill
 from .rag import HybridRetriever
+from .scheduler import (BatchScheduler, SchedulerConfig, latency_stats,
+                        run_effort_bucketed)
 
-__all__ = ["build_serve_step", "generate", "prefill", "HybridRetriever"]
+__all__ = ["build_serve_step", "generate", "prefill", "HybridRetriever",
+           "BatchScheduler", "SchedulerConfig", "latency_stats",
+           "run_effort_bucketed"]

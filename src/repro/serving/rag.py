@@ -73,8 +73,52 @@ class HybridRetriever:
                        safety_class=0):
         """Native batched retrieval for a serving batch: one compiled
         pipeline runs the query-tiled scan / multi-cluster IVF probes for the
-        whole batch (per-query filters supported via broadcast binds)."""
-        out = self.compiled.execute_batch(
+        whole batch (per-query filters supported via broadcast binds).
+
+        Rides the size-bucketed executor (DESIGN.md §8): any batch size
+        reuses one compiled executable per power-of-two bucket, so serving
+        traffic with varying batch sizes never recompiles per shape."""
+        out = self.compiled.execute_bucketed(
             query_embedding=jnp.asarray(query_embeddings),
             min_freshness=min_freshness, safety_class=safety_class)
         return out["ids"], out["sim"], out["valid"]
+
+    def make_scheduler(self, max_batch: int = 32, max_wait_ms: float = 2.0,
+                       pilot_budget: int = 0):
+        """A :class:`~repro.serving.scheduler.BatchScheduler` over this
+        retriever's compiled query — the serving front-end that coalesces
+        arriving retrieval requests into bucketed batch executions
+        (``pilot_budget`` > 0 adds effort-bucketed IVF probing)."""
+        from .scheduler import BatchScheduler, SchedulerConfig
+        return BatchScheduler(self.compiled, SchedulerConfig(
+            max_batch=max_batch, max_wait_ms=max_wait_ms,
+            pilot_budget=pilot_budget))
+
+    def retrieve_for_decode(self, query_embeddings, doc_token_embeds,
+                            min_freshness=0.0, safety_class=0,
+                            scheduler=None):
+        """Prefill hookup: retrieve each sequence's docs and build the
+        (B, K, d_model) embedding prefix to prepend to the prompt embeds
+        (``serving.decode.prefill(embeds=concat([prefix, prompt], axis=1))``).
+
+        ``doc_token_embeds`` maps doc id -> model-space embedding
+        (n_docs, d_model); invalid retrieval slots contribute zeros.  When a
+        ``scheduler`` (see :meth:`make_scheduler`) is given, the requests
+        join its coalescing queue — the decode batch rides the same bucketed
+        executables as every other retrieval client."""
+        qs = jnp.asarray(query_embeddings)
+        if scheduler is not None:
+            rids = [scheduler.submit(query_embedding=q,
+                                     min_freshness=min_freshness,
+                                     safety_class=safety_class) for q in qs]
+            scheduler.flush()
+            outs = [scheduler.result(rid) for rid in rids]
+            ids = jnp.stack([o["ids"] for o in outs])
+            valid = jnp.stack([o["valid"] for o in outs])
+        else:
+            ids, _sims, valid = self.retrieve_batch(
+                qs, min_freshness=min_freshness, safety_class=safety_class)
+        safe = jnp.maximum(ids, 0)
+        prefix = jnp.asarray(doc_token_embeds)[safe]          # (B, K, d_model)
+        prefix = jnp.where(valid[..., None], prefix, 0.0)
+        return prefix, ids, valid

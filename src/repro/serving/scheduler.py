@@ -1,0 +1,266 @@
+"""Dynamic batch scheduler — the serving front-end of the size-bucketed
+execution stack (DESIGN.md §8).
+
+Serving traffic does not arrive in fixed-size batches: requests trickle in,
+and every distinct batch size Q used to cost a fresh trace while lock-step
+IVF rounds made every query in a batch pay for its slowest straggler.  This
+module closes both gaps on top of :class:`~repro.core.compiler.BucketedExecutor`:
+
+* **Coalescing** (:class:`BatchScheduler`): arriving requests queue until the
+  batch fills (``max_batch``) or the OLDEST queued request has waited
+  ``max_wait_ms`` — the deadline rule — then the whole batch drains into the
+  bucketed executor (padded to the enclosing power-of-two bucket, outputs
+  sliced per request).  Any traffic pattern touches at most
+  log2(max_batch)+1 executables per plan.
+* **Effort bucketing** (:func:`run_effort_bucketed`): a two-phase defense
+  against lock-step straggler coupling.  Phase 1 runs the whole batch with a
+  small per-query ``probe_budget`` (the pilot); queries that terminate
+  *naturally* under the pilot are final (a budget can only freeze a query at
+  or past its budget, so ``probes < pilot`` proves natural termination, and
+  per-query probe state is independent — phase-1 results for light queries
+  are bit-identical to a full run).  Phase 2 re-runs only the heavy
+  remainder — a smaller batch, so its extra rounds no longer drag the light
+  majority through ``Q x B x cap`` gathers.  The merged result is
+  bit-identical to the lock-step run.  Join plans effort-bucket at bind-set
+  granularity through this API; heterogeneous join LEFT rows effort-bucket
+  in their query-batch form (the PR-2 flattening: left rows ARE the query
+  batch — benchmarks/q8_sched_qps.py measures exactly that shape).
+
+A virtual-clock queueing simulation (:meth:`BatchScheduler.simulate`) backs
+benchmarks/q8_sched_qps.py: arrivals advance on a virtual clock, service
+times are measured wall-clock of the real batch executions.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    """Coalescing + effort-bucketing knobs.
+
+    ``max_wait_ms`` bounds the queueing latency the scheduler may add: a
+    request never waits more than ``max_wait_ms`` for co-batched company
+    before execution starts (it may still wait for the server to free up).
+    ``pilot_budget`` > 0 enables two-phase effort-bucketed IVF execution
+    (cluster units; a sensible pilot is ``ProbeConfig.min_probes`` plus a
+    few rounds' worth of clusters)."""
+    max_batch: int = 64
+    max_wait_ms: float = 2.0
+    pilot_budget: int = 0
+
+
+@dataclasses.dataclass
+class SimRecord:
+    """One simulated request's timeline (seconds, virtual clock)."""
+    rid: int
+    arrival: float
+    start: float
+    finish: float
+    batch_size: int
+
+    @property
+    def latency(self) -> float:
+        return self.finish - self.arrival
+
+
+def _leading_probes(stats: dict) -> np.ndarray:
+    """Per-bind-set probe counters: joins report (Q, L) — reduce to the
+    per-bind-set maximum (a bind set is heavy if ANY of its left rows is)."""
+    probes = np.asarray(stats["probes"])
+    if probes.ndim > 1:
+        probes = probes.max(axis=tuple(range(1, probes.ndim)))
+    return probes
+
+
+def run_effort_bucketed(compiled, binds: dict, pilot_budget: int):
+    """Two-phase effort-bucketed execution of a stacked bind batch.
+
+    Returns ``(out, info)`` where ``out`` is bit-identical to
+    ``compiled.execute_bucketed`` on the same binds (lock-step) and ``info``
+    reports the phase split: ``n_light`` queries finished in the pilot,
+    ``n_heavy`` re-ran in the (smaller) phase-2 batch."""
+    if pilot_budget <= 0:
+        raise ValueError("pilot_budget must be positive")
+    executor = compiled.executor
+    if not compiled.batch_native:
+        # the vmap-of-scalar fallback has no probe_budget lane: a pilot run
+        # would execute the FULL unbudgeted batch and classify every query
+        # heavy — strictly more work than lock-step.  Run single-phase.
+        out = executor(binds)
+        qn = _leading_probes(out["stats"]).shape[0]
+        return out, {"n_light": qn, "n_heavy": 0,
+                     "pilot_budget": pilot_budget,
+                     "skipped": "plan has no native batched lowering"}
+    out1 = executor(binds, probe_budget=pilot_budget)
+    probes = _leading_probes(out1["stats"])
+    heavy = np.nonzero(probes >= pilot_budget)[0]
+    qn = probes.shape[0]
+    info = {"n_light": int(qn - heavy.size), "n_heavy": int(heavy.size),
+            "pilot_budget": pilot_budget}
+    if heavy.size == 0:
+        return out1, info
+    # host-side gather: a jnp fancy-index would compile per heavy-set shape
+    sub = {k: np.asarray(v)[heavy] for k, v in binds.items()}
+    out2 = executor(sub)
+    out1 = jax.tree.map(np.asarray, out1)
+    out2 = jax.tree.map(np.asarray, out2)
+
+    def scatter(a, b):
+        merged = np.array(a)
+        merged[heavy] = b
+        return merged
+
+    return jax.tree.map(scatter, out1, out2), info
+
+
+class BatchScheduler:
+    """Coalesce arriving requests into size-bucketed batch executions.
+
+    Online surface: ``submit(**binds)`` enqueues and returns a request id;
+    ``poll()`` drains a batch when due (full, or the oldest request's
+    ``max_wait_ms`` deadline expired); ``flush()`` drains everything;
+    ``result(rid)`` returns that request's sliced outputs.  One scheduler
+    serves one compiled plan (the serving deployment unit)."""
+
+    def __init__(self, compiled, config: SchedulerConfig = SchedulerConfig(),
+                 clock: Callable[[], float] = time.monotonic):
+        self.compiled = compiled
+        self.config = config
+        self.clock = clock
+        self._queue: collections.deque = collections.deque()
+        self._results: dict[int, Any] = {}
+        self._next_rid = 0
+
+    # -- online API ---------------------------------------------------------
+
+    def submit(self, **binds) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append((rid, binds, self.clock()))
+        return rid
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def due(self, now: float | None = None) -> bool:
+        """Deadline rule: drain when full OR the oldest request has waited
+        out its ``max_wait_ms`` coalescing window."""
+        if not self._queue:
+            return False
+        if len(self._queue) >= self.config.max_batch:
+            return True
+        now = self.clock() if now is None else now
+        oldest = self._queue[0][2]
+        return (now - oldest) * 1e3 >= self.config.max_wait_ms
+
+    def poll(self, now: float | None = None) -> list[int]:
+        """Drain ONE batch if due; returns the completed request ids."""
+        if not self.due(now):
+            return []
+        return self._drain()
+
+    def flush(self) -> list[int]:
+        """Drain everything queued, one max_batch execution at a time."""
+        done: list[int] = []
+        while self._queue:
+            done.extend(self._drain())
+        return done
+
+    def result(self, rid: int):
+        return self._results.pop(rid)
+
+    # -- execution ----------------------------------------------------------
+
+    def _drain(self) -> list[int]:
+        take = min(len(self._queue), self.config.max_batch)
+        entries = [self._queue.popleft() for _ in range(take)]
+        rids = [rid for rid, _, _ in entries]
+        out = self.execute([binds for _, binds, _ in entries])
+        for i, rid in enumerate(rids):
+            self._results[rid] = jax.tree.map(lambda v: v[i], out)
+        return rids
+
+    def execute(self, binds_list: list[dict]):
+        """Execute one coalesced batch through the bucketed executor
+        (effort-bucketed when ``pilot_budget`` > 0)."""
+        binds = self.compiled._stack_binds(binds_list, {})
+        if self.config.pilot_budget > 0:
+            out, _info = run_effort_bucketed(self.compiled, binds,
+                                             self.config.pilot_budget)
+            return out
+        return self.compiled.executor(binds)
+
+    def warm(self, sample_binds: dict, batch_sizes: list[int]) -> None:
+        """Pre-trace the bucket executables a traffic mix will touch (keeps
+        compile time out of latency measurements and first requests).
+
+        With ``pilot_budget`` > 0 both per-bucket variants are traced — the
+        budgeted phase-1 executable AND the unbudgeted phase-2 one — since
+        whether a drain reaches phase 2 depends on the data (all-identical
+        warm batches may never produce a heavy remainder)."""
+        for b in sorted({self.compiled.executor.bucket_for(s)
+                         for s in batch_sizes}):
+            stacked = self.compiled._stack_binds([sample_binds] * b, {})
+            self.compiled.executor(stacked)
+            if self.config.pilot_budget > 0 and self.compiled.batch_native:
+                self.compiled.executor(stacked,
+                                       probe_budget=self.config.pilot_budget)
+
+    # -- virtual-clock simulation -------------------------------------------
+
+    def simulate(self, arrivals: np.ndarray,
+                 binds_list: list[dict]) -> list[SimRecord]:
+        """Single-server queueing simulation of the coalescing policy.
+
+        ``arrivals`` are request arrival times in seconds (sorted ascending,
+        virtual clock); ``binds_list`` the matching per-request binds.  Batch
+        formation follows the deadline rule; service time is the measured
+        wall-clock of the REAL batch execution (warm the buckets first).
+        Returns per-request :class:`SimRecord` timelines."""
+        n = len(arrivals)
+        assert len(binds_list) == n
+        wait_s = self.config.max_wait_ms * 1e-3
+        server_free = 0.0
+        records: list[SimRecord] = []
+        i = 0
+        while i < n:
+            deadline = arrivals[i] + wait_s
+            close = max(deadline, server_free)
+            j = i
+            while (j < n and arrivals[j] <= close
+                   and (j - i) < self.config.max_batch):
+                j += 1
+            if j - i >= self.config.max_batch:
+                # the batch filled before the window closed
+                start = max(server_free, float(arrivals[j - 1]))
+            else:
+                start = close
+            t0 = time.perf_counter()
+            out = self.execute(binds_list[i:j])
+            jax.block_until_ready(jax.tree.leaves(out)[0])
+            exec_s = time.perf_counter() - t0
+            finish = start + exec_s
+            for r in range(i, j):
+                records.append(SimRecord(r, float(arrivals[r]), start,
+                                         finish, j - i))
+            server_free = finish
+            i = j
+        return records
+
+
+def latency_stats(records: list[SimRecord]) -> dict:
+    """p50/p95/mean latency (ms) + throughput (QPS) of a simulation run."""
+    lats = np.asarray([r.latency for r in records]) * 1e3
+    span = max(r.finish for r in records) - min(r.arrival for r in records)
+    return {"p50_ms": round(float(np.percentile(lats, 50)), 3),
+            "p95_ms": round(float(np.percentile(lats, 95)), 3),
+            "mean_ms": round(float(lats.mean()), 3),
+            "qps": round(len(records) / span, 1) if span > 0 else float("inf")}

@@ -1,0 +1,271 @@
+"""Size-bucketed execution stack (DESIGN.md §8): bucket-padding parity,
+pad-query inertness, and the compile-once-per-bucket contract.
+
+Contracts under test:
+* ``execute_bucketed`` (Q padded up to the enclosing power-of-two bucket,
+  outputs sliced back) is bit-identical to the exact-shape ``execute_batch``
+  for EVERY query class, on both the IVF and the fused-kernel flat paths —
+  the ``valid`` lane threads through kernels (mask layout) and probes
+  (``active`` init) without perturbing real queries.
+* pad queries are inert: empty results, all-False validity, and zero
+  probe/distance counters (observable via ``BucketedExecutor.run_padded``).
+* at most ONE executable exists per (plan, bucket) pair: Q=3 and Q=4 share
+  the bucket-4 executable (``trace_counts`` stays 1), Q=9 adds bucket 16.
+* ``ProbeConfig.probe_budget`` is a user-facing knob on every probe path.
+* ``_stack_binds`` rejects ragged ``binds_list`` with a clear error naming
+  the offending key; ``explain()`` reports the actual batch-lowering reason.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineOptions, Metric, compile_query
+from repro.core.compiler import _bucket_for
+from repro.core.physical import BATCH_BUILDERS
+from repro.core.semantics import QueryClass
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+
+PROBE = ProbeConfig(max_probes=16, capacity=128, termination="bound",
+                    probe_batch=2)
+
+Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+      "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2 = ("SELECT sample_id FROM images "
+      "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}")
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year >= ${y}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 3
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+
+
+@pytest.fixture(scope="module")
+def env():
+    from repro.data import make_laion_catalog
+
+    cat = make_laion_catalog(n_rows=1200, n_queries=4, dim=16, n_modes=8,
+                             num_categories=4, seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=16,
+                    metric=Metric.INNER_PRODUCT, iters=3)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -30, axis=1)[:, -30]))
+    return cat, radius
+
+
+def _qvecs(cat, qn: int) -> np.ndarray:
+    base = np.asarray(cat.table("queries")["embedding"])
+    rng = np.random.default_rng(3)
+    reps = -(-qn // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:qn]
+    return (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+
+
+def _binds_for(case: str, cat, radius: float, qn: int) -> dict:
+    rng = np.random.default_rng(7)
+    price = np.asarray(cat.table("laion")["price"])
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    if case == "q1":
+        return {"qv": _qvecs(cat, qn),
+                "p": np.quantile(price,
+                                 rng.uniform(0.3, 1.0, qn)).astype(
+                                     np.float32)}
+    if case == "q2":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(
+                    np.float32),
+                "d": np.quantile(dates, rng.uniform(0.2, 0.8, qn)).astype(
+                    np.int32)}
+    if case in ("q3", "q6"):
+        return {"r": (radius * rng.uniform(0.95, 1.0, qn)).astype(
+            np.float32)}
+    if case == "q4":
+        years = np.asarray(cat.table("movies")["release_year"])
+        return {"y": np.quantile(years, rng.uniform(0.1, 0.6, qn)).astype(
+            np.int32)}
+    if case == "q5":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(
+                    np.float32)}
+    raise ValueError(case)
+
+
+CASES = {
+    "q1": (Q1, dict(engine="chase", probe=PROBE)),
+    "q1_flat": (Q1, dict(engine="brute", use_pallas=True)),
+    "q2": (Q2, dict(engine="chase", probe=PROBE)),
+    "q2_flat": (Q2, dict(engine="brute", use_pallas=True)),
+    "q3": (Q3, dict(engine="chase", probe=PROBE, max_pairs=64)),
+    "q3_flat": (Q3, dict(engine="brute", use_pallas=True, max_pairs=64)),
+    "q4": (Q4, dict(engine="chase", probe=PROBE)),
+    "q5": (Q5, dict(engine="chase", probe=PROBE)),
+    "q6": (Q6, dict(engine="chase", probe=PROBE, max_pairs=64)),
+}
+
+
+def _case_binds(name: str, cat, radius: float, qn: int) -> dict:
+    return _binds_for(name.split("_")[0], cat, radius, qn)
+
+
+def _assert_tree_equal(a, b, ctx=""):
+    assert set(a) == set(b)
+    for key in a:
+        if key == "stats":
+            for sk in a["stats"]:
+                assert np.array_equal(np.asarray(a["stats"][sk]),
+                                      np.asarray(b["stats"][sk])), \
+                    f"{ctx}:stats.{sk}"
+        else:
+            assert np.array_equal(np.asarray(a[key]),
+                                  np.asarray(b[key])), f"{ctx}:{key}"
+
+
+# ---------------------------------------------------------------------------
+# bucket-padding parity: Q=3 in bucket 4, Q=9 in bucket 16
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+@pytest.mark.parametrize("qn", [3, 9])
+def test_bucketed_matches_exact_batch(env, case, qn):
+    cat, radius = env
+    sql, opts = CASES[case]
+    q = compile_query(sql, cat, EngineOptions(**opts))
+    binds = _case_binds(case, cat, radius, qn)
+    exact = q.execute_batch(**binds)
+    bucketed = q.execute_bucketed(**binds)
+    _assert_tree_equal(exact, bucketed, ctx=f"{case}@Q{qn}")
+    leading = jax.tree.leaves(bucketed)[0].shape[0]
+    assert leading == qn                        # outputs sliced back to Q
+
+
+# ---------------------------------------------------------------------------
+# pad queries are inert: zero counters, no results
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_pad_queries_inert(env, case):
+    cat, radius = env
+    sql, opts = CASES[case]
+    q = compile_query(sql, cat, EngineOptions(**opts))
+    qn = 3
+    binds = q._stack_binds(
+        None, {k: jnp.asarray(v)
+               for k, v in _case_binds(case, cat, radius, qn).items()})
+    out, bucket, valid = q.executor.run_padded(binds, qn)
+    assert bucket == 4 and not bool(np.asarray(valid)[qn:].any())
+    for sk, v in out["stats"].items():
+        assert (np.asarray(v)[qn:] == 0).all(), f"pad counters: {sk}"
+    assert not np.asarray(out["valid"])[qn:].any()
+    if "count" in out:
+        assert (np.asarray(out["count"])[qn:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# compile-once-per-bucket: trace counters
+# ---------------------------------------------------------------------------
+
+def test_one_executable_per_bucket(env):
+    cat, radius = env
+    q = compile_query(Q1, cat, EngineOptions(engine="chase", probe=PROBE))
+    for qn in (3, 4, 9, 16, 2):
+        q.execute_bucketed(**_case_binds("q1", cat, radius, qn))
+    assert q.executor.buckets == [2, 4, 16]
+    assert all(n == 1 for n in q.executor.trace_counts.values()), \
+        q.executor.trace_counts
+    # re-running any served size stays cached
+    q.execute_bucketed(**_case_binds("q1", cat, radius, 3))
+    assert q.executor.trace_counts[_bucket_for(3)] == 1
+
+
+# ---------------------------------------------------------------------------
+# probe_budget: the user-facing straggler valve
+# ---------------------------------------------------------------------------
+
+def test_probe_budget_knob_caps_probes(env):
+    cat, radius = env
+    budget = 3
+    probe = ProbeConfig(max_probes=16, capacity=128, probe_batch=1,
+                        probe_budget=budget)
+    q = compile_query(Q1, cat, EngineOptions(engine="chase", probe=probe))
+    binds = _case_binds("q1", cat, radius, 5)
+    out = q.execute_batch(**binds)
+    assert (np.asarray(out["stats"]["probes"]) <= budget).all()
+    # runtime argument overrides the static knob
+    out2 = q.execute_bucketed(probe_budget=2, **binds)
+    assert (np.asarray(out2["stats"]["probes"]) <= 2).all()
+    # the single-query path honors the knob too
+    single = q(qv=binds["qv"][0], p=float(binds["p"][0]))
+    assert int(np.asarray(single["stats"]["probes"])) <= budget
+
+
+# ---------------------------------------------------------------------------
+# satellite fixes: ragged binds_list, explain() reason
+# ---------------------------------------------------------------------------
+
+def test_ragged_binds_list_raises_clear_error(env):
+    cat, radius = env
+    q = compile_query(Q1, cat, EngineOptions(engine="chase", probe=PROBE))
+    qv = _qvecs(cat, 2)
+    good = {"qv": qv[0], "p": 1.0}
+    bad = {"qv": qv[1], "radius": 1.0}          # wrong key name
+    with pytest.raises(ValueError, match=r"binds_list\[1\].*'p'"):
+        q.execute_batch(binds_list=[good, bad])
+    with pytest.raises(ValueError, match="ragged"):
+        q.execute_batch(binds_list=[good, {"qv": qv[1]}])
+
+
+def test_explain_reports_actual_fallback_reason(env, monkeypatch):
+    cat, radius = env
+    # a class with NO registered batch builder must not be labeled as the
+    # perleft join fallback
+    monkeypatch.delitem(BATCH_BUILDERS, QueryClass.VKNN_SF)
+    q = compile_query(Q1, cat, EngineOptions(engine="chase", probe=PROBE))
+    assert not q.batch_native
+    text = q.explain()
+    assert "no native batch builder" in text
+    assert "perleft join lowering" not in text
+    # the vmap fallback still executes, and bucketed execution still slices
+    binds = _case_binds("q1", cat, radius, 3)
+    _assert_tree_equal(q.execute_batch(**binds),
+                       q.execute_bucketed(**binds), ctx="fallback")
+
+
+def test_explain_perleft_reason(env):
+    cat, radius = env
+    q = compile_query(Q3, cat, EngineOptions(engine="chase", probe=PROBE,
+                                             join_lowering="perleft"))
+    assert "perleft join lowering" in q.explain()

@@ -1,0 +1,206 @@
+"""Dynamic batch scheduler (serving/scheduler.py): coalescing semantics,
+effort-bucketed IVF correctness, and the virtual-clock simulation.
+
+Contracts under test:
+* coalesced requests produce exactly the results of a direct batched
+  execution (per-request slicing is faithful);
+* the deadline rule: a drain triggers on a full batch OR when the oldest
+  request has waited ``max_wait_ms``, never before;
+* ``run_effort_bucketed`` (pilot probe budget -> heavy-query re-run) is
+  bit-identical to the lock-step bucketed run, light queries are final from
+  phase 1, and the heavy set re-runs in a smaller bucket;
+* the simulation serves every request with non-negative queueing delay and
+  batch sizes within the configured bounds.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineOptions, Metric, compile_query
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+from repro.serving.scheduler import (BatchScheduler, SchedulerConfig,
+                                     latency_stats, run_effort_bucketed)
+
+SQL = ("SELECT sample_id FROM products WHERE price < ${p} "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+
+
+@pytest.fixture(scope="module")
+def env():
+    from repro.data import make_laion_catalog
+
+    cat = make_laion_catalog(n_rows=1500, n_queries=8, dim=16, n_modes=8,
+                             seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=32,
+                    metric=Metric.INNER_PRODUCT, iters=3)
+    cat.register_index("products", "embedding", idx)
+    q = compile_query(SQL, cat, EngineOptions(
+        engine="chase",
+        probe=ProbeConfig(max_probes=32, probe_batch=2,
+                          termination="counter")))
+    return cat, q
+
+
+def _requests(cat, n, seed=1):
+    rng = np.random.default_rng(seed)
+    base = np.asarray(cat.table("queries")["embedding"])
+    price = np.asarray(cat.table("laion")["price"])
+    reps = -(-n // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:n]
+    qs = (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+    # heterogeneous selectivity: permissive filters terminate after few
+    # probes, selective ones keep probing -> a straggler-coupled batch
+    ps = np.quantile(price, rng.uniform(0.05, 1.0, n)).astype(np.float32)
+    return [dict(qv=jnp.asarray(qs[i]), p=jnp.float32(ps[i]))
+            for i in range(n)]
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# coalescing
+# ---------------------------------------------------------------------------
+
+def test_coalesced_results_match_direct_batch(env):
+    cat, q = env
+    reqs = _requests(cat, 5)
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=8, max_wait_ms=0.0))
+    rids = [sched.submit(**r) for r in reqs]
+    done = sched.flush()
+    assert sorted(done) == sorted(rids)
+    direct = jax.tree.map(np.asarray, q.execute_bucketed(
+        binds_list=[{k: np.asarray(v) for k, v in r.items()}
+                    for r in reqs]))
+    for i, rid in enumerate(rids):
+        got = jax.tree.map(np.asarray, sched.result(rid))
+        assert np.array_equal(got["ids"], direct["ids"][i])
+        assert np.array_equal(got["stats"]["probes"],
+                              direct["stats"]["probes"][i])
+
+
+def test_deadline_semantics(env):
+    cat, q = env
+    clock = FakeClock()
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=3, max_wait_ms=5.0),
+                           clock=clock)
+    reqs = _requests(cat, 3)
+    sched.submit(**reqs[0])
+    assert not sched.due()                 # neither full nor expired
+    assert sched.poll() == []
+    clock.t = 0.004
+    assert not sched.due()                 # 4ms < 5ms window
+    clock.t = 0.0051
+    assert sched.due()                     # oldest waited out its window
+    done = sched.poll()
+    assert len(done) == 1 and sched.pending() == 0
+    # full batch drains immediately, regardless of the window
+    clock.t = 1.0
+    for r in reqs:
+        sched.submit(**r)
+    assert sched.due()
+    assert len(sched.poll()) == 3
+
+
+# ---------------------------------------------------------------------------
+# effort bucketing
+# ---------------------------------------------------------------------------
+
+def test_effort_bucketed_is_bit_identical(env):
+    cat, q = env
+    reqs = _requests(cat, 12)
+    binds = q._stack_binds([{k: np.asarray(v) for k, v in r.items()}
+                            for r in reqs], {})
+    lock = jax.tree.map(np.asarray, q.executor(binds))
+    nat = np.asarray(lock["stats"]["probes"])
+    pilot = int(np.percentile(nat, 60)) + 1   # most queries finish in phase 1
+    eff, info = run_effort_bucketed(q, binds, pilot_budget=pilot)
+    assert info["n_light"] + info["n_heavy"] == len(reqs)
+    assert info["n_light"] > 0                # pilot actually splits the batch
+    for key in ("ids", "sim", "valid"):
+        assert np.array_equal(lock[key], np.asarray(eff[key])), key
+    for sk in lock["stats"]:
+        assert np.array_equal(lock["stats"][sk],
+                              np.asarray(eff["stats"][sk])), sk
+
+
+def test_effort_bucketed_through_scheduler(env):
+    cat, q = env
+    reqs = _requests(cat, 6)
+    plain = BatchScheduler(q, SchedulerConfig(max_batch=8, max_wait_ms=0.0))
+    effort = BatchScheduler(q, SchedulerConfig(max_batch=8, max_wait_ms=0.0,
+                                               pilot_budget=8))
+    outs = {}
+    for sched in (plain, effort):
+        rids = [sched.submit(**r) for r in reqs]
+        sched.flush()
+        outs[sched] = [jax.tree.map(np.asarray, sched.result(r))
+                       for r in rids]
+    for a, b in zip(outs[plain], outs[effort]):
+        assert np.array_equal(a["ids"], b["ids"])
+        assert np.array_equal(a["stats"]["probes"], b["stats"]["probes"])
+
+
+def test_effort_bucketed_skips_non_native_plans(env):
+    """The vmap fallback has no probe_budget lane: a pilot run would do
+    full work and mark everything heavy — effort bucketing must fall back
+    to single-phase instead of doubling the execution."""
+    from repro.data import make_laion_catalog
+    cat = make_laion_catalog(n_rows=800, n_queries=3, dim=16, n_modes=8,
+                             seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=16,
+                    metric=Metric.INNER_PRODUCT, iters=2)
+    for name in ("laion", "images"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sql = """
+    SELECT queries.id AS qid, images.sample_id AS tid
+    FROM queries JOIN images
+    ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+    """
+    q = compile_query(sql, cat, EngineOptions(
+        engine="chase", join_lowering="perleft", max_pairs=32,
+        probe=ProbeConfig(max_probes=8)))
+    assert not q.batch_native
+    binds = q._stack_binds(None, {"r": jnp.asarray(np.float32([2.0, 2.5]))})
+    lock = jax.tree.map(np.asarray, q.executor(binds))
+    out, info = run_effort_bucketed(q, binds, pilot_budget=4)
+    assert info["n_heavy"] == 0 and "skipped" in info
+    assert np.array_equal(lock["tid"], np.asarray(out["tid"]))
+
+
+def test_effort_bucketed_rejects_bad_pilot(env):
+    cat, q = env
+    binds = q._stack_binds([{k: np.asarray(v) for k, v in r.items()}
+                            for r in _requests(cat, 2)], {})
+    with pytest.raises(ValueError, match="pilot_budget"):
+        run_effort_bucketed(q, binds, pilot_budget=0)
+
+
+# ---------------------------------------------------------------------------
+# simulation
+# ---------------------------------------------------------------------------
+
+def test_simulation_serves_all_with_sane_timelines(env):
+    cat, q = env
+    n = 16
+    reqs = [{k: np.asarray(v) for k, v in r.items()}
+            for r in _requests(cat, n)]
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=4, max_wait_ms=2.0))
+    sched.warm(reqs[0], [1, 4])
+    rng = np.random.default_rng(5)
+    arrivals = np.sort(rng.exponential(0.002, n).cumsum())
+    records = sched.simulate(arrivals, reqs)
+    assert len(records) == n
+    assert all(r.start >= r.arrival for r in records)       # no time travel
+    assert all(r.finish > r.start for r in records)
+    assert all(1 <= r.batch_size <= 4 for r in records)
+    stats = latency_stats(records)
+    assert stats["p50_ms"] <= stats["p95_ms"]
