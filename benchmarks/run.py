@@ -14,7 +14,7 @@ import sys
 
 from . import (ablation_updatestate, counters, q1_vknn, q2_range,
                q3_distjoin, q4_knnjoin, q5q6_category, q7_batch_qps,
-               q8_sched_qps, q34_join_qps)
+               q8_sched_qps, q9_prepare_cache, q34_join_qps)
 from .common import Row, get_env
 
 BENCHES = {
@@ -25,6 +25,7 @@ BENCHES = {
     "q5q6": q5q6_category.run,
     "q7": q7_batch_qps.run,
     "q8": q8_sched_qps.run,
+    "q9": q9_prepare_cache.run,
     "q34": q34_join_qps.run,
     "fig9": ablation_updatestate.run,
     "t5": counters.run,
@@ -46,7 +47,7 @@ def main(argv=None) -> None:
     if args.only:
         keys = args.only.split(",")
     elif args.quick:
-        keys = ["q1", "q7", "q8", "q34", "t5"]
+        keys = ["q1", "q7", "q8", "q9", "q34", "t5"]
     else:
         keys = list(BENCHES)
     rows: list[Row] = []

@@ -4,6 +4,10 @@ A qwen2-style model serves batched requests; before decoding, each request
 runs a CHASE VKNN-SF query (similarity + freshness + safety filters) over a
 document corpus, and the retrieved doc tokens are prepended (RAG).
 
+The retriever rides the session API end to end: one Database session, one
+prepared Statement (plan-cached), batched retrieval through the
+size-bucketed executor, and an async submit/poll server from ``db.serve``.
+
   PYTHONPATH=src python examples/hybrid_serving.py
 """
 import os
@@ -36,7 +40,7 @@ def main():
     retriever = HybridRetriever.build(
         jnp.asarray(docs), jnp.asarray(freshness), jnp.asarray(safety), k=4)
     print(f"retriever over {n_docs} docs (CHASE VKNN-SF, fused filters)")
-    print(retriever.compiled.explain())
+    print(retriever.statement.explain())
 
     # batched requests
     batch, prompt_len = 4, 12
@@ -58,6 +62,17 @@ def main():
     # check filters held
     got = np.asarray(ids)[np.asarray(valid)]
     assert (freshness[got] >= 0.3).all() and (safety[got] == 0).all()
+
+    # async serving front-end: db.serve wraps the BatchScheduler over the
+    # SAME prepared statement (shared plan-cache entry + bucket executables)
+    server = retriever.db.serve(retriever.statement, max_batch=8,
+                                max_wait_ms=0.0)
+    rids = [server.submit(query_embedding=q, min_freshness=0.3,
+                          safety_class=0) for q in qemb]
+    server.flush()
+    sched_ids = np.stack([np.asarray(server.result(r)["ids"]) for r in rids])
+    assert np.array_equal(sched_ids, np.asarray(ids))
+    print("async submit/poll through db.serve matches direct batch  [ok]")
 
     doc_tokens = (np.asarray(ids) * 7919 % cfg.vocab_size).astype(np.int32)
     prefix = jnp.concatenate([jnp.asarray(doc_tokens), prompts], axis=1)

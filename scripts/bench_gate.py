@@ -13,6 +13,11 @@ Rows gated:
   * BENCH_batch.json: workloads.flat entries          (key: batch,  qps)
   * BENCH_join.json:  workloads.q3_flat / q4_flat     (key: left_rows,
                                                        qps_batch)
+  * BENCH_sched.json: poisson sched-policy rows       (key: rate_multiplier,
+                                                       qps) — the q8 arrival
+    sweep runs the deadline scheduler on the flat (index-less, fused-kernel)
+    plan, so its QPS is as timing-stable as the other flat rows; the
+    straggler-dominated effort row stays tracked-not-gated.
 
 Exit codes: 0 pass/skip (no committed baseline, or git unavailable),
 1 regression.  Tolerance: BENCH_GATE_TOL env var (default 0.20 = 20%).
@@ -102,6 +107,22 @@ def main() -> int:
                 f"join.{wl}", base.get("workloads", {}).get(wl, []),
                 fresh.get("workloads", {}).get(wl, []),
                 "left_rows", "qps_batch", failures)
+
+    base = _committed("BENCH_sched.json")
+    fresh = _fresh("BENCH_sched.json")
+    if base and fresh and _same_config("BENCH_sched.json", base, fresh,
+                                       ("sched_rows", "dim", "k",
+                                        "max_batch", "n_requests")):
+        # flatten the nested per-policy dicts onto gateable rows
+        def sched_rows(report: dict) -> list:
+            return [{"rate_multiplier": e["rate_multiplier"],
+                     "qps": e.get("sched", {}).get("qps")}
+                    for e in report.get("poisson", [])
+                    if e.get("sched", {}).get("qps") is not None]
+
+        checked += _gate_rows("sched.poisson", sched_rows(base),
+                              sched_rows(fresh), "rate_multiplier", "qps",
+                              failures)
 
     if checked == 0:
         print("bench_gate: no committed baselines to compare against — skip")

@@ -8,6 +8,9 @@
 # benchmark regression gate (scripts/bench_gate.py: fresh flat-path QPS
 # must stay within 20% of the committed BENCH_batch/BENCH_join baselines).
 #
+# Finishes with examples/quickstart.py --smoke so the public session API
+# (connect/prepare/execute, plan cache, explain) is exercised end-to-end.
+#
 #   bash scripts/smoke.sh            # full smoke
 #   SMOKE_SLOW=1 bash scripts/smoke.sh   # also run the slow marker set
 set -euo pipefail
@@ -20,3 +23,5 @@ if [[ "${SMOKE_SLOW:-0}" == "1" ]]; then
 fi
 python -m benchmarks.run --quick
 python scripts/bench_gate.py
+# public session API can't silently rot: run the quickstart at CI shapes
+python examples/quickstart.py --smoke

@@ -1,0 +1,21 @@
+"""Session API — the one front door to the CHASE engine (DESIGN.md §9).
+
+    from repro.api import connect, ExecutionHints
+
+    db = connect(catalog)                      # session + normalized plan cache
+    stmt = db.prepare(sql, K=10)               # cached across textual variants
+    res = stmt.execute({"qv": q, "p": 12.0})   # single -> Result
+    batch = stmt.execute([b1, b2, b3])         # list -> bucketed ResultBatch
+    print(batch.explain())                     # cache hit, lowering, buckets
+    server = db.serve(stmt)                    # async submit/poll scheduler
+
+Legacy shim: :func:`repro.core.compile_query` still works and returns the
+same bit-identical results — but compiles fresh on every call instead of
+hitting the plan cache.
+"""
+from .database import CacheInfo, Database, Statement, connect
+from .hints import ExecutionHints
+from .result import ExplainReport, Result, ResultBatch
+
+__all__ = ["connect", "Database", "Statement", "CacheInfo",
+           "ExecutionHints", "ExplainReport", "Result", "ResultBatch"]

@@ -1,0 +1,339 @@
+"""The session API: ``connect(catalog) -> Database``, ``db.prepare(sql) ->
+Statement``, ONE ``Statement.execute`` front door.
+
+Motivation (DESIGN.md §9): the engine grew three differently-shaped execute
+surfaces (``CompiledQuery.__call__`` / ``execute_batch`` /
+``execute_bucketed``) plus ad-hoc kwargs for the execution knobs, and every
+caller (scheduler, RAG retriever, benchmarks) re-wrapped them.  The session
+API is the single front door:
+
+* ``Statement.execute(binds)`` routes automatically — a single bind dict
+  runs the single-query pipeline, a list of dicts (or a stacked dict with a
+  leading Q axis) runs the size-bucketed serving path; the exact-shape batch
+  executable stays reachable via ``ExecutionHints(exact_shape=True)`` (the
+  bit-parity reference).
+* ``Database`` fronts a **normalized plan cache**: the key is the
+  canonicalized logical-plan fingerprint (whitespace / parameter-rename /
+  conjunct-order variants of one query collapse to one key) plus the
+  ``EngineOptions`` fingerprint plus the canonicalized static binds.  A hit
+  reuses the ``CompiledPlan`` AND its ``BucketedExecutor`` bucket cache —
+  preparing a variant compiles zero new executables.
+* ``db.serve(statement)`` wraps :class:`~repro.serving.scheduler.BatchScheduler`
+  for async submit/poll serving on the same cached executables.
+
+Every path returns structured :class:`~repro.api.result.Result` /
+:class:`~repro.api.result.ResultBatch` objects with an ``explain()`` handle
+reporting cache hit, chosen lowering, and live executor state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+from ..core.compiler import (CompiledQuery, compile_plan, fingerprint_digest,
+                             plan_fingerprint, _stacked_qn)
+from ..core.expr import Param
+from ..core.physical import EngineOptions
+from ..core.schema import Catalog
+from ..core.sql import parse_sql
+from .hints import ExecutionHints
+from .result import ExplainReport, Result, ResultBatch
+
+NO_HINTS = ExecutionHints()
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheInfo:
+    hits: int
+    misses: int
+    entries: int
+
+
+@dataclasses.dataclass
+class _CacheEntry:
+    """One normalized plan: the compiled artifact plus ITS parameter names in
+    canonical slot order (variants translate their names slot-by-slot)."""
+    compiled: CompiledQuery
+    param_order: tuple[str, ...]
+    fingerprint: str
+
+
+def connect(catalog: Catalog, options: EngineOptions | None = None,
+            **option_overrides) -> "Database":
+    """Open a session over a catalog — the one front door to the engine.
+
+    ``option_overrides`` are convenience kwargs onto :class:`EngineOptions`
+    (``connect(cat, engine="chase", use_pallas=True)``)."""
+    if option_overrides:
+        options = dataclasses.replace(options or EngineOptions(),
+                                      **option_overrides)
+    return Database(catalog, options or EngineOptions())
+
+
+class Database:
+    """A connection-like session: catalog + options + normalized plan cache."""
+
+    def __init__(self, catalog: Catalog, options: EngineOptions | None = None):
+        self.catalog = catalog
+        self.options = options or EngineOptions()
+        self._cache: dict[tuple, _CacheEntry] = {}
+        self._hits = 0
+        self._misses = 0
+
+    # -- prepared statements ------------------------------------------------
+
+    def prepare(self, sql: str, hints: ExecutionHints | None = None,
+                options: EngineOptions | None = None,
+                **static_binds) -> "Statement":
+        """Parse, normalize, and compile (or reuse) a statement.
+
+        ``hints`` become the statement's default execution hints; a
+        ``join_lowering`` hint is compile-affecting and folds into the
+        options fingerprint (its own cache entry).  ``static_binds`` resolve
+        shape-forming parameters (K values) and are part of the cache key in
+        canonical slot order, so ``LIMIT ${K}`` with K=4 and K=8 are two
+        entries while a renamed K parameter is still one."""
+        hints = hints or NO_HINTS
+        base_options = options or self.options
+        eff_options = base_options
+        if hints.join_lowering is not None:
+            eff_options = dataclasses.replace(
+                eff_options, join_lowering=hints.join_lowering)
+        plan = parse_sql(sql)
+        fp, param_order = plan_fingerprint(plan)
+        key = (fp, eff_options.fingerprint(),
+               self._static_key(static_binds, param_order))
+        entry = self._cache.get(key)
+        if entry is None:
+            self._misses += 1
+            compiled = compile_plan(sql, plan, self.catalog, eff_options,
+                                    dict(static_binds))
+            entry = _CacheEntry(compiled, param_order, fp)
+            self._cache[key] = entry
+            cache_hit = False
+        else:
+            self._hits += 1
+            cache_hit = True
+        return Statement(self, sql, entry, param_order, hints, cache_hit,
+                         base_options, dict(static_binds))
+
+    def execute(self, sql: str, binds=None,
+                hints: ExecutionHints | None = None, **static_binds):
+        """One-shot convenience: ``prepare`` (cached) + ``execute``."""
+        return self.prepare(sql, hints=hints, **static_binds).execute(binds)
+
+    def serve(self, statement: "Statement | str", config=None, *,
+              max_batch: int = 64, max_wait_ms: float = 2.0,
+              pilot_budget: int = 0, **static_binds):
+        """An async submit/poll server over one prepared statement.
+
+        Wraps :class:`~repro.serving.scheduler.BatchScheduler`: requests
+        coalesce under the deadline rule and drain through the statement's
+        size-bucketed executor cache (``pilot_budget`` > 0 adds two-phase
+        effort-bucketed IVF probing)."""
+        from ..serving.scheduler import BatchScheduler, SchedulerConfig
+        if isinstance(statement, str):
+            statement = self.prepare(statement, **static_binds)
+        elif static_binds:
+            raise TypeError(
+                f"static binds {sorted(static_binds)} cannot be applied to "
+                f"an already-prepared Statement; pass them to prepare(), or "
+                f"pass the SQL string to serve()")
+        if config is None:
+            config = SchedulerConfig(max_batch=max_batch,
+                                     max_wait_ms=max_wait_ms,
+                                     pilot_budget=pilot_budget)
+        return BatchScheduler(statement, config)
+
+    def cache_info(self) -> CacheInfo:
+        return CacheInfo(self._hits, self._misses, len(self._cache))
+
+    # -- internals ----------------------------------------------------------
+
+    @staticmethod
+    def _static_key(static_binds: dict, param_order: tuple[str, ...]) -> tuple:
+        """Static binds keyed by canonical parameter SLOT (rename-proof)."""
+        def slot(name: str):
+            return (param_order.index(name) if name in param_order
+                    else ("name", name))
+
+        def val(v: Any):
+            try:
+                hash(v)
+                return v
+            except TypeError:
+                return repr(np.asarray(v).tolist())
+
+        return tuple(sorted(
+            ((slot(k), val(v)) for k, v in static_binds.items()),
+            key=repr))
+
+
+class Statement:
+    """A prepared statement: the cached plan + this statement's bind-name
+    translation.  One ``execute`` front door for every execution shape."""
+
+    def __init__(self, db: Database, sql: str, entry: _CacheEntry,
+                 param_order: tuple[str, ...], hints: ExecutionHints,
+                 cache_hit: bool, base_options: EngineOptions,
+                 static_binds: dict):
+        self._db = db
+        self.sql = sql
+        self._entry = entry
+        self._param_order = param_order
+        self.hints = hints
+        self.cache_hit = cache_hit
+        # what prepare() saw BEFORE hint folding — a join_lowering re-route
+        # must re-prepare with the same options base and static binds
+        self._base_options = base_options
+        self._static_binds = static_binds
+        # this statement's param name -> the cached plan's name, slot-aligned
+        self._rename = {a: b for a, b in zip(param_order, entry.param_order)
+                        if a != b}
+
+    # -- delegation surface (also the BatchScheduler contract) --------------
+
+    @property
+    def compiled(self) -> CompiledQuery:
+        return self._entry.compiled
+
+    @property
+    def executor(self):
+        return self._entry.compiled.executor
+
+    @property
+    def batch_native(self) -> bool:
+        return self._entry.compiled.batch_native
+
+    def _stack_binds(self, binds_list, stacked) -> dict:
+        if binds_list is not None:
+            binds_list = [self._renamed(b) for b in binds_list]
+        if stacked:
+            stacked = self._renamed(stacked)
+        return self.compiled._stack_binds(binds_list, stacked)
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, binds=None, hints: ExecutionHints | None = None):
+        """THE execute front door.
+
+        * dict of scalar-per-query binds  -> single-query pipeline,
+        * list/tuple of bind dicts        -> size-bucketed batch,
+        * stacked dict (leading Q axis)   -> size-bucketed batch,
+        * ``hints.exact_shape=True``      -> exact-shape batch executable.
+
+        Returns :class:`Result` (single) or :class:`ResultBatch` (batch);
+        both are bit-identical to the legacy ``CompiledQuery`` surfaces."""
+        hints = self.hints if hints is None else hints
+        if hints.join_lowering is not None and (
+                hints.join_lowering != self.compiled.options.join_lowering):
+            # compile-affecting hint: re-route through the plan cache (a
+            # distinct options fingerprint is a distinct — cached — entry),
+            # carrying this statement's options base and static binds
+            return self._db.prepare(
+                self.sql, hints=hints, options=self._base_options,
+                **self._static_binds).execute(binds, hints=hints)
+        if binds is None:
+            binds = {}
+        if isinstance(binds, (list, tuple)):
+            return self._execute_batch([self._renamed(b) for b in binds],
+                                       None, hints)
+        if not isinstance(binds, dict):
+            raise TypeError(
+                f"binds must be a dict (single query), a list of dicts, or "
+                f"a stacked dict with a leading Q axis; got {type(binds)}")
+        renamed = self._renamed(binds)
+        if self._is_stacked(renamed):
+            return self._execute_batch(None, renamed, hints)
+        hints.validate_for_single()
+        out = self.compiled._jitted(self.compiled._arrays, dict(renamed))
+        report = self._report_fn(path="single", num_queries=1, hints=hints)
+        return Result(out, report)
+
+    def _execute_batch(self, binds_list, stacked_binds,
+                       hints: ExecutionHints):
+        compiled = self.compiled
+        hints.validate_for_plan(compiled.batch_native,
+                                compiled.plan.batch_reason)
+        binds = compiled._stack_binds(binds_list, stacked_binds or {})
+        qn = _stacked_qn(binds)
+        probe_budget = hints.probe_budget
+        if isinstance(probe_budget, tuple):
+            if len(probe_budget) != qn:
+                raise ValueError(
+                    f"per-query probe_budget has {len(probe_budget)} "
+                    f"entries for a batch of {qn} queries")
+            probe_budget = np.asarray(probe_budget, np.int32)
+        effort = None
+        if hints.exact_shape:
+            path = "batch"
+            out = compiled._batch_jitted(compiled._arrays, binds)
+        elif hints.pilot_budget > 0:
+            from ..serving.scheduler import run_effort_bucketed
+            path = "effort"
+            out, effort = run_effort_bucketed(compiled, binds,
+                                              hints.pilot_budget)
+        else:
+            path = "bucketed"
+            out = compiled.executor(binds, probe_budget=probe_budget)
+        bucket = (compiled.executor.bucket_for(qn)
+                  if path in ("bucketed", "effort") else None)
+        report = self._report_fn(path=path, bucket=bucket, num_queries=qn,
+                                 hints=hints, effort=effort)
+        return ResultBatch(out, report, qn)
+
+    # -- explain ------------------------------------------------------------
+
+    def explain(self) -> ExplainReport:
+        """Live statement-level report (no execution context)."""
+        return self._report_fn()()
+
+    def _report_fn(self, **exec_fields):
+        """Build an explain closure: called lazily so ``buckets`` and
+        ``trace_counts`` reflect the executor state WHEN explain() runs."""
+        def build() -> ExplainReport:
+            c = self.compiled
+            ex = c.executor
+            return ExplainReport(
+                sql=self.sql,
+                engine=c.options.engine,
+                query_class=c.analysis.query_class.value,
+                plan_key=fingerprint_digest(self._entry.fingerprint),
+                cache_hit=self.cache_hit,
+                batch_native=c.batch_native,
+                batch_lowering=c.plan.batch_reason,
+                buckets=tuple(ex.buckets),
+                trace_counts=dict(ex.trace_counts),
+                logical_plan=c.logical_plan.pretty(),
+                rewritten_plan=c.rewritten_plan.pretty(),
+                **exec_fields)
+
+        return build
+
+    # -- internals ----------------------------------------------------------
+
+    def _renamed(self, binds: dict) -> dict:
+        unknown = [k for k in binds if k not in self._param_order]
+        if unknown:
+            raise ValueError(
+                f"unknown bind parameter(s) {sorted(unknown)}; this "
+                f"statement's parameters are {sorted(self._param_order)}")
+        if not self._rename:
+            return binds
+        return {self._rename.get(k, k): v for k, v in binds.items()}
+
+    def _is_stacked(self, binds: dict) -> bool:
+        """A dict routes to the batch path iff it is stacked: the query
+        vector carries (Q, D), or — for plans whose query expression is a
+        plan column (joins) — any bind carries a leading Q axis."""
+        qe = self.compiled.analysis.query_expr
+        if isinstance(qe, Param) and qe.name in binds:
+            return np.ndim(binds[qe.name]) >= 2
+        return any(np.ndim(v) >= 1 for v in binds.values())
+
+    def __repr__(self):
+        return (f"Statement(class={self.compiled.analysis.query_class.value}, "
+                f"plan={fingerprint_digest(self._entry.fingerprint)}, "
+                f"cache_hit={self.cache_hit})")

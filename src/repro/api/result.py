@@ -1,0 +1,146 @@
+"""Structured results for the session API.
+
+The legacy execute surfaces returned raw pytrees whose keys varied by query
+class (``ids`` vs ``qid``/``tid``, optional ``count``/``rank``).  The session
+API wraps every execution in :class:`Result` / :class:`ResultBatch`:
+
+* the raw tree stays reachable (``res.data`` and ``res["ids"]``) so the
+  wrappers are bit-transparent — parity tests compare leaves directly;
+* uniform accessors (``ids``, ``order_keys``, ``valid``, ``counters``) work
+  across all six query classes;
+* ``explain()`` returns a live :class:`ExplainReport` — plan-cache hit,
+  chosen batch lowering, and the *current* ``BucketedExecutor`` state
+  (compiled buckets, trace counts), so serving regressions are diagnosable
+  without a debugger.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+from .hints import ExecutionHints
+
+
+@dataclasses.dataclass(frozen=True)
+class ExplainReport:
+    """One execution's (or prepared statement's) explain snapshot.
+
+    ``buckets`` / ``trace_counts`` reflect the executor state at the moment
+    ``explain()`` was called — live, not frozen at prepare time."""
+    sql: str
+    engine: str
+    query_class: str
+    plan_key: str                       # fingerprint digest (cache identity)
+    cache_hit: bool
+    batch_native: bool
+    batch_lowering: str                 # human-readable chosen lowering
+    buckets: tuple[int, ...]            # compiled bucket executables (sorted)
+    trace_counts: dict[int, int]        # bucket -> times (re)traced
+    logical_plan: str
+    rewritten_plan: str
+    path: str | None = None             # single | batch | bucketed | effort
+    bucket: int | None = None           # bucket this execution ran in
+    num_queries: int | None = None
+    hints: ExecutionHints | None = None
+    effort: dict | None = None          # n_light / n_heavy split, if any
+
+    def render(self) -> str:
+        out = [f"-- engine: {self.engine}",
+               f"-- class:  {self.query_class}",
+               f"-- plan:   {self.plan_key} "
+               f"({'cache hit' if self.cache_hit else 'compiled'})",
+               f"-- batch:  {self.batch_lowering}",
+               f"-- buckets: {list(self.buckets)} "
+               f"trace_counts={self.trace_counts}"]
+        if self.path is not None:
+            exec_line = f"-- exec:   path={self.path}"
+            if self.bucket is not None:
+                exec_line += f" bucket={self.bucket}"
+            if self.num_queries is not None:
+                exec_line += f" queries={self.num_queries}"
+            out.append(exec_line)
+        if self.effort is not None:
+            out.append(f"-- effort: {self.effort}")
+        out += ["-- logical plan:", self.logical_plan,
+                "-- rewritten plan:", self.rewritten_plan]
+        return "\n".join(out)
+
+    def __str__(self) -> str:
+        return self.render()
+
+
+class Result:
+    """A single query's structured result (leaves have no leading Q axis)."""
+
+    def __init__(self, data: dict, explain_fn: Callable[[], ExplainReport]):
+        self.data = data
+        self._explain_fn = explain_fn
+
+    # -- raw-tree transparency ---------------------------------------------
+    def __getitem__(self, key: str):
+        return self.data[key]
+
+    def __contains__(self, key: str) -> bool:
+        return key in self.data
+
+    def keys(self):
+        return self.data.keys()
+
+    def get(self, key: str, default=None):
+        return self.data.get(key, default)
+
+    # -- uniform accessors --------------------------------------------------
+    @property
+    def ids(self):
+        """Result row ids (``ids`` for single-table classes, ``tid`` —
+        the right-side target ids — for the join families)."""
+        return self.data["ids"] if "ids" in self.data else self.data["tid"]
+
+    @property
+    def order_keys(self):
+        """Raw similarity/distance values the ordering ran on (the map
+        operator's ``__sim`` — never recomputed downstream)."""
+        return self.data["sim"]
+
+    @property
+    def valid(self):
+        return self.data["valid"]
+
+    @property
+    def counters(self) -> dict:
+        """Per-query execution counters (probes, distance evals, ...)."""
+        return self.data.get("stats", {})
+
+    def explain(self) -> ExplainReport:
+        return self._explain_fn()
+
+    def __repr__(self):
+        keys = ",".join(sorted(self.data))
+        return f"{type(self).__name__}(keys=[{keys}])"
+
+
+class ResultBatch(Result):
+    """A batched execution's structured result: every leaf carries a leading
+    Q axis; ``len()`` is the number of queries and ``query(i)`` slices one
+    query's view (host-side — never triggers a recompile)."""
+
+    def __init__(self, data: dict, explain_fn: Callable[[], ExplainReport],
+                 num_queries: int):
+        super().__init__(data, explain_fn)
+        self.num_queries = num_queries
+
+    def __len__(self) -> int:
+        return self.num_queries
+
+    def query(self, i: int) -> Result:
+        if not -self.num_queries <= i < self.num_queries:
+            raise IndexError(f"query index {i} out of range for batch of "
+                             f"{self.num_queries}")
+
+        def slice_leaf(v: Any):
+            return np.asarray(v)[i]
+
+        import jax
+        return Result(jax.tree.map(slice_leaf, self.data), self._explain_fn)

@@ -1,5 +1,11 @@
-"""CHASE core: native hybrid-query engine (the paper's contribution)."""
-from .compiler import CompiledQuery, compile_query
+"""CHASE core: native hybrid-query engine (the paper's contribution).
+
+``compile_query``/``CompiledQuery`` are the legacy one-shot surface; new
+code should go through the session API (:mod:`repro.api`), which adds a
+normalized plan cache, unified execution hints, and structured results on
+top of the same compilation stack."""
+from .compiler import (BucketedExecutor, CompiledPlan, CompiledQuery,
+                       compile_plan, compile_query, plan_fingerprint)
 from .expr import Bindings, Column, Const, Distance, Param
 from .physical import EngineOptions
 from .schema import (Catalog, ColumnKind, ColumnType, Metric, Schema, Table,
@@ -9,7 +15,8 @@ from .sql import parse_sql
 from .rewriter import rewrite
 
 __all__ = [
-    "CompiledQuery", "compile_query", "Bindings", "Column", "Const",
+    "BucketedExecutor", "CompiledPlan", "CompiledQuery", "compile_plan",
+    "compile_query", "plan_fingerprint", "Bindings", "Column", "Const",
     "Distance", "Param", "EngineOptions", "Catalog", "ColumnKind",
     "ColumnType", "Metric", "Schema", "Table", "bool_col", "category_col",
     "float_col", "int_col", "vector_col", "Analysis", "QueryClass", "analyze",

@@ -27,13 +27,14 @@ reference and by callers with a fixed batch size).
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .expr import Bindings, Param
+from .expr import BoolOp, Bindings, Expr, Param
 from .physical import (BATCH_BUILDERS, BUILDERS, JOIN_LOWERING_FAMILIES,
                        EngineOptions)
 from .plan import PlanNode
@@ -41,6 +42,78 @@ from .rewriter import rewrite
 from .schema import Catalog
 from .semantics import Analysis, QueryClass, analyze
 from .sql import parse_sql
+
+
+# ---------------------------------------------------------------------------
+# plan fingerprinting (the normalized plan-cache key, DESIGN.md §9)
+# ---------------------------------------------------------------------------
+#
+# Two SQL texts that parse to the same logical plan modulo (a) whitespace,
+# (b) parameter names, and (c) the order of commutative AND/OR conjuncts
+# must share one CompiledPlan — plan reuse across requests is the dominant
+# serving cost, and prepared statements arrive in every textual variant.
+#
+# Canonicalization: parameters are renamed positionally (?0, ?1, ... in
+# canonical traversal order) and commutative BoolOp operands are sorted by
+# their *name-erased* serialization (params rendered as a bare "?"), so the
+# operand order and the positional assignment are both stable across
+# variants.  The fingerprint is the canonical serialization; the canonical
+# parameter order is returned alongside so a cache hit can translate the
+# statement's own bind names onto the cached plan's names.
+
+def _param_slot(params: list, name: str) -> int:
+    if name not in params:
+        params.append(name)
+    return params.index(name)
+
+
+def _fp_value(v: Any, params: list | None) -> str:
+    if isinstance(v, (Expr, PlanNode)):
+        return _fp_node(v, params)
+    if isinstance(v, tuple):
+        return "(" + ",".join(_fp_value(x, params) for x in v) + ")"
+    return repr(v)
+
+
+def _fp_node(n: Any, params: list | None) -> str:
+    """Serialize one plan/expr node; ``params is None`` => name-erased mode
+    (every parameter renders as "?" — the commutative-sort key)."""
+    if isinstance(n, Param):
+        return "?" if params is None else f"?{_param_slot(params, n.name)}"
+    parts = []
+    for f in dataclasses.fields(n):
+        v = getattr(n, f.name)
+        # Limit.k (and the rewritten nodes' k) may hold a *param name* string
+        if f.name == "k" and isinstance(v, str):
+            parts.append("?" if params is None
+                         else f"?{_param_slot(params, v)}")
+            continue
+        if (isinstance(n, BoolOp) and f.name == "operands"
+                and n.op in ("and", "or")):
+            erased = [_fp_node(o, None) for o in n.operands]
+            order = sorted(range(len(erased)), key=erased.__getitem__)
+            parts.append("(" + ",".join(
+                _fp_node(n.operands[i], params) for i in order) + ")")
+            continue
+        parts.append(_fp_value(v, params))
+    return type(n).__name__ + "[" + ";".join(parts) + "]"
+
+
+def plan_fingerprint(plan: PlanNode) -> tuple[str, tuple[str, ...]]:
+    """Canonical fingerprint of a logical plan.
+
+    Returns ``(fingerprint, param_order)``: the fingerprint is identical for
+    whitespace / parameter-rename / AND-OR-operand-order variants of the same
+    SQL, and ``param_order[i]`` is THIS plan's original name for canonical
+    parameter slot ``i`` (two variant plans align slot-by-slot)."""
+    params: list[str] = []
+    fp = _fp_node(plan, params)
+    return fp, tuple(params)
+
+
+def fingerprint_digest(fp: str) -> str:
+    """Short stable digest of a plan fingerprint (for explain/report keys)."""
+    return hashlib.sha256(fp.encode()).hexdigest()[:12]
 
 
 @dataclasses.dataclass
@@ -378,9 +451,22 @@ def compile_query(sql: str, catalog: Catalog,
     ``static_binds`` resolve parameters that shape the computation (K values).
     Runtime parameters (query vectors, radii, filter constants) are passed at
     call time and are traced, so re-running with a new query vector reuses the
-    compiled executable — the production serving pattern."""
+    compiled executable — the production serving pattern.
+
+    This is the legacy one-shot front door; the session API
+    (:func:`repro.api.connect`) routes through :func:`compile_plan` with a
+    normalized plan cache in front, so textual variants of one query share
+    one compilation.  Each ``compile_query`` call compiles fresh."""
     options = options or EngineOptions()
     plan = parse_sql(sql)
+    return compile_plan(sql, plan, catalog, options, static_binds)
+
+
+def compile_plan(sql: str, plan: PlanNode, catalog: Catalog,
+                 options: EngineOptions, static_binds: dict) -> CompiledQuery:
+    """Compile an already-parsed logical plan (the plan-cache entry point —
+    ``Database.prepare`` parses once for fingerprinting, then compiles the
+    same tree only on a cache miss)."""
     a = analyze(plan, catalog)
     if a.query_class == QueryClass.NON_HYBRID:
         raise NotImplementedError(

@@ -43,7 +43,12 @@ from .semantics import Analysis, QueryClass
 @dataclasses.dataclass(frozen=True)
 class EngineOptions:
     engine: str = "chase"          # chase | vbase | pase | brute | brute_sort
-    probe: ProbeConfig = ProbeConfig()
+    # default_factory, NOT a shared ProbeConfig() instance: a class-level
+    # default dataclass would be one object aliased across every
+    # EngineOptions ever constructed (both frozen, so mutation can't bite
+    # today — but identity-based caches and dataclasses.replace patterns
+    # must never observe cross-caller sharing).
+    probe: ProbeConfig = dataclasses.field(default_factory=ProbeConfig)
     pase_oversample: int = 10      # K' = oversample * K
     use_pallas: bool = False       # fused Pallas kernel for flat scans
     max_pairs: int = 512           # per-left-row buffer for join families
@@ -55,6 +60,12 @@ class EngineOptions:
     # legacy per-left-row scan loop (and forces the vmap-of-scalar
     # execute_batch fallback) — the measured baseline in benchmarks/q34.
     join_lowering: str = "batch"   # batch | perleft
+
+    def fingerprint(self) -> str:
+        """Stable serialization for the plan-cache key: every field shapes
+        compilation, so any change must miss the cache.  Frozen dataclass
+        repr covers all fields (including the nested ProbeConfig)."""
+        return repr(self)
 
 
 # ---------------------------------------------------------------------------

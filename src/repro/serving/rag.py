@@ -15,7 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import Catalog, EngineOptions, Metric, compile_query
+from ..api import Database, Statement, connect
+from ..core import Catalog, EngineOptions, Metric
 from ..core.schema import (Schema, Table, category_col, float_col, int_col,
                            vector_col)
 from ..index import build_ivf
@@ -31,9 +32,22 @@ LIMIT ${K}
 
 @dataclasses.dataclass
 class HybridRetriever:
-    catalog: Catalog
-    compiled: Any
+    """Rides the session API: one :class:`~repro.api.Database` session over
+    the doc catalog, one prepared :class:`~repro.api.Statement` — so every
+    retrieval surface (single, batched, scheduled) shares the statement's
+    plan-cache entry and bucket executor cache."""
+    db: Database
+    statement: Statement
     k: int
+
+    @property
+    def catalog(self) -> Catalog:
+        return self.db.catalog
+
+    @property
+    def compiled(self):
+        """Legacy handle (the statement's cached CompiledQuery)."""
+        return self.statement.compiled
 
     @classmethod
     def build(cls, doc_embeddings: jnp.ndarray, freshness: jnp.ndarray,
@@ -58,15 +72,15 @@ class HybridRetriever:
         idx = build_ivf(jax.random.key(seed), doc_embeddings, nlist=nlist,
                         metric=metric)
         cat.register_index("docs", "embedding", idx)
-        compiled = compile_query(RAG_SQL, cat,
-                                 EngineOptions(engine="chase", probe=probe),
-                                 K=k)
-        return cls(cat, compiled, k)
+        db = connect(cat, EngineOptions(engine="chase", probe=probe))
+        statement = db.prepare(RAG_SQL, K=k)
+        return cls(db, statement, k)
 
     def retrieve(self, query_embedding, min_freshness=0.0, safety_class=0):
-        out = self.compiled(query_embedding=query_embedding,
-                            min_freshness=min_freshness,
-                            safety_class=safety_class)
+        out = self.statement.execute({
+            "query_embedding": query_embedding,
+            "min_freshness": min_freshness,
+            "safety_class": safety_class})
         return out["ids"], out["sim"], out["valid"]
 
     def retrieve_batch(self, query_embeddings, min_freshness=0.0,
@@ -78,21 +92,21 @@ class HybridRetriever:
         Rides the size-bucketed executor (DESIGN.md §8): any batch size
         reuses one compiled executable per power-of-two bucket, so serving
         traffic with varying batch sizes never recompiles per shape."""
-        out = self.compiled.execute_bucketed(
-            query_embedding=jnp.asarray(query_embeddings),
-            min_freshness=min_freshness, safety_class=safety_class)
+        out = self.statement.execute({
+            "query_embedding": jnp.asarray(query_embeddings),
+            "min_freshness": min_freshness, "safety_class": safety_class})
         return out["ids"], out["sim"], out["valid"]
 
     def make_scheduler(self, max_batch: int = 32, max_wait_ms: float = 2.0,
                        pilot_budget: int = 0):
         """A :class:`~repro.serving.scheduler.BatchScheduler` over this
-        retriever's compiled query — the serving front-end that coalesces
-        arriving retrieval requests into bucketed batch executions
-        (``pilot_budget`` > 0 adds effort-bucketed IVF probing)."""
-        from .scheduler import BatchScheduler, SchedulerConfig
-        return BatchScheduler(self.compiled, SchedulerConfig(
-            max_batch=max_batch, max_wait_ms=max_wait_ms,
-            pilot_budget=pilot_budget))
+        retriever's prepared statement (``Database.serve``) — the serving
+        front-end that coalesces arriving retrieval requests into bucketed
+        batch executions (``pilot_budget`` > 0 adds effort-bucketed IVF
+        probing)."""
+        return self.db.serve(self.statement, max_batch=max_batch,
+                             max_wait_ms=max_wait_ms,
+                             pilot_budget=pilot_budget)
 
     def retrieve_for_decode(self, query_embeddings, doc_token_embeds,
                             min_freshness=0.0, safety_class=0,

@@ -128,12 +128,22 @@ class BatchScheduler:
     ``poll()`` drains a batch when due (full, or the oldest request's
     ``max_wait_ms`` deadline expired); ``flush()`` drains everything;
     ``result(rid)`` returns that request's sliced outputs.  One scheduler
-    serves one compiled plan (the serving deployment unit)."""
+    serves one compiled plan (the serving deployment unit).
 
-    def __init__(self, compiled, config: SchedulerConfig = SchedulerConfig(),
+    ``compiled`` is anything exposing the execution contract —
+    ``_stack_binds`` / ``executor`` / ``batch_native`` — i.e. a legacy
+    :class:`~repro.core.compiler.CompiledQuery` or a session-API
+    :class:`~repro.api.Statement` (``Database.serve`` constructs the latter;
+    a Statement additionally translates renamed bind parameters onto the
+    cached plan before stacking)."""
+
+    def __init__(self, compiled, config: SchedulerConfig | None = None,
                  clock: Callable[[], float] = time.monotonic):
         self.compiled = compiled
-        self.config = config
+        # None-sentinel, NOT a `config=SchedulerConfig()` default: a
+        # class-level default dataclass would be one shared instance across
+        # every scheduler ever constructed.
+        self.config = config if config is not None else SchedulerConfig()
         self.clock = clock
         self._queue: collections.deque = collections.deque()
         self._results: dict[int, Any] = {}

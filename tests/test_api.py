@@ -1,0 +1,495 @@
+"""Session API (DESIGN.md §9): the one front door, the normalized plan
+cache, unified hints, and structured results.
+
+Contracts under test:
+* plan cache NORMALIZATION: whitespace / parameter-rename / conjunct-order
+  variants of one SQL hit the same cache entry and compile ZERO new
+  executables (asserted via ``trace_counts``); options or static-bind
+  changes miss;
+* SHIM PARITY: ``Statement.execute`` is bit-identical to the legacy
+  ``CompiledQuery.__call__`` / ``execute_batch`` / ``execute_bucketed``
+  surfaces for every query class Q1-Q6;
+* ``ExecutionHints`` validates eagerly (construction) and against the
+  prepared plan (execute);
+* ``explain()`` reports LIVE executor state — compiled buckets,
+  trace_counts, plan-cache hit, chosen lowering;
+* ``db.serve`` round-trips through the BatchScheduler on a Statement
+  (including renamed parameters);
+* the shared-mutable-default fixes: fresh ProbeConfig / SchedulerConfig
+  per instance, frozen everywhere.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.api import (Database, ExecutionHints, Result, ResultBatch,
+                       connect)
+from repro.core import (EngineOptions, Metric, compile_query,
+                        plan_fingerprint, parse_sql)
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+from repro.serving.scheduler import BatchScheduler, SchedulerConfig
+
+PROBE = ProbeConfig(max_probes=16, capacity=128, termination="bound",
+                    probe_batch=2)
+
+Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+      "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2 = ("SELECT sample_id FROM images "
+      "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}")
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year >= ${y}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 3
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+ALL_SQL = {"q1": Q1, "q2": Q2, "q3": Q3, "q4": Q4, "q5": Q5, "q6": Q6}
+
+
+@pytest.fixture(scope="module")
+def env():
+    from repro.data import make_laion_catalog
+
+    cat = make_laion_catalog(n_rows=900, n_queries=4, dim=16, n_modes=8,
+                             num_categories=4, seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=16,
+                    metric=Metric.INNER_PRODUCT, iters=3)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -30, axis=1)[:, -30]))
+    return cat, radius
+
+
+def _db(cat) -> Database:
+    return connect(cat, EngineOptions(engine="chase", probe=PROBE))
+
+
+def _qvecs(cat, qn: int) -> np.ndarray:
+    base = np.asarray(cat.table("queries")["embedding"])
+    rng = np.random.default_rng(3)
+    reps = -(-qn // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:qn]
+    return (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+
+
+def _binds_for(case: str, cat, radius: float, qn: int) -> list[dict]:
+    """Per-query bind dicts for each query class (heterogeneous values)."""
+    rng = np.random.default_rng(7)
+    price = np.asarray(cat.table("laion")["price"])
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    years = np.asarray(cat.table("movies")["release_year"])
+    qs = _qvecs(cat, qn)
+    out = []
+    for i in range(qn):
+        if case == "q1":
+            out.append({"qv": qs[i],
+                        "p": np.float32(np.quantile(
+                            price, rng.uniform(0.3, 1.0)))})
+        elif case == "q2":
+            out.append({"qv": qs[i],
+                        "r": np.float32(radius * rng.uniform(0.95, 1.0)),
+                        "d": np.int32(np.quantile(
+                            dates, rng.uniform(0.2, 0.8)))})
+        elif case in ("q3", "q6"):
+            out.append({"r": np.float32(radius * rng.uniform(0.95, 1.0))})
+        elif case == "q4":
+            out.append({"y": np.int32(np.quantile(
+                years, rng.uniform(0.1, 0.6)))})
+        elif case == "q5":
+            out.append({"qv": qs[i],
+                        "r": np.float32(radius * rng.uniform(0.95, 1.0))})
+    return out
+
+
+def _trees_equal(a, b):
+    a = jax.tree.map(np.asarray, a)
+    b = jax.tree.map(np.asarray, b)
+    assert set(a.keys()) == set(b.keys())
+    for k in a:
+        la, lb = jax.tree.leaves(a[k]), jax.tree.leaves(b[k])
+        for x, y in zip(la, lb):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# plan cache normalization
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_whitespace_variant(env):
+    cat, _ = env
+    db = _db(cat)
+    s1 = db.prepare(Q1)
+    s2 = db.prepare("""SELECT   sample_id
+        FROM products
+        WHERE price < ${p}
+        ORDER BY DISTANCE(embedding, ${qv})
+        LIMIT 4""")
+    assert s2.cache_hit and not s1.cache_hit
+    assert s2.compiled is s1.compiled
+    assert db.cache_info().hits == 1
+    assert db.cache_info().entries == 1
+
+
+def test_cache_hit_param_rename_no_retrace(env):
+    cat, _ = env
+    db = _db(cat)
+    s1 = db.prepare(Q1)
+    binds = _binds_for("q1", cat, 0.0, 3)
+    r1 = s1.execute(binds)
+    assert dict(s1.executor.trace_counts) == {4: 1}
+    renamed_sql = ("SELECT sample_id FROM products WHERE price < ${cap} "
+                   "ORDER BY DISTANCE(embedding, ${vec}) LIMIT 4")
+    s2 = db.prepare(renamed_sql)
+    assert s2.cache_hit and s2.compiled is s1.compiled
+    r2 = s2.execute([{"vec": b["qv"], "cap": b["p"]} for b in binds])
+    # zero new executables: the renamed variant reused bucket 4's executable
+    assert dict(s1.executor.trace_counts) == {4: 1}
+    _trees_equal(r1.data, r2.data)
+
+
+def test_cache_hit_conjunct_order_variant(env):
+    cat, radius = env
+    db = _db(cat)
+    s1 = db.prepare(Q2)
+    swapped = ("SELECT sample_id FROM images WHERE capture_date > ${dd} "
+               "AND DISTANCE(embedding, ${q}) <= ${rr}")
+    s2 = db.prepare(swapped)
+    assert s2.cache_hit and s2.compiled is s1.compiled
+    binds = _binds_for("q2", cat, radius, 2)
+    r1 = s1.execute(binds)
+    r2 = s2.execute([{"q": b["qv"], "rr": b["r"], "dd": b["d"]}
+                     for b in binds])
+    _trees_equal(r1.data, r2.data)
+
+
+def test_cache_miss_on_options_and_statics(env):
+    cat, _ = env
+    db = _db(cat)
+    db.prepare(Q1)
+    assert db.prepare(Q1, options=EngineOptions(
+        engine="vbase", probe=PROBE)).cache_hit is False
+    assert db.prepare(Q1, options=EngineOptions(
+        engine="chase",
+        probe=dataclasses.replace(PROBE, max_probes=8))).cache_hit is False
+    # static binds are part of the key (canonical slot, rename-proof)
+    ksql = ("SELECT sample_id FROM products WHERE price < ${p} "
+            "ORDER BY DISTANCE(embedding, ${qv}) LIMIT ${K}")
+    k4 = db.prepare(ksql, K=4)
+    assert db.prepare(ksql, K=8).cache_hit is False
+    renamed = ("SELECT sample_id FROM products WHERE price < ${p} "
+               "ORDER BY DISTANCE(embedding, ${qv}) LIMIT ${topk}")
+    k4v = db.prepare(renamed, topk=4)
+    assert k4v.cache_hit and k4v.compiled is k4.compiled
+
+
+def test_fingerprint_distinguishes_plans(env):
+    fp1, params1 = plan_fingerprint(parse_sql(Q1))
+    fp2, _ = plan_fingerprint(parse_sql(Q2))
+    assert fp1 != fp2
+    assert params1 == ("p", "qv")  # canonical traversal order
+    # a REAL structural difference must not collapse
+    fp_lt, _ = plan_fingerprint(parse_sql(
+        "SELECT sample_id FROM products WHERE price < ${p} "
+        "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4"))
+    fp_gt, _ = plan_fingerprint(parse_sql(
+        "SELECT sample_id FROM products WHERE price > ${p} "
+        "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4"))
+    assert fp_lt != fp_gt
+
+
+def test_unknown_bind_name_is_loud(env):
+    cat, _ = env
+    db = _db(cat)
+    s = db.prepare(Q1)
+    with pytest.raises(ValueError, match="unknown bind parameter"):
+        s.execute({"qv": np.zeros(16, np.float32), "price": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# shim parity: Statement.execute == legacy CompiledQuery surfaces (Q1-Q6)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["q1", "q2", "q3", "q4", "q5", "q6"])
+def test_statement_parity_every_class(env, case):
+    cat, radius = env
+    opts = EngineOptions(engine="chase", probe=PROBE)
+    legacy = compile_query(ALL_SQL[case], cat, opts)
+    stmt = connect(cat, opts).prepare(ALL_SQL[case])
+    binds_list = _binds_for(case, cat, radius, 3)
+
+    # single path == __call__
+    single = stmt.execute(binds_list[0])
+    assert isinstance(single, Result) and not isinstance(single, ResultBatch)
+    _trees_equal(single.data, legacy(**binds_list[0]))
+
+    # list -> bucketed path == execute_bucketed
+    bucketed = stmt.execute(binds_list)
+    assert isinstance(bucketed, ResultBatch) and len(bucketed) == 3
+    _trees_equal(bucketed.data,
+                 legacy.execute_bucketed(binds_list=binds_list))
+
+    # exact_shape hint == execute_batch
+    exact = stmt.execute(binds_list, hints=ExecutionHints(exact_shape=True))
+    _trees_equal(exact.data, legacy.execute_batch(binds_list=binds_list))
+
+
+def test_stacked_dict_routes_to_batch(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare(Q1)
+    binds_list = _binds_for("q1", cat, 0.0, 5)
+    stacked = {"qv": np.stack([b["qv"] for b in binds_list]),
+               "p": np.asarray([b["p"] for b in binds_list])}
+    out = stmt.execute(stacked)
+    assert isinstance(out, ResultBatch) and len(out) == 5
+    _trees_equal(out.data, stmt.execute(binds_list).data)
+    # per-query slicing view
+    q2 = out.query(2)
+    np.testing.assert_array_equal(np.asarray(q2["ids"]),
+                                  np.asarray(out["ids"])[2])
+
+
+def test_effort_hint_bit_identical(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare(Q1)
+    binds_list = _binds_for("q1", cat, 0.0, 6)
+    lock = stmt.execute(binds_list)
+    eff = stmt.execute(binds_list, hints=ExecutionHints(pilot_budget=2))
+    _trees_equal(lock.data, eff.data)
+    rep = eff.explain()
+    assert rep.path == "effort" and rep.effort is not None
+    assert rep.effort["n_light"] + rep.effort["n_heavy"] == 6
+
+
+def test_probe_budget_hint_caps_probes(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare(Q1)
+    binds_list = _binds_for("q1", cat, 0.0, 4)
+    out = stmt.execute(binds_list, hints=ExecutionHints(probe_budget=2))
+    assert int(np.asarray(out.counters["probes"]).max()) <= 2
+    # per-query budgets must match the batch size
+    with pytest.raises(ValueError, match="3 entries for a batch of 4"):
+        stmt.execute(binds_list,
+                     hints=ExecutionHints(probe_budget=(2, 2, 2)))
+
+
+def test_join_lowering_hint_reroutes_through_cache(env):
+    cat, radius = env
+    # probe_batch=1: the regime where the batch-native join lowering is
+    # bit-identical to the per-left loop (the PR-2 parity contract)
+    db = connect(cat, EngineOptions(
+        engine="chase", probe=dataclasses.replace(PROBE, probe_batch=1)))
+    stmt = db.prepare(Q3)
+    binds_list = _binds_for("q3", cat, radius, 2)
+    native = stmt.execute(binds_list)
+    perleft = stmt.execute(binds_list,
+                           hints=ExecutionHints(join_lowering="perleft"))
+    _trees_equal(native.data, perleft.data)
+    assert native.explain().batch_native
+    assert not perleft.explain().batch_native
+    assert "perleft" in perleft.explain().batch_lowering
+    # the derived plan is itself cached
+    s2 = db.prepare(Q3, hints=ExecutionHints(join_lowering="perleft"))
+    assert s2.cache_hit
+
+
+def test_join_lowering_reroute_keeps_statics_and_options(env):
+    cat, _ = env
+    db = _db(cat)
+    ksql = ("SELECT sample_id FROM products WHERE price < ${p} "
+            "ORDER BY DISTANCE(embedding, ${qv}) LIMIT ${K}")
+    custom = EngineOptions(
+        engine="chase", probe=dataclasses.replace(PROBE, max_probes=8))
+    stmt = db.prepare(ksql, options=custom, K=4)
+    binds_list = _binds_for("q1", cat, 0.0, 2)
+    base = stmt.execute(binds_list)
+    # the re-route must carry K=4 and the custom options base (it used to
+    # drop both and crash on the unresolvable static K)
+    rerouted = stmt.execute(binds_list,
+                            hints=ExecutionHints(join_lowering="perleft"))
+    _trees_equal(base.data, rerouted.data)   # VKNN ignores join lowering
+    assert np.asarray(rerouted["ids"]).shape[-1] == 4
+
+
+# ---------------------------------------------------------------------------
+# hints validation
+# ---------------------------------------------------------------------------
+
+def test_hints_validate_eagerly():
+    with pytest.raises(ValueError, match="join_lowering"):
+        ExecutionHints(join_lowering="sideways")
+    with pytest.raises(ValueError, match="pilot_budget"):
+        ExecutionHints(pilot_budget=-1)
+    with pytest.raises(ValueError, match="probe_budget must be >= 1"):
+        ExecutionHints(probe_budget=0)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ExecutionHints(exact_shape=True, pilot_budget=3)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ExecutionHints(exact_shape=True, probe_budget=3)
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        ExecutionHints(pilot_budget=2, probe_budget=3)
+    with pytest.raises(TypeError, match="sequence of ints"):
+        ExecutionHints(probe_budget=object())
+    # array-likes normalize to a hashable tuple (hints stay frozen keys)
+    h = ExecutionHints(probe_budget=np.asarray([2, 3]))
+    assert h.probe_budget == (2, 3)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        h.pilot_budget = 1
+
+
+def test_hints_validate_against_plan(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare(Q1)
+    binds_list = _binds_for("q1", cat, 0.0, 2)
+    # batch-only hints are loud errors on the single path
+    with pytest.raises(ValueError, match="single"):
+        stmt.execute(binds_list[0], hints=ExecutionHints(probe_budget=2))
+    with pytest.raises(ValueError, match="single"):
+        stmt.execute(binds_list[0], hints=ExecutionHints(pilot_budget=2))
+    with pytest.raises(ValueError, match="single"):
+        stmt.execute(binds_list[0], hints=ExecutionHints(exact_shape=True))
+    # a probe budget on the vmap-fallback lowering cannot be honored
+    perleft = db.prepare(Q3, hints=ExecutionHints(join_lowering="perleft"))
+    with pytest.raises(ValueError, match="probe_budget cannot be honored"):
+        perleft.execute(_binds_for("q3", cat, 0.9, 2),
+                        hints=ExecutionHints(join_lowering="perleft",
+                                             probe_budget=2))
+
+
+# ---------------------------------------------------------------------------
+# explain: live executor state
+# ---------------------------------------------------------------------------
+
+def test_explain_reports_live_state(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare(Q1)
+    rep0 = stmt.explain()
+    assert rep0.buckets == () and rep0.cache_hit is False
+    res = stmt.execute(_binds_for("q1", cat, 0.0, 3))
+    rep1 = res.explain()
+    assert rep1.buckets == (4,) and rep1.trace_counts == {4: 1}
+    assert rep1.path == "bucketed" and rep1.bucket == 4
+    assert rep1.num_queries == 3
+    stmt.execute(_binds_for("q1", cat, 0.0, 9))
+    # the SAME handle sees the newly compiled bucket: reports are live
+    rep2 = res.explain()
+    assert rep2.buckets == (4, 16)
+    assert rep2.trace_counts == {4: 1, 16: 1}
+    text = rep2.render()
+    assert "native" in text and "bucket" in text
+    s2 = db.prepare(Q1)
+    assert s2.explain().cache_hit is True
+
+
+# ---------------------------------------------------------------------------
+# serving integration
+# ---------------------------------------------------------------------------
+
+def test_serve_roundtrip_with_renamed_params(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare("SELECT sample_id FROM products WHERE price < ${cap} "
+                      "ORDER BY DISTANCE(embedding, ${vec}) LIMIT 4")
+    binds_list = _binds_for("q1", cat, 0.0, 5)
+    renamed = [{"vec": b["qv"], "cap": b["p"]} for b in binds_list]
+    server = db.serve(stmt, max_batch=8, max_wait_ms=0.0)
+    rids = [server.submit(**b) for b in renamed]
+    done = server.flush()
+    assert sorted(done) == sorted(rids)
+    got = np.stack([np.asarray(server.result(r)["ids"]) for r in rids])
+    direct = stmt.execute(renamed)
+    np.testing.assert_array_equal(got, np.asarray(direct["ids"]))
+
+
+def test_serve_rejects_statics_on_statement(env):
+    cat, _ = env
+    db = _db(cat)
+    stmt = db.prepare(Q1)
+    with pytest.raises(TypeError, match="already-prepared"):
+        db.serve(stmt, K=8)
+
+
+def test_serve_from_sql_string(env):
+    cat, _ = env
+    db = _db(cat)
+    server = db.serve(Q1, max_batch=4, max_wait_ms=0.0)
+    b = _binds_for("q1", cat, 0.0, 1)[0]
+    rid = server.submit(**b)
+    server.flush()
+    out = server.result(rid)
+    stmt = db.prepare(Q1)          # cache hit: same plan the server uses
+    assert stmt.cache_hit
+    np.testing.assert_array_equal(
+        np.asarray(out["ids"]),
+        np.asarray(stmt.execute([b])["ids"])[0])
+
+
+# ---------------------------------------------------------------------------
+# shared-mutable-default fixes
+# ---------------------------------------------------------------------------
+
+def test_engine_options_probe_not_shared():
+    a, b = EngineOptions(), EngineOptions()
+    assert a.probe == b.probe
+    assert a.probe is not b.probe          # default_factory, not one instance
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.engine = "vbase"
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        a.probe.max_probes = 1
+
+
+def test_scheduler_config_not_shared(env):
+    cat, _ = env
+    stmt = _db(cat).prepare(Q1)
+    s1, s2 = BatchScheduler(stmt), BatchScheduler(stmt)
+    assert s1.config == s2.config
+    assert s1.config is not s2.config      # None-sentinel, fresh per instance
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        s1.config.max_batch = 1
+
+
+def test_database_one_shot_execute(env):
+    cat, _ = env
+    db = _db(cat)
+    b = _binds_for("q1", cat, 0.0, 1)[0]
+    r1 = db.execute(Q1, b)
+    r2 = db.execute(Q1, b)                 # second shot hits the cache
+    assert db.cache_info().hits >= 1
+    _trees_equal(r1.data, r2.data)
