@@ -14,7 +14,8 @@ import sys
 
 from . import (ablation_updatestate, counters, q1_vknn, q2_range,
                q3_distjoin, q4_knnjoin, q5q6_category, q7_batch_qps,
-               q8_sched_qps, q9_prepare_cache, q34_join_qps)
+               q8_sched_qps, q9_prepare_cache, q10_sharded_qps,
+               q34_join_qps)
 from .common import Row, get_env
 
 BENCHES = {
@@ -26,6 +27,7 @@ BENCHES = {
     "q7": q7_batch_qps.run,
     "q8": q8_sched_qps.run,
     "q9": q9_prepare_cache.run,
+    "q10": q10_sharded_qps.run,
     "q34": q34_join_qps.run,
     "fig9": ablation_updatestate.run,
     "t5": counters.run,
@@ -38,8 +40,8 @@ def main(argv=None) -> None:
                     help="tiny corpus (CI-scale)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sweep: tiny corpus + fast subset "
-                         "(q1, q7, q8 scheduler, q34 joins, t5) — what "
-                         "scripts/smoke.sh runs")
+                         "(q1, q7, q8 scheduler, q9 cache, q10 sharded, "
+                         "q34 joins, t5) — what scripts/smoke.sh runs")
     ap.add_argument("--only", default=None,
                     help="comma list of bench keys: " + ",".join(BENCHES))
     args = ap.parse_args(argv)
@@ -47,7 +49,7 @@ def main(argv=None) -> None:
     if args.only:
         keys = args.only.split(",")
     elif args.quick:
-        keys = ["q1", "q7", "q8", "q9", "q34", "t5"]
+        keys = ["q1", "q7", "q8", "q9", "q10", "q34", "t5"]
     else:
         keys = list(BENCHES)
     rows: list[Row] = []

@@ -18,6 +18,10 @@ Rows gated:
     sweep runs the deadline scheduler on the flat (index-less, fused-kernel)
     plan, so its QPS is as timing-stable as the other flat rows; the
     straggler-dominated effort row stays tracked-not-gated.
+  * BENCH_dist.json:  workloads.sharded shards=1 rows (key: batch, qps) —
+    the sharded lowering at one shard IS the flat path plus a no-op merge,
+    so its QPS is gate-stable; multi-shard rows measure fake-CPU-device
+    collective overhead and stay tracked-not-gated.
 
 Exit codes: 0 pass/skip (no committed baseline, or git unavailable),
 1 regression.  Tolerance: BENCH_GATE_TOL env var (default 0.20 = 20%).
@@ -123,6 +127,20 @@ def main() -> int:
         checked += _gate_rows("sched.poisson", sched_rows(base),
                               sched_rows(fresh), "rate_multiplier", "qps",
                               failures)
+
+    base = _committed("BENCH_dist.json")
+    fresh = _fresh("BENCH_dist.json")
+    if base and fresh and _same_config("BENCH_dist.json", base, fresh,
+                                       ("n_rows", "dim", "k",
+                                        "device_count")):
+        # only the shards=1 parity rows gate (see module docstring)
+        def dist_rows(report: dict) -> list:
+            return [{"batch": e["batch"], "qps": e["qps"]}
+                    for e in report.get("workloads", {}).get("sharded", [])
+                    if e.get("shards") == 1]
+
+        checked += _gate_rows("dist.shards1", dist_rows(base),
+                              dist_rows(fresh), "batch", "qps", failures)
 
     if checked == 0:
         print("bench_gate: no committed baselines to compare against — skip")

@@ -1,0 +1,178 @@
+#!/usr/bin/env python
+"""Docs lint: public-symbol docstrings and DESIGN.md section references.
+
+Two checks, both hard CI failures (wired into scripts/smoke.sh):
+
+1. **Docstring coverage** — every module, public module-level function,
+   public class, and public method of a public class under
+   ``src/repro/api``, ``src/repro/dist``, and ``src/repro/core`` must carry
+   a docstring.  Private names (leading underscore, including dunders) are
+   exempt, and so is a method override whose base class (resolvable in the
+   same module) documents the same method — the contract is documented
+   once, at the declaration site (``PlanNode.label`` speaks for every node
+   class's ``label``).
+2. **DESIGN.md section references** — every ``DESIGN.md §N`` pointer in the
+   tree (source comments, docstrings, markdown) must name a section that
+   actually exists (``## N.`` heading in DESIGN.md), including both ends of
+   ``§A–B`` ranges.  Stale pointers rot silently otherwise — section
+   numbers are load-bearing across code comments here.
+
+Exit codes: 0 clean, 1 violations (each printed as file:line).
+
+Usage:  python scripts/docs_check.py
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_PACKAGES = ("src/repro/api", "src/repro/dist", "src/repro/core")
+REF_SCAN_DIRS = ("src", "benchmarks", "scripts", "tests", "examples", "docs")
+REF_SCAN_ROOT_MD = True       # also scan *.md at the repo root
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _documented_methods(classes: dict, cls_name: str,
+                        seen: set | None = None) -> set[str]:
+    """Transitively collect method names documented on ``cls_name`` or any
+    same-module base class (single-module MRO approximation)."""
+    seen = set() if seen is None else seen
+    if cls_name in seen or cls_name not in classes:
+        return set()
+    seen.add(cls_name)
+    node = classes[cls_name]
+    out = {sub.name for sub in node.body
+           if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef))
+           and ast.get_docstring(sub)}
+    for base in node.bases:
+        if isinstance(base, ast.Name):
+            out |= _documented_methods(classes, base.id, seen)
+    return out
+
+
+def check_docstrings(failures: list[str]) -> int:
+    """AST-walk the documented packages; append violations, return #symbols."""
+    checked = 0
+    for pkg in DOC_PACKAGES:
+        pkg_dir = os.path.join(REPO, pkg)
+        for fname in sorted(os.listdir(pkg_dir)):
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(pkg_dir, fname)
+            rel = os.path.relpath(path, REPO)
+            with open(path) as f:
+                tree = ast.parse(f.read(), filename=rel)
+            checked += 1
+            if not ast.get_docstring(tree):
+                failures.append(f"{rel}:1 module docstring missing")
+            classes = {n.name: n for n in tree.body
+                       if isinstance(n, ast.ClassDef)}
+            for node in tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                     ast.ClassDef)):
+                    if not _is_public(node.name):
+                        continue
+                    checked += 1
+                    if not ast.get_docstring(node):
+                        kind = ("class" if isinstance(node, ast.ClassDef)
+                                else "function")
+                        failures.append(
+                            f"{rel}:{node.lineno} public {kind} "
+                            f"{node.name!r} missing docstring")
+                    if isinstance(node, ast.ClassDef):
+                        inherited = set()
+                        for base in node.bases:
+                            if isinstance(base, ast.Name):
+                                inherited |= _documented_methods(
+                                    classes, base.id)
+                        for sub in node.body:
+                            if not isinstance(sub, (ast.FunctionDef,
+                                                    ast.AsyncFunctionDef)):
+                                continue
+                            if not _is_public(sub.name):
+                                continue
+                            checked += 1
+                            if (not ast.get_docstring(sub)
+                                    and sub.name not in inherited):
+                                failures.append(
+                                    f"{rel}:{sub.lineno} public method "
+                                    f"{node.name}.{sub.name} missing "
+                                    f"docstring")
+    return checked
+
+
+def _design_sections() -> set[int]:
+    with open(os.path.join(REPO, "DESIGN.md")) as f:
+        text = f.read()
+    return {int(m) for m in re.findall(r"^## (\d+)\.", text, re.MULTILINE)}
+
+
+def _ref_files() -> list[str]:
+    out = []
+    for d in REF_SCAN_DIRS:
+        full = os.path.join(REPO, d)
+        if not os.path.isdir(full):
+            continue
+        for root, _dirs, files in os.walk(full):
+            for fname in files:
+                if fname.endswith((".py", ".md", ".sh")):
+                    out.append(os.path.join(root, fname))
+    if REF_SCAN_ROOT_MD:
+        for fname in os.listdir(REPO):
+            if fname.endswith(".md"):
+                out.append(os.path.join(REPO, fname))
+    return sorted(out)
+
+
+# a DESIGN.md mention, then every §N (and the B of a §A–B range) within the
+# following few tokens: "DESIGN.md §5", "(DESIGN.md §5, §10)", "DESIGN.md §8–9"
+_DESIGN_MENTION = re.compile(r"DESIGN(?:\.md)?\s*(§[^)\n]{0,24})")
+_SECTION_NUM = re.compile(r"§\s*(\d+)(?:\s*[–-]\s*§?\s*(\d+))?")
+
+
+def check_design_refs(failures: list[str]) -> int:
+    """Validate every DESIGN.md §N pointer; return the number checked."""
+    sections = _design_sections()
+    checked = 0
+    for path in _ref_files():
+        rel = os.path.relpath(path, REPO)
+        with open(path, errors="replace") as f:
+            for lineno, line in enumerate(f, 1):
+                for mention in _DESIGN_MENTION.finditer(line):
+                    for m in _SECTION_NUM.finditer(mention.group(1)):
+                        nums = [int(m.group(1))]
+                        if m.group(2):
+                            nums.append(int(m.group(2)))
+                        for n in nums:
+                            checked += 1
+                            if n not in sections:
+                                failures.append(
+                                    f"{rel}:{lineno} references DESIGN.md "
+                                    f"§{n}, which does not exist "
+                                    f"(sections: {sorted(sections)})")
+    return checked
+
+
+def main() -> int:
+    failures: list[str] = []
+    n_docs = check_docstrings(failures)
+    n_refs = check_design_refs(failures)
+    if failures:
+        print(f"docs_check: FAIL — {len(failures)} violation(s):")
+        for f in failures:
+            print("  " + f)
+        return 1
+    print(f"docs_check: OK — {n_docs} public symbols documented, "
+          f"{n_refs} DESIGN.md section references valid")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,12 +1,16 @@
 #!/usr/bin/env bash
 # CI smoke: the tier-1 suite (fast tests only — `slow`-marked subprocess
 # integration tests are deselected by pytest.ini) plus the quick benchmark
-# sweep (q1 latency/recall, q7 batched QPS, q8 scheduler smoke, q34
-# batch-native joins, t5 counters) on the tiny catalog — q34 exercises the
-# join families end-to-end on both lowerings, q8 exercises the dynamic
-# batch scheduler (Poisson policies + effort-bucketed IVF) — then the
+# sweep (q1 latency/recall, q7 batched QPS, q8 scheduler smoke, q9 plan
+# cache, q10 sharded scan, q34 batch-native joins, t5 counters) on the
+# tiny catalog — q34 exercises the join families end-to-end on both
+# lowerings, q8 the dynamic batch scheduler (Poisson policies +
+# effort-bucketed IVF), q10 the multi-device sharded lowering (fake CPU
+# devices in a child process; asserts shards=1 bit-parity) — then the
 # benchmark regression gate (scripts/bench_gate.py: fresh flat-path QPS
-# must stay within 20% of the committed BENCH_batch/BENCH_join baselines).
+# must stay within 20% of the committed BENCH_* baselines) and the docs
+# lint (scripts/docs_check.py: public-symbol docstrings in api/dist/core,
+# DESIGN.md §-reference validity).
 #
 # Finishes with examples/quickstart.py --smoke so the public session API
 # (connect/prepare/execute, plan cache, explain) is exercised end-to-end.
@@ -23,5 +27,6 @@ if [[ "${SMOKE_SLOW:-0}" == "1" ]]; then
 fi
 python -m benchmarks.run --quick
 python scripts/bench_gate.py
+python scripts/docs_check.py
 # public session API can't silently rot: run the quickstart at CI shapes
 python examples/quickstart.py --smoke

@@ -9,13 +9,21 @@
     print(batch.explain())                     # cache hit, lowering, buckets
     server = db.serve(stmt)                    # async submit/poll scheduler
 
+Distributed plans ride the same front door: ``connect(catalog,
+options=EngineOptions(dist=DistSpec(mesh_shape=(4,))))`` row-shards the
+scanned corpus over 4 devices and every execute path (single / bucketed /
+exact-shape) runs the shard × tile composition of DESIGN.md §10;
+``explain()`` reports the shard count and merge depth, and a mesh change
+misses the plan cache.
+
 Legacy shim: :func:`repro.core.compile_query` still works and returns the
 same bit-identical results — but compiles fresh on every call instead of
 hitting the plan cache.
 """
+from ..dist.sharding import DistSpec
 from .database import CacheInfo, Database, Statement, connect
 from .hints import ExecutionHints
 from .result import ExplainReport, Result, ResultBatch
 
-__all__ = ["connect", "Database", "Statement", "CacheInfo",
+__all__ = ["connect", "Database", "Statement", "CacheInfo", "DistSpec",
            "ExecutionHints", "ExplainReport", "Result", "ResultBatch"]

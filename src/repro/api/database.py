@@ -46,6 +46,7 @@ NO_HINTS = ExecutionHints()
 
 @dataclasses.dataclass(frozen=True)
 class CacheInfo:
+    """Plan-cache statistics snapshot (functools-style)."""
     hits: int
     misses: int
     entries: int
@@ -148,6 +149,7 @@ class Database:
         return BatchScheduler(statement, config)
 
     def cache_info(self) -> CacheInfo:
+        """Hits / misses / live entries of the normalized plan cache."""
         return CacheInfo(self._hits, self._misses, len(self._cache))
 
     # -- internals ----------------------------------------------------------
@@ -197,14 +199,17 @@ class Statement:
 
     @property
     def compiled(self) -> CompiledQuery:
+        """The (shared, cached) compiled handle behind this statement."""
         return self._entry.compiled
 
     @property
     def executor(self):
+        """The shared BucketedExecutor (bucket cache) of the cached plan."""
         return self._entry.compiled.executor
 
     @property
     def batch_native(self) -> bool:
+        """True when the plan's batched lowering is native (no vmap)."""
         return self._entry.compiled.batch_native
 
     def _stack_binds(self, binds_list, stacked) -> dict:
@@ -296,6 +301,7 @@ class Statement:
         def build() -> ExplainReport:
             c = self.compiled
             ex = c.executor
+            dist = c.options.dist
             return ExplainReport(
                 sql=self.sql,
                 engine=c.options.engine,
@@ -308,6 +314,8 @@ class Statement:
                 trace_counts=dict(ex.trace_counts),
                 logical_plan=c.logical_plan.pretty(),
                 rewritten_plan=c.rewritten_plan.pretty(),
+                shards=None if dist is None else dist.num_shards,
+                merge_depth=None if dist is None else dist.merge_depth,
                 **exec_fields)
 
         return build

@@ -45,15 +45,21 @@ class ExplainReport:
     num_queries: int | None = None
     hints: ExecutionHints | None = None
     effort: dict | None = None          # n_light / n_heavy split, if any
+    shards: int | None = None           # corpus shard count (dist plans)
+    merge_depth: int | None = None      # hierarchical-merge levels (dist)
 
     def render(self) -> str:
+        """Multi-line text form (what ``print(explain())`` shows)."""
         out = [f"-- engine: {self.engine}",
                f"-- class:  {self.query_class}",
                f"-- plan:   {self.plan_key} "
                f"({'cache hit' if self.cache_hit else 'compiled'})",
-               f"-- batch:  {self.batch_lowering}",
-               f"-- buckets: {list(self.buckets)} "
-               f"trace_counts={self.trace_counts}"]
+               f"-- batch:  {self.batch_lowering}"]
+        if self.shards is not None:
+            out.append(f"-- dist:   shards={self.shards} "
+                       f"merge_depth={self.merge_depth}")
+        out.append(f"-- buckets: {list(self.buckets)} "
+                   f"trace_counts={self.trace_counts}")
         if self.path is not None:
             exec_line = f"-- exec:   path={self.path}"
             if self.bucket is not None:
@@ -86,9 +92,11 @@ class Result:
         return key in self.data
 
     def keys(self):
+        """Raw output-tree keys (dict-transparent surface)."""
         return self.data.keys()
 
     def get(self, key: str, default=None):
+        """dict.get over the raw output tree."""
         return self.data.get(key, default)
 
     # -- uniform accessors --------------------------------------------------
@@ -106,6 +114,7 @@ class Result:
 
     @property
     def valid(self):
+        """Per-result validity mask (False lanes are empty buffer slots)."""
         return self.data["valid"]
 
     @property
@@ -114,6 +123,7 @@ class Result:
         return self.data.get("stats", {})
 
     def explain(self) -> ExplainReport:
+        """Live execution report (cache hit, lowering, executor state)."""
         return self._explain_fn()
 
     def __repr__(self):
@@ -135,6 +145,7 @@ class ResultBatch(Result):
         return self.num_queries
 
     def query(self, i: int) -> Result:
+        """One query's view of the batch (host-side slice; no recompile)."""
         if not -self.num_queries <= i < self.num_queries:
             raise IndexError(f"query index {i} out of range for batch of "
                              f"{self.num_queries}")

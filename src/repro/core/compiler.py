@@ -179,6 +179,7 @@ class BucketedExecutor:
         self.trace_counts: dict[int, int] = {}
 
     def bucket_for(self, qn: int) -> int:
+        """Enclosing power-of-two bucket a batch of ``qn`` queries runs in."""
         return _bucket_for(qn)
 
     @property
@@ -252,26 +253,32 @@ class CompiledQuery:
     # -- plan delegation (back-compat surface) ------------------------------
     @property
     def sql(self) -> str:
+        """The statement's original SQL text."""
         return self.plan.sql
 
     @property
     def analysis(self) -> Analysis:
+        """Semantic analysis (query class + extracted slots)."""
         return self.plan.analysis
 
     @property
     def logical_plan(self) -> PlanNode:
+        """The parsed (pre-rewrite) logical plan."""
         return self.plan.logical_plan
 
     @property
     def rewritten_plan(self) -> PlanNode:
+        """The CHASE-rewritten logical plan (R1-R3 applied)."""
         return self.plan.rewritten_plan
 
     @property
     def options(self) -> EngineOptions:
+        """The EngineOptions this plan compiled under."""
         return self.plan.options
 
     @property
     def batch_native(self) -> bool:
+        """True when execute_batch lowers natively (no vmap fallback)."""
         return self.plan.batch_native
 
     def __call__(self, **binds):
@@ -363,6 +370,7 @@ class CompiledQuery:
         return self._jitted.lower(self._arrays, dict(binds))
 
     def explain(self) -> str:
+        """Engine/class/lowering summary plus both plan trees, as text."""
         out = [f"-- engine: {self.options.engine}",
                f"-- class:  {self.analysis.query_class.value}",
                f"-- batch:  {self.plan.batch_reason}",
@@ -371,11 +379,21 @@ class CompiledQuery:
         return "\n".join(out)
 
 
-def _gather_arrays(a: Analysis, catalog: Catalog) -> dict:
+def _gather_arrays(a: Analysis, catalog: Catalog,
+                   options: EngineOptions | None = None) -> dict:
+    """Collect the device arrays a compiled pipeline closes over.
+
+    For distributed plans (``options.dist``) the scanned corpus is
+    additionally row-sharded over the spec's mesh: a matching
+    :class:`~repro.dist.sharding.ShardedCorpus` registered on the catalog
+    is reused (the registry is keyed per (table, column, mesh spec), so
+    handles for different meshes coexist); otherwise one is built and
+    registered."""
     arrays: dict[str, Any] = {}
     qc = a.query_class
     if qc in (QueryClass.VKNN_SF, QueryClass.DR_SF,
               QueryClass.CATEGORY_PARTITION):
+        scan_table, scan_column = a.table, a.vector_column
         tab = catalog.table(a.table)
         arrays["corpus"] = tab[a.vector_column]
         idx = catalog.index_for(a.table, a.vector_column)
@@ -384,6 +402,7 @@ def _gather_arrays(a: Analysis, catalog: Catalog) -> dict:
         if qc == QueryClass.CATEGORY_PARTITION:
             arrays["categories"] = tab[a.category_column.name]
     else:
+        scan_table, scan_column = a.right_table, a.right_vector
         ltab = catalog.table(a.left_table)
         rtab = catalog.table(a.right_table)
         arrays["left"] = ltab[a.left_vector]
@@ -393,6 +412,16 @@ def _gather_arrays(a: Analysis, catalog: Catalog) -> dict:
             arrays["index"] = idx
         if qc == QueryClass.CATEGORY_JOIN:
             arrays["categories"] = rtab[a.category_column.name]
+    if options is not None and options.dist is not None:
+        from ..dist.sharding import ShardedCorpus, resolve_mesh
+        sharded = catalog.sharded_for(scan_table, scan_column, options.dist)
+        if sharded is None:
+            sharded = ShardedCorpus.build(resolve_mesh(options.dist),
+                                          arrays["corpus"],
+                                          options.dist.axes)
+            catalog.register_sharded(scan_table, scan_column, sharded)
+        arrays["dcorpus"] = sharded.corpus
+        arrays["drow_ids"] = sharded.row_ids
     return arrays
 
 
@@ -433,6 +462,13 @@ def _batch_lowering(a: Analysis, options: EngineOptions):
     if batch_builder is None:
         return None, False, (f"vmap-of-scalar fallback (no native batch "
                              f"builder registered for class {qc.value})")
+    if options.dist is not None:
+        spec = options.dist
+        mesh = dict(zip(spec.axes, spec.mesh_shape))
+        return batch_builder, True, (
+            f"native sharded (distributed fused flat scan: "
+            f"{spec.num_shards} shard(s) over mesh {mesh}, "
+            f"merge depth {spec.merge_depth})")
     if options.join_lowering == "perleft" and qc in JOIN_LOWERING_FAMILIES:
         return None, False, "vmap-of-scalar fallback (perleft join lowering)"
     if qc in JOIN_LOWERING_FAMILIES:
@@ -441,6 +477,45 @@ def _batch_lowering(a: Analysis, options: EngineOptions):
                                      "query batch)")
     return batch_builder, True, ("native (query-tiled kernels / "
                                  "multi-cluster probes)")
+
+
+def _validate_dist(options: EngineOptions) -> None:
+    """Reject option combinations the sharded lowering cannot honor.
+
+    The distributed lowering is the exact fused flat scan (index probes are
+    bypassed — DESIGN.md §10), so the approximate comparison engines
+    (pase / vbase / brute_sort), whose measured inefficiency lives in the
+    bypassed plan structure, and the perleft join baseline cannot compose
+    with it."""
+    if options.dist is None:
+        return
+    if options.engine not in ("chase", "brute"):
+        raise ValueError(
+            f"EngineOptions.dist runs the exact distributed flat scan and "
+            f"only composes with engine 'chase' or 'brute', not "
+            f"{options.engine!r} (the comparison engines' plan-structural "
+            f"inefficiencies would be silently bypassed)")
+    if options.join_lowering != "batch":
+        raise ValueError(
+            "EngineOptions.dist requires join_lowering='batch': the sharded "
+            "lowering IS a query-batched scan (left rows ride the shard x "
+            "tile composition); the perleft loop has no sharded twin")
+
+
+def _single_via_batch(bfn: Callable) -> Callable:
+    """Single-query front for distributed plans.
+
+    A dist plan has ONE lowering — the query-batched sharded scan — so the
+    single-query pipeline runs it at Q=1 and slices the leading axis off
+    every output leaf (bit-identical to a one-element batch; no separate
+    single-query shard_map to compile or maintain)."""
+
+    def fn(arrays, binds):
+        stacked = {k: jnp.asarray(v)[None] for k, v in binds.items()}
+        out = bfn(arrays, stacked)
+        return jax.tree.map(lambda v: v[0], out)
+
+    return fn
 
 
 def compile_query(sql: str, catalog: Catalog,
@@ -471,15 +546,22 @@ def compile_plan(sql: str, plan: PlanNode, catalog: Catalog,
     if a.query_class == QueryClass.NON_HYBRID:
         raise NotImplementedError(
             "plan did not match a hybrid pattern; use the interpreter engine")
+    _validate_dist(options)
     rewritten = rewrite(a)
-    builder = BUILDERS[a.query_class]
-    fn = builder(a, catalog, options, Bindings(static_binds))
-    arrays = _gather_arrays(a, catalog)
+    arrays = _gather_arrays(a, catalog, options)
     batch_builder, batch_native, batch_reason = _batch_lowering(a, options)
-    if batch_native:
+    if options.dist is not None:
+        # one lowering per dist plan: the sharded batched pipeline serves
+        # the single-query path at Q=1 (see _single_via_batch)
         bfn = batch_builder(a, catalog, options, Bindings(static_binds))
+        fn = _single_via_batch(bfn)
     else:
-        bfn = _vmap_fallback(fn)
+        builder = BUILDERS[a.query_class]
+        fn = builder(a, catalog, options, Bindings(static_binds))
+        if batch_native:
+            bfn = batch_builder(a, catalog, options, Bindings(static_binds))
+        else:
+            bfn = _vmap_fallback(fn)
     compiled_plan = CompiledPlan(sql, a, plan, rewritten, options, fn, bfn,
                                  batch_native, batch_reason)
     executor = BucketedExecutor(compiled_plan, arrays)

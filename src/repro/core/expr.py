@@ -21,7 +21,10 @@ from .schema import Metric, Table
 
 
 class Expr:
+    """Base expression node; operator overloads build trees Python-side."""
+
     def children(self) -> Sequence["Expr"]:
+        """Direct child expressions (empty for leaves)."""
         return ()
 
     # -- convenience builders -------------------------------------------------
@@ -29,8 +32,15 @@ class Expr:
     def __le__(self, o): return Cmp("<=", self, wrap(o))
     def __gt__(self, o): return Cmp(">", self, wrap(o))
     def __ge__(self, o): return Cmp(">=", self, wrap(o))
-    def eq(self, o): return Cmp("=", self, wrap(o))
-    def ne(self, o): return Cmp("<>", self, wrap(o))
+
+    def eq(self, o):
+        """Build an equality comparison (``=``; ``==`` is identity here)."""
+        return Cmp("=", self, wrap(o))
+
+    def ne(self, o):
+        """Build an inequality comparison (``<>``)."""
+        return Cmp("<>", self, wrap(o))
+
     def __and__(self, o): return BoolOp("and", (self, wrap(o)))
     def __or__(self, o): return BoolOp("or", (self, wrap(o)))
     def __invert__(self): return BoolOp("not", (self,))
@@ -40,11 +50,13 @@ class Expr:
 
 
 def wrap(v) -> Expr:
+    """Lift a Python value into the IR (passthrough for Expr nodes)."""
     return v if isinstance(v, Expr) else Const(v)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Column(Expr):
+    """A (possibly table-qualified) column reference."""
     name: str
     table: str | None = None   # qualifier, e.g. "users.embedding"
 
@@ -54,6 +66,7 @@ class Column(Expr):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Const(Expr):
+    """A literal constant (number, bool, or array-like)."""
     value: Any
 
     def __repr__(self):
@@ -71,11 +84,13 @@ class Param(Expr):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Cmp(Expr):
+    """A binary comparison (``< <= > >= = <>``)."""
     op: str  # < <= > >= = <>
     lhs: Expr
     rhs: Expr
 
     def children(self):
+        """Direct child expressions: (lhs, rhs)."""
         return (self.lhs, self.rhs)
 
     def __repr__(self):
@@ -84,10 +99,12 @@ class Cmp(Expr):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class BoolOp(Expr):
+    """A boolean connective over operand expressions (``and/or/not``)."""
     op: str  # and / or / not
     operands: tuple[Expr, ...]
 
     def children(self):
+        """Direct child expressions: the operands."""
         return self.operands
 
     def __repr__(self):
@@ -98,11 +115,13 @@ class BoolOp(Expr):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Arith(Expr):
+    """A binary arithmetic expression (``+ - * /``)."""
     op: str  # + - * /
     lhs: Expr
     rhs: Expr
 
     def children(self):
+        """Direct child expressions: (lhs, rhs)."""
         return (self.lhs, self.rhs)
 
     def __repr__(self):
@@ -124,6 +143,7 @@ class Distance(Expr):
     metric: Metric | None = None
 
     def children(self):
+        """Direct child expressions: (lhs, rhs)."""
         return (self.lhs, self.rhs)
 
     def __repr__(self):
@@ -216,12 +236,14 @@ def evaluate(expr: Expr, table: Table, binds: Bindings,
 # -- structural helpers used by the semantic analyzer -----------------------
 
 def walk(expr: Expr):
+    """Yield ``expr`` and every descendant, pre-order."""
     yield expr
     for c in expr.children():
         yield from walk(c)
 
 
 def find_distance(expr: Expr) -> Distance | None:
+    """First :class:`Distance` node in the tree, or None."""
     for node in walk(expr):
         if isinstance(node, Distance):
             return node
@@ -229,6 +251,7 @@ def find_distance(expr: Expr) -> Distance | None:
 
 
 def contains_distance(expr: Expr) -> bool:
+    """True iff the tree contains a :class:`Distance` node."""
     return find_distance(expr) is not None
 
 
@@ -245,6 +268,7 @@ def split_conjuncts(expr: Expr | None) -> list[Expr]:
 
 
 def conjoin(exprs: Sequence[Expr]) -> Expr | None:
+    """AND a conjunct list back together (None/identity for 0/1 items)."""
     exprs = list(exprs)
     if not exprs:
         return None

@@ -23,6 +23,7 @@ from .sql import _Aliased
 
 @dataclasses.dataclass
 class Counters:
+    """Interpreter overhead counters (the Table-5-analogue measurables)."""
     next_calls: int = 0
     distance_evals: int = 0
     predicate_evals: int = 0
@@ -30,6 +31,8 @@ class Counters:
 
 
 class Interpreter:
+    """Tuple-at-a-time Volcano evaluator over a catalog (see module doc)."""
+
     def __init__(self, catalog: Catalog, binds: dict[str, Any]):
         self.catalog = catalog
         self.binds = binds
@@ -37,6 +40,7 @@ class Interpreter:
 
     # -- per-tuple expression evaluation (the slow path, on purpose) --------
     def eval_expr(self, e: Expr, t: dict) -> Any:
+        """Evaluate an expression against ONE tuple dict (counted)."""
         if isinstance(e, Column):
             key = f"{e.table}.{e.name}" if e.table else e.name
             if key in t:
@@ -98,6 +102,7 @@ class Interpreter:
 
     # -- iterator construction ----------------------------------------------
     def run(self, plan: PlanNode) -> list[dict]:
+        """Drain the plan's iterator tree into a list of tuple dicts."""
         out = []
         for t in self.iterate(plan):
             self.counters.next_calls += 1
@@ -105,6 +110,7 @@ class Interpreter:
         return out
 
     def iterate(self, node: PlanNode) -> Iterator[dict]:
+        """Build the pull-based iterator for one plan node (recursive)."""
         if isinstance(node, Scan):
             tab = self.catalog.table(node.table)
             cols = {n: np.asarray(v) for n, v in tab.columns.items()}

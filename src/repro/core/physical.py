@@ -42,6 +42,9 @@ from .semantics import Analysis, QueryClass
 
 @dataclasses.dataclass(frozen=True)
 class EngineOptions:
+    """Compile-time engine configuration (every field shapes compilation;
+    see :meth:`fingerprint`).  ``engine`` selects the plan shape of one of
+    the paper's comparison systems (module docstring)."""
     engine: str = "chase"          # chase | vbase | pase | brute | brute_sort
     # default_factory, NOT a shared ProbeConfig() instance: a class-level
     # default dataclass would be one object aliased across every
@@ -60,11 +63,20 @@ class EngineOptions:
     # legacy per-left-row scan loop (and forces the vmap-of-scalar
     # execute_batch fallback) — the measured baseline in benchmarks/q34.
     join_lowering: str = "batch"   # batch | perleft
+    # Multi-device sharded scan (DESIGN.md §10): a
+    # repro.dist.sharding.DistSpec row-shards the scanned corpus over its
+    # mesh and lowers EVERY query class onto the distributed fused flat
+    # scan (shard rows x tile queries + hierarchical per-query merge).
+    # Fingerprint-affecting: a mesh change misses the plan cache.  Exact —
+    # index probes are bypassed (a row-sharded corpus has no co-sharded IVF
+    # gather yet), so only engines 'chase' and 'brute' compose with it.
+    dist: "DistSpec | None" = None
 
     def fingerprint(self) -> str:
         """Stable serialization for the plan-cache key: every field shapes
         compilation, so any change must miss the cache.  Frozen dataclass
-        repr covers all fields (including the nested ProbeConfig)."""
+        repr covers all fields (including the nested ProbeConfig and the
+        DistSpec mesh description)."""
         return repr(self)
 
 
@@ -296,11 +308,109 @@ def _flatten_valid_budget(qvalid, probe_budget, qn: int, nleft: int):
 
 
 # ---------------------------------------------------------------------------
+# Sharded lowering (DESIGN.md §10) — selected by EngineOptions.dist
+# ---------------------------------------------------------------------------
+#
+# A DistSpec row-shards the scanned corpus over a device mesh; each device
+# runs the query-tiled fused scan for ALL Q queries, then a hierarchical
+# per-query merge (dist/collectives.py).  The lowering is EXACT and
+# engine-independent: index probes are bypassed (a row-sharded corpus has no
+# co-sharded IVF gather yet — ROADMAP item), so at shards=1 results are
+# bit-identical to the single-device fused flat path (engine='brute',
+# use_pallas=True) for every query class.  The q-valid lane threads through
+# to every shard: a size-bucket pad query emits no candidates and zero
+# counters on any device.
+
+
+def _dist_mask(arrays, rm, per_query_mask: bool) -> jnp.ndarray:
+    """Normalize the row mask to what the distributed collectives consume.
+
+    With a per-query mask (``rm`` (Q, N), a plan with a row predicate) the
+    divisibility-pad columns (beyond the real N — see
+    ``ShardedCorpus.build``) pad False to (Q, Npad).  Without one, the
+    shared (Npad,) ``row_ids >= 0`` mask excludes exactly the pad rows and
+    no (Q, N) array is ever materialized — predicate-free scans at
+    production N would otherwise ship Q·Npad mask bytes per batch."""
+    if not per_query_mask:
+        assert rm is None
+        return arrays["drow_ids"] >= 0
+    n = arrays["corpus"].shape[0]
+    npad = arrays["dcorpus"].shape[0]
+    m = rm.astype(jnp.bool_)
+    if npad != n:
+        m = jnp.pad(m, ((0, 0), (0, npad - n)), constant_values=False)
+    return m
+
+
+def _dist_qvalid(qvalid, qn: int) -> jnp.ndarray:
+    """Materialize the per-query valid lane ((Q,) bool; None -> all valid)."""
+    return (jnp.ones((qn,), jnp.bool_) if qvalid is None
+            else jnp.asarray(qvalid, jnp.bool_))
+
+
+def _dist_topk_core(opts: EngineOptions, metric: Metric, k: int,
+                    per_query_mask: bool):
+    """Build ``(arrays, qs, rm, qvalid) -> (ids, sims, valid, stats)``: the
+    sharded twin of the fused flat top-k batch (exact; counters match the
+    single-device flat path — N distance evals per valid query, 0 probes).
+    ``per_query_mask`` is static per plan: whether this plan evaluates a
+    row predicate into a (Q, N) mask (see :func:`_dist_mask`)."""
+    from ..dist.collectives import distributed_topk_batch
+    from ..dist.sharding import resolve_mesh
+    spec = opts.dist
+    dfn = distributed_topk_batch(resolve_mesh(spec), metric, k, spec.axes,
+                                 interpret=opts.interpret_pallas,
+                                 per_query_mask=per_query_mask)
+
+    def run(arrays, qs, rm, qvalid=None):
+        qn, n = qs.shape[0], arrays["corpus"].shape[0]
+        ids, sims, valid = dfn(arrays["dcorpus"], arrays["drow_ids"], qs,
+                               _dist_mask(arrays, rm, per_query_mask),
+                               _dist_qvalid(qvalid, qn))
+        stats = {"probes": jnp.zeros((qn,), jnp.int32),
+                 "distance_evals": _flat_evals(qvalid, qn, n)}
+        return ids, sims, valid, stats
+
+    return run
+
+
+def _dist_range_core(opts: EngineOptions, metric: Metric, capacity: int,
+                     n_rows: int, per_query_mask: bool):
+    """Build ``(arrays, qs, radius, rm, qvalid) -> (ids, sims, valid, count,
+    stats)``: the sharded twin of :func:`_flat_range_topk_batch`.  The
+    result buffer is ``min(capacity, n_rows)`` wide regardless of shard
+    count (per-shard buffers concatenate and re-truncate best-first at each
+    merge level); ``count`` stays exact past truncation (psum of per-shard
+    hit counts).  ``per_query_mask`` as in :func:`_dist_topk_core`."""
+    from ..dist.collectives import distributed_range_batch
+    from ..dist.sharding import resolve_mesh
+    spec = opts.dist
+    cap = min(int(capacity), int(n_rows))
+    dfn = distributed_range_batch(resolve_mesh(spec), metric, cap, spec.axes,
+                                  interpret=opts.interpret_pallas,
+                                  per_query_mask=per_query_mask)
+
+    def run(arrays, qs, radius, rm, qvalid=None):
+        qn, n = qs.shape[0], arrays["corpus"].shape[0]
+        radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (qn,))
+        ids, sims, valid, count = dfn(arrays["dcorpus"], arrays["drow_ids"],
+                                      qs, radius,
+                                      _dist_mask(arrays, rm, per_query_mask),
+                                      _dist_qvalid(qvalid, qn))
+        stats = {"probes": jnp.zeros((qn,), jnp.int32),
+                 "distance_evals": _flat_evals(qvalid, qn, n)}
+        return ids, sims, valid, count, stats
+
+    return run
+
+
+# ---------------------------------------------------------------------------
 # Q1 — VKNN-SF
 # ---------------------------------------------------------------------------
 
 def build_vknn_sf(a: Analysis, catalog: Catalog, opts: EngineOptions,
                   binds_static: Bindings) -> Callable:
+    """Q1 (VKNN-SF) single-query pipeline: filtered top-k by engine mode."""
     table = catalog.table(a.table)
     metric = _metric_of(catalog, a.table, a.vector_column)
     k = _static_int(a.k, binds_static, "K")
@@ -357,6 +467,7 @@ def build_vknn_sf(a: Analysis, catalog: Catalog, opts: EngineOptions,
 
 def build_dr_sf(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 binds_static: Bindings) -> Callable:
+    """Q2 (DR-SF) single-query pipeline: filtered range scan by engine."""
     table = catalog.table(a.table)
     metric = _metric_of(catalog, a.table, a.vector_column)
     mask_fn = _row_mask_fn(a.structured_predicate, table)
@@ -432,11 +543,17 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     index = catalog.index_for(a.right_table, a.right_vector)
     cfg = dataclasses.replace(opts.probe, capacity=opts.max_pairs)
+    sharded = (_dist_range_core(opts, metric, opts.max_pairs,
+                                catalog.table(a.right_table).num_rows,
+                                per_query_mask=a.join_predicate is not None)
+               if opts.dist is not None else None)
 
     def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         m = qs.shape[0]
         radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
+        if sharded is not None:
+            return sharded(arrays, qs, radius, rm, qvalid)
         if opts.engine in ("chase", "vbase") and index is not None:
             idx = arrays["index"]
             if opts.engine == "chase":
@@ -467,6 +584,8 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
 
 def build_dist_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     binds_static: Bindings) -> Callable:
+    """Q3 (distance join): left rows ride ONE query batch (see section
+    comment above; ``join_lowering='perleft'`` keeps the legacy loop)."""
     if opts.join_lowering == "perleft":
         return _build_dist_join_perleft(a, catalog, opts, binds_static)
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
@@ -596,11 +715,16 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     index = catalog.index_for(a.right_table, a.right_vector)
     cfg = opts.probe
+    sharded = (_dist_topk_core(opts, metric, k,
+                               per_query_mask=a.join_predicate is not None)
+               if opts.dist is not None else None)
 
     def core(arrays, qs, rm, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         m, n = qs.shape[0], corpus.shape[0]
-        if opts.engine == "chase" and index is not None:
+        if sharded is not None:
+            ids, sims, valid, stats = sharded(arrays, qs, rm, qvalid)
+        elif opts.engine == "chase" and index is not None:
             # R2: ANN top-k, all left rows in one probe batch — the 7500x
             # path with the matvec loop batched away
             ids, sims, valid, stats = ivf_topk_batch(
@@ -652,6 +776,7 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
 
 def build_knn_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                    binds_static: Bindings) -> Callable:
+    """Q4 (entity-centric KNN join): per-left top-k as one query batch."""
     if opts.join_lowering == "perleft":
         return _build_knn_join_perleft(a, catalog, opts, binds_static)
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
@@ -788,22 +913,31 @@ def _rank_per_category_batch(metric: Metric, ids, keys, valid, cats,
 
 
 def _category_core(opts: EngineOptions, metric: Metric, index,
-                   C: int, k: int, vbase_extra_evals: bool):
+                   C: int, k: int, vbase_extra_evals: bool,
+                   n_rows: int = 0, per_query_mask: bool = True):
     """(arrays, qs (M,d), radius, rm (M,N)|None) -> (M, C, K) ranked batch.
 
     Shared by the Q5 bind-batch lowering and the Q6 left-row batch: probe a
     (M, d) query batch (Algorithm 2's record table batched when updateState
-    applies), then run the window rank for all M queries at once."""
+    applies), then run the window rank for all M queries at once.
+    ``n_rows`` (the scanned table's row count) sizes the sharded range
+    buffer when ``opts.dist`` selects the distributed lowering."""
     cfg = dataclasses.replace(opts.probe, num_categories=C, k_per_category=k)
     use_update_state = opts.engine == "chase"
+    sharded = (_dist_range_core(opts, metric, cfg.capacity, n_rows,
+                                per_query_mask=per_query_mask)
+               if opts.dist is not None else None)
 
     def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
         cats = arrays["categories"]
         m = qs.shape[0]
         radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
-        if index is not None and opts.engine in ("chase", "vbase",
-                                                 "chase_no_updatestate"):
+        if sharded is not None:
+            ids, sims, valid, count, stats = sharded(arrays, qs, radius, rm,
+                                                     qvalid)
+        elif index is not None and opts.engine in ("chase", "vbase",
+                                                   "chase_no_updatestate"):
             idx = arrays["index"]
             if use_update_state:
                 ids, sims, valid, count, stats = ivf_range_category_batch(
@@ -839,6 +973,8 @@ def _category_core(opts: EngineOptions, metric: Metric, index,
 def build_category_partition(a: Analysis, catalog: Catalog,
                              opts: EngineOptions,
                              binds_static: Bindings) -> Callable:
+    """Q5 (category-driven, single table): range probe + per-category rank
+    (updateState early stop under the chase engine)."""
     table = catalog.table(a.table)
     metric = _metric_of(catalog, a.table, a.vector_column)
     k = _static_int(a.k, binds_static, "K")
@@ -908,7 +1044,9 @@ def build_category_partition_batch(a: Analysis, catalog: Catalog,
     mask_fn = _row_mask_fn(a.structured_predicate, table)
     qparam = a.query_expr
     index = catalog.index_for(a.table, a.vector_column)
-    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=True)
+    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=True,
+                          n_rows=table.num_rows,
+                          per_query_mask=mask_fn is not None)
     radius_expr = a.radius
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
@@ -931,6 +1069,7 @@ def build_category_partition_batch(a: Analysis, catalog: Catalog,
 
 def build_category_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
                         binds_static: Bindings) -> Callable:
+    """Q6 (category-driven join): Q5's probe+rank per left row, batched."""
     if opts.join_lowering == "perleft":
         return _build_category_join_perleft(a, catalog, opts, binds_static)
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
@@ -944,7 +1083,9 @@ def build_category_join(a: Analysis, catalog: Catalog, opts: EngineOptions,
     index = catalog.index_for(a.right_table, a.right_vector)
     # legacy-parity quirk: the per-left Q6 vbase plan never counted its
     # redundant re-sort evals — keep counters identical across lowerings
-    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False)
+    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False,
+                          n_rows=rtab.num_rows,
+                          per_query_mask=a.join_predicate is not None)
     radius_expr = a.radius
 
     def fn(arrays, binds):
@@ -978,7 +1119,9 @@ def build_category_join_batch(a: Analysis, catalog: Catalog,
     mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
                                  a.right_alias)
     index = catalog.index_for(a.right_table, a.right_vector)
-    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False)
+    core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False,
+                          n_rows=rtab.num_rows,
+                          per_query_mask=a.join_predicate is not None)
     radius_expr = a.radius
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
@@ -1086,6 +1229,8 @@ def _build_category_join_perleft(a: Analysis, catalog: Catalog,
 
 def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                         binds_static: Bindings) -> Callable:
+    """Q1 batched: Q bind sets on the query-tiled kernels / batched probes
+    (uniform batch_fn signature — see :class:`CompiledPlan`)."""
     table = catalog.table(a.table)
     metric = _metric_of(catalog, a.table, a.vector_column)
     k = _static_int(a.k, binds_static, "K")
@@ -1094,6 +1239,9 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     assert isinstance(qparam, Param), "VKNN-SF query must be a parameter"
     index = catalog.index_for(a.table, a.vector_column)
     cfg = opts.probe
+    dist = (_dist_topk_core(opts, metric, k,
+                            per_query_mask=mask_fn is not None)
+            if opts.dist is not None else None)
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
         corpus = arrays["corpus"]
@@ -1101,7 +1249,9 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
         qs = jnp.asarray(binds[qparam.name])                     # (Q, D)
         qn = qs.shape[0]
         row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
-        if opts.engine == "chase" and index is not None:
+        if dist is not None:
+            ids, sims, valid, stats = dist(arrays, qs, row_mask, qvalid)
+        elif opts.engine == "chase" and index is not None:
             idx: IVFIndex = arrays["index"]
             ids, sims, valid, stats = ivf_topk_batch(
                 idx, corpus, qs, k, row_mask, cfg,
@@ -1170,6 +1320,7 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
 
 def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                       binds_static: Bindings) -> Callable:
+    """Q2 batched: Q bind sets on the batched range kernels / probes."""
     table = catalog.table(a.table)
     metric = _metric_of(catalog, a.table, a.vector_column)
     mask_fn = _row_mask_fn(a.structured_predicate, table)
@@ -1177,6 +1328,9 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     index = catalog.index_for(a.table, a.vector_column)
     cfg = opts.probe
     radius_expr = a.radius
+    dist = (_dist_range_core(opts, metric, cfg.capacity, table.num_rows,
+                             per_query_mask=mask_fn is not None)
+            if opts.dist is not None else None)
 
     def radius_of(binds):
         return evaluate(radius_expr, table, binds)
@@ -1188,7 +1342,10 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
         qn = qs.shape[0]
         radius = jnp.broadcast_to(jax.vmap(radius_of)(binds), (qn,))
         row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
-        if opts.engine == "chase" and index is not None:
+        if dist is not None:
+            ids, sims, valid, count, stats = dist(arrays, qs, radius,
+                                                  row_mask, qvalid)
+        elif opts.engine == "chase" and index is not None:
             idx = arrays["index"]
             ids, sims, valid, count, stats = ivf_range_batch(
                 idx, corpus, qs, radius, row_mask, cfg,

@@ -20,10 +20,14 @@ from .expr import Expr, Distance
 
 
 class PlanNode:
+    """Base logical-plan node (an immutable tree; see module docstring)."""
+
     def children(self) -> Sequence["PlanNode"]:
+        """Direct child plan nodes (empty for leaves)."""
         return ()
 
     def pretty(self, indent: int = 0) -> str:
+        """Indented multi-line rendering of the subtree (for explain())."""
         pad = "  " * indent
         head = f"{pad}{self.label()}"
         lines = [head]
@@ -32,11 +36,13 @@ class PlanNode:
         return "\n".join(lines)
 
     def label(self) -> str:
+        """One-line node description used by :meth:`pretty`."""
         return type(self).__name__
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Scan(PlanNode):
+    """Full table scan (the relational leaf)."""
     table: str
     alias: str | None = None
 
@@ -47,6 +53,7 @@ class Scan(PlanNode):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Filter(PlanNode):
+    """Row selection by a boolean predicate expression."""
     child: PlanNode
     predicate: Expr
 
@@ -77,6 +84,7 @@ class Map(PlanNode):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class OrderBy(PlanNode):
+    """Sort by one key expression."""
     child: PlanNode
     key: Expr
     # ascending in *order-key* space; Distance keys are normalized by metric.
@@ -90,6 +98,7 @@ class OrderBy(PlanNode):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Limit(PlanNode):
+    """Keep the first k rows (k may be a static-bind parameter name)."""
     child: PlanNode
     k: "int | str"   # int or param name
 
@@ -102,6 +111,7 @@ class Limit(PlanNode):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Project(PlanNode):
+    """Output projection: (name, expression) pairs."""
     child: PlanNode
     outputs: tuple[tuple[str, Expr], ...]   # (output name, expr)
 
@@ -115,6 +125,8 @@ class Project(PlanNode):
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class Join(PlanNode):
+    """Inner join on an optional condition (vector joins carry the
+    DISTANCE predicate here before rewriting)."""
     left: PlanNode
     right: PlanNode
     condition: Expr | None
@@ -209,6 +221,7 @@ class UpdateState(PlanNode):
 # ---------------------------------------------------------------------------
 
 def walk_plan(node: PlanNode):
+    """Yield ``node`` and every descendant, pre-order."""
     yield node
     for c in node.children():
         yield from walk_plan(c)
@@ -224,6 +237,7 @@ def replace_child(node: PlanNode, old: PlanNode, new: PlanNode) -> PlanNode:
 
 
 def find_first(node: PlanNode, kind) -> Optional[PlanNode]:
+    """First node of type ``kind`` in pre-order, or None."""
     for n in walk_plan(node):
         if isinstance(n, kind):
             return n

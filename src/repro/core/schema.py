@@ -20,6 +20,7 @@ import numpy as np
 
 
 class ColumnKind(enum.Enum):
+    """Column type tags for the relational schema."""
     INT = "int"
     FLOAT = "float"
     BOOL = "bool"
@@ -28,6 +29,7 @@ class ColumnKind(enum.Enum):
 
 
 class Metric(enum.Enum):
+    """Vector distance/similarity metric of a vector column."""
     L2 = "l2"
     INNER_PRODUCT = "ip"
     COSINE = "cosine"
@@ -39,6 +41,7 @@ class Metric(enum.Enum):
 
 @dataclasses.dataclass(frozen=True)
 class ColumnType:
+    """Typed column declaration (kind, dtype, and vector/category extras)."""
     kind: ColumnKind
     dtype: Any = None          # jnp dtype; defaulted per kind
     dim: int | None = None     # vector dimensionality
@@ -60,28 +63,34 @@ class ColumnType:
 
 
 def int_col(dtype=jnp.int32) -> ColumnType:
+    """Integer column declaration."""
     return ColumnType(ColumnKind.INT, dtype)
 
 
 def float_col(dtype=jnp.float32) -> ColumnType:
+    """Float column declaration."""
     return ColumnType(ColumnKind.FLOAT, dtype)
 
 
 def bool_col() -> ColumnType:
+    """Boolean column declaration."""
     return ColumnType(ColumnKind.BOOL)
 
 
 def category_col(num_categories: int | None = None) -> ColumnType:
+    """Dictionary-encoded category column declaration."""
     return ColumnType(ColumnKind.CATEGORY, num_categories=num_categories)
 
 
 def vector_col(dim: int, metric: Metric = Metric.INNER_PRODUCT,
                dtype=jnp.float32) -> ColumnType:
+    """Dense vector column declaration (first-class: carries dim + metric)."""
     return ColumnType(ColumnKind.VECTOR, dtype, dim=dim, metric=metric)
 
 
 @dataclasses.dataclass(frozen=True)
 class Schema:
+    """Ordered column-name -> ColumnType mapping for one table."""
     columns: Mapping[str, ColumnType]
     primary_key: str | None = None
 
@@ -92,9 +101,11 @@ class Schema:
         return self.columns[name]
 
     def vector_columns(self) -> list[str]:
+        """Names of the schema's vector columns."""
         return [n for n, t in self.columns.items() if t.kind == ColumnKind.VECTOR]
 
     def names(self) -> list[str]:
+        """All column names, in declaration order."""
         return list(self.columns.keys())
 
 
@@ -130,6 +141,7 @@ class Table:
         return self.columns[name]
 
     def with_column(self, name: str, ctype: ColumnType, values: jnp.ndarray) -> "Table":
+        """A new Table with one extra (or replaced) column."""
         cols = dict(self.columns)
         cols[name] = values
         schema = Schema({**dict(self.schema.columns), name: ctype},
@@ -137,6 +149,7 @@ class Table:
         return Table(schema, cols, self.valid, self.name)
 
     def with_valid(self, valid: jnp.ndarray) -> "Table":
+        """A new Table sharing columns but with a replaced validity mask."""
         return Table(self.schema, self.columns, valid, self.name)
 
     def take(self, idx: jnp.ndarray, valid: jnp.ndarray | None = None) -> "Table":
@@ -148,33 +161,57 @@ class Table:
         return Table(self.schema, cols, base_valid, self.name)
 
     def to_numpy(self) -> dict[str, np.ndarray]:
+        """Host-side copy of all columns plus the ``__valid`` mask."""
         out = {n: np.asarray(v) for n, v in self.columns.items()}
         out["__valid"] = np.asarray(self.valid)
         return out
 
 
 class Catalog:
-    """Name → Table registry plus per-(table, column) ANN indexes."""
+    """Name → Table registry plus per-(table, column) ANN indexes and
+    row-sharded corpus handles (for distributed plans, DESIGN.md §10)."""
 
     def __init__(self):
         self._tables: dict[str, Table] = {}
         self._indexes: dict[tuple[str, str], Any] = {}
+        self._sharded: dict[tuple[str, str], Any] = {}
 
     def register(self, name: str, table: Table) -> None:
+        """Register (or replace) a table under ``name``."""
         table.name = name
         self._tables[name] = table
 
     def table(self, name: str) -> Table:
+        """Look up a registered table (KeyError when absent)."""
         return self._tables[name]
 
     def has_table(self, name: str) -> bool:
+        """True iff ``name`` is a registered table."""
         return name in self._tables
 
     def register_index(self, table: str, column: str, index: Any) -> None:
+        """Attach an ANN index to a (table, vector column) pair."""
         self._indexes[(table, column)] = index
 
     def index_for(self, table: str, column: str):
+        """The ANN index registered for (table, column), or None."""
         return self._indexes.get((table, column))
 
+    def register_sharded(self, table: str, column: str, sharded: Any) -> None:
+        """Attach a :class:`~repro.dist.sharding.ShardedCorpus` handle to a
+        (table, vector column) pair.
+
+        Keyed by the handle's own mesh spec (``sharded.spec``), so handles
+        for different meshes coexist: every plan compiled with a matching
+        ``EngineOptions.dist`` reuses the handle's device placement instead
+        of re-slicing the corpus per prepare."""
+        self._sharded[(table, column, sharded.spec)] = sharded
+
+    def sharded_for(self, table: str, column: str, spec: Any):
+        """The ShardedCorpus registered for (table, column) on exactly the
+        mesh ``spec`` (a ``DistSpec``) describes, or None."""
+        return self._sharded.get((table, column, spec))
+
     def tables(self) -> list[str]:
+        """Names of all registered tables."""
         return list(self._tables)

@@ -23,6 +23,7 @@ from .sql import _Aliased
 
 
 class QueryClass(enum.Enum):
+    """The paper's hybrid query taxonomy (Q1-Q6) plus NON_HYBRID."""
     VKNN_SF = "vknn_sf"                    # Q1
     DR_SF = "dr_sf"                        # Q2
     DIST_JOIN = "dist_join"                # Q3

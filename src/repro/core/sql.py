@@ -41,12 +41,14 @@ KEYWORDS = {
 
 @dataclasses.dataclass
 class Token:
+    """One lexeme: (kind, text, source position)."""
     kind: str
     text: str
     pos: int
 
 
 def tokenize(sql: str) -> list[Token]:
+    """Lex ``sql`` into tokens (keywords lower-cased, whitespace dropped)."""
     out: list[Token] = []
     i = 0
     while i < len(sql):
@@ -68,6 +70,7 @@ def tokenize(sql: str) -> list[Token]:
 
 @dataclasses.dataclass
 class SelectItem:
+    """One SELECT-list entry (expression, window item, or ``*``)."""
     expr: Expr | None       # None for window items (handled specially) or '*'
     alias: str | None
     window: Optional["WindowSpec"] = None
@@ -76,31 +79,38 @@ class SelectItem:
 
 @dataclasses.dataclass
 class WindowSpec:
+    """RANK() OVER (PARTITION BY ... ORDER BY ...) clause body."""
     partition_by: list[Expr]
     order_by: Expr
 
 
 class Parser:
+    """Recursive-descent parser for the hybrid-query SQL template surface."""
+
     def __init__(self, sql: str):
         self.toks = tokenize(sql)
         self.i = 0
 
     # -- token plumbing ------------------------------------------------------
     def peek(self, off: int = 0) -> Token:
+        """Look ahead ``off`` tokens without consuming."""
         return self.toks[min(self.i + off, len(self.toks) - 1)]
 
     def next(self) -> Token:
+        """Consume and return the current token."""
         t = self.toks[self.i]
         self.i += 1
         return t
 
     def accept(self, kind: str, text: str | None = None) -> Token | None:
+        """Consume the current token iff it matches; None otherwise."""
         t = self.peek()
         if t.kind == kind and (text is None or t.text == text):
             return self.next()
         return None
 
     def expect(self, kind: str, text: str | None = None) -> Token:
+        """Consume a required token or raise SyntaxError."""
         t = self.accept(kind, text)
         if t is None:
             got = self.peek()
@@ -108,6 +118,7 @@ class Parser:
         return t
 
     def parse_alias(self) -> str:
+        """An alias name (permits the ``rank`` keyword as a name)."""
         t = self.peek()
         if t.kind == "name" or (t.kind == "kw" and t.text in ("rank",)):
             return self.next().text
@@ -115,11 +126,13 @@ class Parser:
 
     # -- entry ---------------------------------------------------------------
     def parse(self) -> PlanNode:
+        """Parse a full statement to a logical plan (must consume all input)."""
         plan = self.parse_select()
         self.expect("eof")
         return plan
 
     def parse_select(self) -> PlanNode:
+        """SELECT ... FROM ... [WHERE] [ORDER BY] [LIMIT] -> plan tree."""
         self.expect("kw", "select")
         items = [self.parse_select_item()]
         while self.accept("punct", ","):
@@ -181,6 +194,7 @@ class Parser:
         return plan
 
     def parse_from_item(self) -> PlanNode:
+        """A FROM item: table (with alias) or parenthesized subquery."""
         if self.accept("punct", "("):
             sub = self.parse_select()
             self.expect("punct", ")")
@@ -199,6 +213,7 @@ class Parser:
         return Scan(t.text, alias or t.text)
 
     def parse_select_item(self) -> SelectItem:
+        """A SELECT-list item: ``*``, RANK() OVER (...), or expression."""
         if self.accept("punct", "*"):
             return SelectItem(None, None, star=True)
         # RANK() OVER (...)
@@ -231,26 +246,31 @@ class Parser:
 
     # -- expressions (precedence: or < and < not < cmp < add < mul < unary) --
     def parse_expr(self) -> Expr:
+        """An expression at the lowest precedence level (OR)."""
         return self.parse_or()
 
     def parse_or(self) -> Expr:
+        """Left-associative OR chain."""
         e = self.parse_and()
         while self.accept("kw", "or"):
             e = BoolOp("or", (e, self.parse_and()))
         return e
 
     def parse_and(self) -> Expr:
+        """Left-associative AND chain."""
         e = self.parse_not()
         while self.accept("kw", "and"):
             e = BoolOp("and", (e, self.parse_not()))
         return e
 
     def parse_not(self) -> Expr:
+        """Prefix NOT (right-associative)."""
         if self.accept("kw", "not"):
             return BoolOp("not", (self.parse_not(),))
         return self.parse_cmp()
 
     def parse_cmp(self) -> Expr:
+        """A comparison (non-associative) over additive operands."""
         e = self.parse_add()
         t = self.peek()
         if t.kind == "op":
@@ -260,11 +280,13 @@ class Parser:
         return e
 
     def parse_add(self) -> Expr:
+        """Additive level (template surface: passthrough to unary)."""
         # The template surface needs no arithmetic beyond DESC negation
         # (built internally); extendable here if required.
         return self.parse_unary()
 
     def parse_unary(self) -> Expr:
+        """Atoms: parens, literals, params, DISTANCE(...), columns."""
         t = self.peek()
         if t.kind == "punct" and t.text == "(":
             self.next()

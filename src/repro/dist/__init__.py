@@ -1,10 +1,18 @@
 """Distribution layer: logical-axis sharding rules and query collectives.
 
 ``sharding``    — logical axis names -> mesh axes (the model/engine code only
-                  speaks logical names; the launch layer binds them to a mesh).
-``collectives`` — sharded-corpus hybrid-query primitives (per-shard fused
-                  scan + hierarchical top-k / range merges).
+                  speaks logical names; the launch layer binds them to a
+                  mesh), plus the engine's corpus-sharding handles:
+                  :class:`DistSpec` (the fingerprintable mesh description
+                  that rides ``EngineOptions.dist``) and
+                  :class:`ShardedCorpus` (the row-sharded corpus handle the
+                  catalog registers).
+``collectives`` — sharded-corpus hybrid-query primitives: per-shard fused
+                  scans + hierarchical top-k / range merges, single-query
+                  (DESIGN.md §5) and query-batched (DESIGN.md §10).
 """
 from . import collectives, sharding
+from .sharding import DistSpec, ShardedCorpus, resolve_mesh
 
-__all__ = ["collectives", "sharding"]
+__all__ = ["collectives", "sharding", "DistSpec", "ShardedCorpus",
+           "resolve_mesh"]

@@ -1,0 +1,419 @@
+"""Multi-device sharded batched scan (DESIGN.md §10).
+
+Contracts under test:
+
+* **shards=1 bit-parity**: an ``EngineOptions.dist`` plan on a one-device
+  mesh is bit-identical to the single-device bucketed fused flat path for
+  EVERY query class (Q1-Q6) — the hierarchical merge at one shard is an
+  identity re-selection, so the shard × tile composition adds nothing.
+* **pad-query inertness per shard**: the size-bucket ``qvalid`` lane
+  threads through the shard_map — pad queries emit no candidates and zero
+  counters (observable via ``BucketedExecutor.run_padded``).
+* **range capacity truncation**: per-shard buffers concatenate and
+  re-truncate best-first to ONE shard-count-independent ``capacity``-wide
+  result; ``count`` stays exact past truncation.
+* **mesh fingerprinting**: ``DistSpec`` folds into the plan-cache key — a
+  same-mesh re-prepare compiles ZERO executables (trace_counts), a mesh
+  change misses the cache and compiles fresh.
+* **option validation**: dist composes only with engine chase/brute and
+  join_lowering='batch'; malformed DistSpecs and missing devices fail loud.
+
+Multi-shard exactness (shards ∈ {2, 4}, with a divisibility-padded corpus)
+runs in subprocesses with fake CPU devices — marked ``slow`` like
+tests/test_distributed.py; benchmarks/q10_sharded_qps.py asserts the same
+invariants on every run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import EngineOptions, Metric, compile_query
+from repro.dist import DistSpec
+from repro.dist.sharding import resolve_mesh
+from repro.index.ivf import ProbeConfig
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SPEC1 = DistSpec(mesh_shape=(1,), axes=("data",))
+
+Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+      "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2 = ("SELECT sample_id FROM images "
+      "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}")
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year >= ${y}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 3
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+
+# the single-device reference the sharded lowering is bit-identical to:
+# the fused flat path (dist bypasses index probes — DESIGN.md §10)
+FLAT = dict(engine="brute", use_pallas=True, max_pairs=64)
+
+# predicate-free variants ride the SHARED (Npad,) mask path (no (Q, N)
+# mask is materialized — collectives per_query_mask=False)
+Q1_NOFILTER = ("SELECT sample_id FROM products "
+               "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2_NOFILTER = ("SELECT sample_id FROM images "
+               "WHERE DISTANCE(embedding, ${qv}) <= ${r}")
+
+CASES = {"q1": Q1, "q2": Q2, "q3": Q3, "q4": Q4, "q5": Q5, "q6": Q6,
+         "q1_nofilter": Q1_NOFILTER, "q2_nofilter": Q2_NOFILTER}
+
+
+@pytest.fixture(scope="module")
+def env():
+    from repro.data import make_laion_catalog
+
+    cat = make_laion_catalog(n_rows=1200, n_queries=4, dim=16, n_modes=8,
+                             num_categories=4, seed=0)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -30, axis=1)[:, -30]))
+    return cat, radius
+
+
+def _qvecs(cat, qn: int) -> np.ndarray:
+    base = np.asarray(cat.table("queries")["embedding"])
+    rng = np.random.default_rng(3)
+    reps = -(-qn // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:qn]
+    return (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+
+
+def _binds_for(case: str, cat, radius: float, qn: int) -> dict:
+    rng = np.random.default_rng(7)
+    price = np.asarray(cat.table("laion")["price"])
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    if case == "q1_nofilter":
+        return {"qv": _qvecs(cat, qn)}
+    if case == "q2_nofilter":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(np.float32)}
+    if case == "q1":
+        return {"qv": _qvecs(cat, qn),
+                "p": np.quantile(price, rng.uniform(0.3, 1.0, qn)).astype(
+                    np.float32)}
+    if case == "q2":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(np.float32),
+                "d": np.quantile(dates, rng.uniform(0.2, 0.8, qn)).astype(
+                    np.int32)}
+    if case in ("q3", "q6"):
+        return {"r": (radius * rng.uniform(0.95, 1.0, qn)).astype(np.float32)}
+    if case == "q4":
+        years = np.asarray(cat.table("movies")["release_year"])
+        return {"y": np.quantile(years, rng.uniform(0.1, 0.6, qn)).astype(
+            np.int32)}
+    if case == "q5":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(np.float32)}
+    raise ValueError(case)
+
+
+def _assert_tree_equal(a, b, ctx=""):
+    assert set(a) == set(b)
+    for key in a:
+        if key == "stats":
+            for sk in a["stats"]:
+                assert np.array_equal(np.asarray(a["stats"][sk]),
+                                      np.asarray(b["stats"][sk])), \
+                    f"{ctx}:stats.{sk}"
+        else:
+            assert np.array_equal(np.asarray(a[key]),
+                                  np.asarray(b[key])), f"{ctx}:{key}"
+
+
+# ---------------------------------------------------------------------------
+# shards=1 bit-parity vs the single-device bucketed path, Q1-Q6
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_shards1_bitparity_vs_bucketed(env, case):
+    cat, radius = env
+    ref = compile_query(CASES[case], cat, EngineOptions(**FLAT))
+    dist = compile_query(CASES[case], cat,
+                         EngineOptions(**FLAT, dist=SPEC1))
+    binds = _binds_for(case, cat, radius, 3)
+    _assert_tree_equal(ref.execute_bucketed(**binds),
+                       dist.execute_bucketed(**binds), ctx=case)
+
+
+def test_shards1_single_query_path_matches(env):
+    cat, radius = env
+    ref = compile_query(Q1, cat, EngineOptions(**FLAT))
+    dist = compile_query(Q1, cat, EngineOptions(**FLAT, dist=SPEC1))
+    binds = _binds_for("q1", cat, radius, 1)
+    r = ref(qv=binds["qv"][0], p=float(binds["p"][0]))
+    d = dist(qv=binds["qv"][0], p=float(binds["p"][0]))
+    for key in ("ids", "sim", "valid"):
+        assert np.array_equal(np.asarray(r[key]), np.asarray(d[key])), key
+
+
+# ---------------------------------------------------------------------------
+# pad queries are inert on the sharded path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_pad_queries_inert_on_sharded_path(env, case):
+    cat, radius = env
+    q = compile_query(CASES[case], cat, EngineOptions(**FLAT, dist=SPEC1))
+    qn = 3
+    binds = q._stack_binds(
+        None, {k: jnp.asarray(v)
+               for k, v in _binds_for(case, cat, radius, qn).items()})
+    out, bucket, valid = q.executor.run_padded(binds, qn)
+    assert bucket == 4 and not bool(np.asarray(valid)[qn:].any())
+    for sk, v in out["stats"].items():
+        assert (np.asarray(v)[qn:] == 0).all(), f"pad counters: {sk}"
+    assert not np.asarray(out["valid"])[qn:].any()
+    if "count" in out:
+        assert (np.asarray(out["count"])[qn:] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# range capacity truncation across the (concatenated) per-shard buffers
+# ---------------------------------------------------------------------------
+
+def test_range_capacity_truncation_exact_counts(env):
+    cat, radius = env
+    cap = 16
+    opts = dict(engine="brute", use_pallas=True,
+                probe=ProbeConfig(capacity=cap))
+    ref = compile_query(Q2, cat, EngineOptions(**opts))
+    dist = compile_query(Q2, cat, EngineOptions(**opts, dist=SPEC1))
+    qn = 3
+    binds = _binds_for("q2", cat, radius, qn)
+    # a wide-open radius (IP similarity: low threshold admits everything)
+    # so every query overflows the capacity buffer
+    binds["r"] = np.full((qn,), -1e6, np.float32)
+    binds["d"] = np.full((qn,), int(np.min(np.asarray(
+        cat.table("laion")["capture_date"]))) - 1, np.int32)
+    r, d = ref.execute_bucketed(**binds), dist.execute_bucketed(**binds)
+    _assert_tree_equal(r, d, ctx="q2-truncated")
+    counts = np.asarray(d["count"])
+    assert (counts > cap).all()                  # truncation actually bites
+    assert np.asarray(d["ids"]).shape[1] == cap  # buffer is capacity-wide
+    assert np.asarray(d["valid"]).sum(axis=1).tolist() == [cap] * qn
+
+
+# ---------------------------------------------------------------------------
+# mesh fingerprint: plan-cache behaviour (DESIGN.md §9 x §10)
+# ---------------------------------------------------------------------------
+
+def test_mesh_fingerprint_keys_plan_cache(env):
+    from repro.api import connect
+
+    cat, radius = env
+    db = connect(cat, EngineOptions(**FLAT, dist=SPEC1))
+    binds = _binds_for("q1", cat, radius, 3)
+
+    s1 = db.prepare(Q1)
+    s1.execute([{k: v[i] for k, v in binds.items()} for i in range(3)])
+    assert s1.executor.trace_counts == {4: 1}
+
+    # same-mesh re-prepare: cache hit, zero new executables
+    s2 = db.prepare(Q1)
+    assert s2.cache_hit and s2.executor is s1.executor
+    s2.execute([{k: v[i] for k, v in binds.items()} for i in range(3)])
+    assert s1.executor.trace_counts == {4: 1}
+    assert db.cache_info().hits == 1
+
+    # mesh change (different axis name -> different fingerprint): miss,
+    # fresh compile in a fresh executor
+    other = DistSpec(mesh_shape=(1,), axes=("shard",))
+    s3 = db.prepare(Q1, options=EngineOptions(**FLAT, dist=other))
+    assert not s3.cache_hit and s3.executor is not s1.executor
+    assert s3.executor.trace_counts == {}
+    res = s3.execute([{k: v[i] for k, v in binds.items()} for i in range(3)])
+    assert s3.executor.trace_counts == {4: 1}
+    assert s1.executor.trace_counts == {4: 1}    # untouched
+
+    rep = res.explain()
+    assert rep.shards == 1 and rep.merge_depth == 1
+    assert "shards=1" in rep.render()
+
+
+def test_sharded_corpus_registered_and_reused(env):
+    cat, radius = env
+    compile_query(Q1, cat, EngineOptions(**FLAT, dist=SPEC1))
+    handle = cat.sharded_for("products", "embedding", SPEC1)
+    assert handle is not None and handle.matches(SPEC1)
+    assert handle.spec == SPEC1
+    assert handle.num_rows == 1200
+    q2 = compile_query(Q1, cat, EngineOptions(**FLAT, dist=SPEC1))
+    assert q2._arrays["dcorpus"] is handle.corpus    # one device placement
+    # the registry is keyed per mesh spec: a second mesh gets its OWN
+    # cached handle and the first registration survives
+    other = DistSpec(mesh_shape=(1,), axes=("shard",))
+    compile_query(Q1, cat, EngineOptions(**FLAT, dist=other))
+    assert cat.sharded_for("products", "embedding", SPEC1) is handle
+    h2 = cat.sharded_for("products", "embedding", other)
+    assert h2 is not None and h2 is not handle and h2.spec == other
+
+
+# ---------------------------------------------------------------------------
+# option / spec validation
+# ---------------------------------------------------------------------------
+
+def test_dist_option_validation(env):
+    cat, _ = env
+    with pytest.raises(ValueError, match="chase.*brute|brute.*chase"):
+        compile_query(Q1, cat, EngineOptions(engine="pase", dist=SPEC1))
+    with pytest.raises(ValueError, match="join_lowering='batch'"):
+        compile_query(Q3, cat, EngineOptions(
+            engine="brute", join_lowering="perleft", dist=SPEC1))
+
+
+def test_dist_spec_validation():
+    with pytest.raises(ValueError, match="same length"):
+        DistSpec(mesh_shape=(2, 2), axes=("data",))
+    with pytest.raises(ValueError, match="duplicate"):
+        DistSpec(mesh_shape=(2, 2), axes=("data", "data"))
+    with pytest.raises(ValueError, match=">= 1"):
+        DistSpec(mesh_shape=(0,), axes=("data",))
+    # normalized to tuples so the repr (the fingerprint) is stable
+    assert repr(DistSpec(mesh_shape=[2], axes=["data"])) == \
+        repr(DistSpec(mesh_shape=(2,), axes=("data",)))
+
+
+def test_resolve_mesh_insufficient_devices(env):
+    cat, _ = env
+    need = len(jax.devices()) + 7
+    with pytest.raises(RuntimeError,
+                       match="xla_force_host_platform_device_count"):
+        compile_query(Q1, cat, EngineOptions(
+            **FLAT, dist=DistSpec(mesh_shape=(need,), axes=("data",))))
+
+
+# ---------------------------------------------------------------------------
+# multi-shard exactness (subprocess with fake CPU devices) — slow
+# ---------------------------------------------------------------------------
+
+def _run(code: str, devices: int = 4, timeout: int = 600):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.mark.slow
+def test_multi_shard_topk_and_range_exact():
+    # 1001 rows: NOT divisible by 2 or 4, so the divisibility padding and
+    # its mask exclusion are exercised on every shard count
+    out = _run("""
+        import numpy as np
+        from repro.core import EngineOptions, compile_query
+        from repro.data import make_laion_catalog
+        from repro.dist import DistSpec
+
+        cat = make_laion_catalog(n_rows=1001, n_queries=4, dim=16,
+                                 n_modes=8, num_categories=4, seed=0)
+        sims = (np.asarray(cat.table("queries")["embedding"])
+                @ np.asarray(cat.table("laion")["vec"]).T)
+        radius = float(np.median(np.partition(sims, -30, axis=1)[:, -30]))
+        FLAT = dict(engine="brute", use_pallas=True)
+        Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+              "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+        Q2 = ("SELECT sample_id FROM images "
+              "WHERE DISTANCE(embedding, ${qv}) <= ${r}")
+        qv = np.asarray(cat.table("queries")["embedding"])[:3]
+        price = np.asarray(cat.table("laion")["price"])
+        b1 = {"qv": qv.astype(np.float32),
+              "p": np.quantile(price, [0.6, 0.8, 1.0]).astype(np.float32)}
+        b2 = {"qv": qv.astype(np.float32),
+              "r": np.full((3,), radius, np.float32)}
+        ref1 = compile_query(Q1, cat, EngineOptions(**FLAT))
+        ref2 = compile_query(Q2, cat, EngineOptions(**FLAT))
+        r1 = ref1.execute_bucketed(**b1)
+        r2 = ref2.execute_bucketed(**b2)
+        for shards in (2, 4):
+            opts = EngineOptions(**FLAT,
+                                 dist=DistSpec(mesh_shape=(shards,)))
+            d1 = compile_query(Q1, cat, opts).execute_bucketed(**b1)
+            # exact top-k: same id set per query, same sims up to tie order
+            for q in range(3):
+                assert (set(np.asarray(d1["ids"])[q].tolist())
+                        == set(np.asarray(r1["ids"])[q].tolist())), shards
+            np.testing.assert_array_equal(
+                np.sort(np.asarray(d1["sim"]), axis=1),
+                np.sort(np.asarray(r1["sim"]), axis=1))
+            # per-query counters exact at every shard count
+            np.testing.assert_array_equal(
+                np.asarray(d1["stats"]["distance_evals"]),
+                np.asarray(r1["stats"]["distance_evals"]))
+            d2 = compile_query(Q2, cat, opts).execute_bucketed(**b2)
+            np.testing.assert_array_equal(np.asarray(d2["count"]),
+                                          np.asarray(r2["count"]))
+            for q in range(3):
+                assert (set(np.asarray(d2["ids"])[q].tolist())
+                        == set(np.asarray(r2["ids"])[q].tolist())), shards
+        print("MULTI_SHARD_OK")
+    """)
+    assert "MULTI_SHARD_OK" in out
+
+
+@pytest.mark.slow
+def test_multi_shard_pad_queries_inert():
+    out = _run("""
+        import numpy as np, jax.numpy as jnp
+        from repro.core import EngineOptions, compile_query
+        from repro.data import make_laion_catalog
+        from repro.dist import DistSpec
+
+        cat = make_laion_catalog(n_rows=1000, n_queries=4, dim=16,
+                                 n_modes=8, num_categories=4, seed=0)
+        Q1 = ("SELECT sample_id FROM products "
+              "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+        q = compile_query(Q1, cat, EngineOptions(
+            engine="brute", use_pallas=True,
+            dist=DistSpec(mesh_shape=(4,))))
+        qv = np.asarray(cat.table("queries")["embedding"])[:3]
+        binds = q._stack_binds(None, {"qv": jnp.asarray(qv)})
+        out, bucket, valid = q.executor.run_padded(binds, 3)
+        assert bucket == 4 and not bool(np.asarray(valid)[3:].any())
+        assert not np.asarray(out["valid"])[3:].any()
+        for sk, v in out["stats"].items():
+            assert (np.asarray(v)[3:] == 0).all(), sk
+        print("PAD_INERT_OK")
+    """)
+    assert "PAD_INERT_OK" in out
