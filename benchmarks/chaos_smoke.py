@@ -1,0 +1,292 @@
+"""Seeded chaos smoke for the resilient serving tier (DESIGN.md §11).
+
+Not a latency benchmark: a *correctness-under-faults* harness, run from CI
+(``python -m benchmarks.run --chaos``; scripts/smoke.sh wires it in).  Two
+phases per seed:
+
+* **Deterministic phase** — a virtual-clock
+  :class:`~repro.serving.scheduler.ResilientScheduler` driven through a
+  scripted request sequence with every fault class enabled
+  (latency spikes consuming virtual time, injected kernel errors, poisoned
+  binds, mid-flight catalog bumps swapping the IVF index).  Asserts:
+
+  - **no loss**: every submitted request resolves to exactly one typed
+    outcome (result, DeadlineExceededError, InjectedKernelError, or
+    PoisonedBindError at the door) — nothing hangs, nothing vanishes;
+  - **counters exact**: executed + failed + shed == submitted, failed
+    batches are exactly the injected kernel errors, plan re-binds never
+    exceed catalog bumps;
+  - **no stale result**: after the last catalog bump, a probe query through
+    the (cached) statement is bit-identical to a freshly prepared plan on
+    the current catalog;
+  - **determinism**: the same seed replayed produces identical fault
+    counters, identical outcome classes, and bit-identical served results.
+
+* **Asyncio phase** — a real :class:`~repro.launch.serve.QueryServer`
+  under a burst bigger than its admission watermark, the whole phase inside
+  ``asyncio.wait_for`` (a hang fails the harness, not the CI timeout).
+  Asserts every request resolves, overflow is rejected with an *explicit*
+  :class:`~repro.serving.resilience.BackpressureError` carrying a positive
+  ``retry_after_ms`` (never a timeout), and admission counters add up.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.chaos_smoke [--seeds N]
+"""
+from __future__ import annotations
+
+import argparse
+import asyncio
+import sys
+
+import numpy as np
+
+SQL = ("SELECT sample_id FROM products WHERE price < ${p} "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+
+N_REQUESTS = 32
+ASYNC_BURST = 24
+ASYNC_WATERMARK = 8
+ASYNC_TIMEOUT_S = 120.0
+
+
+class _VirtualClock:
+    """Monotonic virtual time in seconds; faults/services advance it."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+    def sleep(self, dt: float) -> None:     # FaultInjector sleep_fn
+        self.advance(dt)
+
+
+def _build(seed: int):
+    """Small deployment: catalog + prepared statement + a spare index the
+    catalog-bump fault swaps in (a 'background rebuild landing')."""
+    import jax
+
+    from repro.api import connect
+    from repro.core import Metric
+    from repro.data import make_laion_catalog
+    from repro.index import build_ivf
+    from repro.index.ivf import ProbeConfig
+
+    cat = make_laion_catalog(n_rows=600, n_queries=8, dim=16, n_modes=8,
+                             seed=seed)
+    vecs = cat.table("laion")["vec"]
+    idx_a = build_ivf(jax.random.key(seed), vecs, nlist=16,
+                      metric=Metric.INNER_PRODUCT, iters=2)
+    idx_b = build_ivf(jax.random.key(seed + 1), vecs, nlist=16,
+                      metric=Metric.INNER_PRODUCT, iters=3)
+    cat.register_index("products", "embedding", idx_a)
+    db = connect(cat, engine="chase",
+                 probe=ProbeConfig(max_probes=16, probe_batch=2,
+                                   termination="counter"))
+    stmt = db.prepare(SQL)
+    return cat, db, stmt, (idx_a, idx_b)
+
+
+def _requests(cat, n: int, seed: int):
+    rng = np.random.default_rng([seed, 17])
+    base = np.asarray(cat.table("queries")["embedding"]).astype(np.float32)
+    reps = -(-n // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:n]
+    qs = (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+    gaps = rng.uniform(0.0, 4e-3, n)      # virtual inter-arrival gaps (s)
+    return [{"qv": qs[i], "p": np.float32(1e9)} for i in range(n)], gaps
+
+
+def _run_deterministic(seed: int, spec=None):
+    """One scripted virtual-clock scenario; returns (outcomes, snapshots,
+    results) for determinism comparison."""
+    from repro.serving import (DegradePolicy, FaultInjector, FaultSpec,
+                               PoisonedBindError, validate_binds)
+    from repro.serving.scheduler import ResilientScheduler, SchedulerConfig
+
+    cat, db, stmt, (idx_a, idx_b) = _build(seed)
+    clock = _VirtualClock()
+    if spec is None:
+        spec = FaultSpec(seed=seed, latency_spike_p=0.25,
+                         latency_spike_ms=40.0, kernel_error_p=0.2,
+                         poison_bind_p=0.1, catalog_bump_p=0.25)
+    flip = {"next": idx_b}
+
+    def bump():
+        cat.register_index("products", "embedding", flip["next"])
+        flip["next"] = idx_a if flip["next"] is idx_b else idx_b
+
+    faults = FaultInjector(spec, bump_fn=bump, sleep_fn=clock.sleep)
+    sched = ResilientScheduler(
+        stmt,
+        SchedulerConfig(max_batch=4, max_wait_ms=5.0,
+                        default_deadline_ms=20.0),
+        clock=clock,
+        policy=DegradePolicy(steps=((6, 4),), hysteresis=2),
+        faults=faults)
+    binds_list, gaps = _requests(cat, N_REQUESTS, seed)
+
+    outcomes: dict[int, str] = {}
+    results: dict[int, np.ndarray] = {}
+    rids: list[int] = []
+    n_poisoned = 0
+    for i, binds in enumerate(binds_list):
+        clock.advance(float(gaps[i]))
+        # the front-door admission pipeline, inline (submit-side faults)
+        binds, _ = faults.maybe_poison(binds)
+        try:
+            validate_binds(binds)
+        except PoisonedBindError:
+            n_poisoned += 1
+            outcomes[-1 - i] = "poisoned"
+            continue
+        rids.append(sched.submit_request(binds))
+        if i % 6 == 5:                    # bursty: poll every 6th arrival
+            for rid in sched.poll():
+                clock.advance(2e-3)       # virtual batch service time
+                _classify(sched, rid, outcomes, results)
+    clock.advance(5e-3)
+    for rid in sched.flush():
+        clock.advance(2e-3)
+        _classify(sched, rid, outcomes, results)
+
+    c = sched.counters
+    f = faults.snapshot()
+    # -- no loss / counters exact ------------------------------------------
+    assert len(outcomes) == N_REQUESTS, (len(outcomes), N_REQUESTS)
+    assert c["submitted"] == N_REQUESTS - n_poisoned
+    assert c["executed"] + c["failed"] + c["shed_deadline"] == c["submitted"]
+    kinds = {k: sum(1 for v in outcomes.values() if v == k)
+             for k in ("ok", "deadline", "kernel", "poisoned")}
+    assert kinds["poisoned"] == n_poisoned == f["poisoned_binds"]
+    assert kinds["kernel"] == c["failed"]
+    assert kinds["deadline"] == c["shed_deadline"]
+    assert (f["kernel_errors"] == 0) == (c["failed"] == 0)
+    # -- invalidation bookkeeping ------------------------------------------
+    assert stmt.compiled.rebinds <= f["catalog_bumps"]
+    # -- no stale result: cached statement == freshly prepared plan --------
+    probe = {"qv": binds_list[0]["qv"], "p": np.float32(1e9)}
+    got = stmt.execute(probe)
+    fresh = db.prepare(SQL).execute(probe)
+    np.testing.assert_array_equal(np.asarray(got.ids),
+                                  np.asarray(fresh.ids))
+    return outcomes, {"sched": dict(c), "faults": f}, results
+
+
+def _classify(sched, rid, outcomes, results):
+    from repro.serving import DeadlineExceededError
+    from repro.serving.faults import InjectedKernelError
+    try:
+        res = sched.result(rid)
+    except DeadlineExceededError:
+        outcomes[rid] = "deadline"
+    except InjectedKernelError:
+        outcomes[rid] = "kernel"
+    else:
+        outcomes[rid] = "ok"
+        results[rid] = np.asarray(res.ids)
+
+
+async def _run_async(seed: int) -> dict:
+    """Burst a QueryServer past its admission watermark; classify every
+    outcome (explicit errors only — a hang trips the wait_for)."""
+    from repro.launch.serve import QueryServer, ServeConfig
+    from repro.serving import (AdmissionConfig, BackpressureError,
+                               DeadlineExceededError, DegradePolicy,
+                               FaultInjector, FaultSpec, PoisonedBindError)
+    from repro.serving.faults import InjectedKernelError
+    from repro.serving.scheduler import SchedulerConfig
+
+    cat, db, stmt, (idx_a, idx_b) = _build(seed)
+    faults = FaultInjector(
+        FaultSpec(seed=seed, kernel_error_p=0.15, poison_bind_p=0.05,
+                  catalog_bump_p=0.2),
+        bump_fn=lambda: cat.register_index("products", "embedding", idx_b))
+    config = ServeConfig(
+        admission=AdmissionConfig(max_queue_depth=ASYNC_WATERMARK,
+                                  retry_after_ms=5.0),
+        scheduler=SchedulerConfig(max_batch=4, max_wait_ms=1.0,
+                                  default_deadline_ms=2000.0),
+        policy=DegradePolicy(steps=((4, 4),), hysteresis=1),
+        idle_tick_ms=10.0)
+    qs = np.asarray(cat.table("queries")["embedding"]).astype(np.float32)
+    counts = {"ok": 0, "backpressure": 0, "deadline": 0, "kernel": 0,
+              "poisoned": 0}
+
+    async with QueryServer(stmt, config, faults=faults) as server:
+        server.scheduler.warm({"qv": qs[0], "p": np.float32(1e9)}, [1, 4])
+
+        async def one(i: int):
+            return await server.submit(
+                {"qv": qs[i % qs.shape[0]], "p": np.float32(1e9)})
+
+        settled = await asyncio.gather(
+            *(one(i) for i in range(ASYNC_BURST)), return_exceptions=True)
+        snap = server.snapshot()
+
+    for out in settled:
+        if isinstance(out, BackpressureError):
+            assert out.retry_after_ms > 0      # explicit shed, never a timeout
+            counts["backpressure"] += 1
+        elif isinstance(out, DeadlineExceededError):
+            counts["deadline"] += 1
+        elif isinstance(out, InjectedKernelError):
+            counts["kernel"] += 1
+        elif isinstance(out, PoisonedBindError):
+            counts["poisoned"] += 1
+        elif isinstance(out, BaseException):
+            raise AssertionError(f"untyped serving outcome: {out!r}")
+        else:
+            counts["ok"] += 1
+    assert sum(counts.values()) == ASYNC_BURST
+    assert counts["backpressure"] > 0, "burst never tripped admission"
+    adm = snap["admission"]
+    assert adm["rejected"] == counts["backpressure"]
+    # admission counts the door decision; poisoned payloads are admitted
+    # first, then rejected by bind validation
+    assert adm["admitted"] == ASYNC_BURST - adm["rejected"]
+    return {**counts, "snapshot": snap}
+
+
+def run_chaos(n_seeds: int = 3) -> None:
+    from repro.serving import FaultSpec
+
+    for seed in range(n_seeds):
+        out1, snap1, res1 = _run_deterministic(seed)
+        out2, snap2, res2 = _run_deterministic(seed)
+        # determinism: same seed => same faults, same outcomes, same bits
+        assert snap1 == snap2, (snap1, snap2)
+        assert sorted(out1.values()) == sorted(out2.values())
+        for rid, ids in res1.items():
+            np.testing.assert_array_equal(ids, res2[rid])
+        # unfaulted control: all-zero spec serves every request
+        out0, snap0, _ = _run_deterministic(seed, spec=FaultSpec(seed=seed))
+        assert all(v in ("ok", "deadline") for v in out0.values())
+        assert snap0["faults"] == {"latency_spikes": 0, "kernel_errors": 0,
+                                   "poisoned_binds": 0, "catalog_bumps": 0}
+        kinds = {k: sum(1 for v in out1.values() if v == k)
+                 for k in ("ok", "deadline", "kernel", "poisoned")}
+        print(f"[chaos] seed={seed} sync outcomes={kinds} "
+              f"faults={snap1['faults']} OK", flush=True)
+        counts = asyncio.run(asyncio.wait_for(_run_async(seed),
+                                              timeout=ASYNC_TIMEOUT_S))
+        snap = counts.pop("snapshot")
+        print(f"[chaos] seed={seed} async outcomes={counts} "
+              f"faults={snap.get('faults')} OK", flush=True)
+    print(f"[chaos] {n_seeds} seeds passed (no hangs, no stale results, "
+          f"counters exact)", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seeds", type=int, default=3)
+    args = ap.parse_args(argv)
+    run_chaos(args.seeds)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

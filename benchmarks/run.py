@@ -15,7 +15,7 @@ import sys
 from . import (ablation_updatestate, counters, q1_vknn, q2_range,
                q3_distjoin, q4_knnjoin, q5q6_category, q7_batch_qps,
                q8_sched_qps, q9_prepare_cache, q10_sharded_qps,
-               q34_join_qps)
+               q11_overload, q34_join_qps)
 from .common import Row, get_env
 
 BENCHES = {
@@ -28,6 +28,7 @@ BENCHES = {
     "q8": q8_sched_qps.run,
     "q9": q9_prepare_cache.run,
     "q10": q10_sharded_qps.run,
+    "q11": q11_overload.run,
     "q34": q34_join_qps.run,
     "fig9": ablation_updatestate.run,
     "t5": counters.run,
@@ -44,12 +45,20 @@ def main(argv=None) -> None:
                          "q34 joins, t5) — what scripts/smoke.sh runs")
     ap.add_argument("--only", default=None,
                     help="comma list of bench keys: " + ",".join(BENCHES))
+    ap.add_argument("--chaos", action="store_true",
+                    help="seeded chaos smoke of the resilient serving tier "
+                         "(no hangs, no stale results, counters exact)")
+    ap.add_argument("--chaos-seeds", type=int, default=3)
     args = ap.parse_args(argv)
+    if args.chaos:
+        from . import chaos_smoke
+        chaos_smoke.run_chaos(args.chaos_seeds)
+        return
     env = get_env(smoke=args.smoke or args.quick)
     if args.only:
         keys = args.only.split(",")
     elif args.quick:
-        keys = ["q1", "q7", "q8", "q9", "q10", "q34", "t5"]
+        keys = ["q1", "q7", "q8", "q9", "q10", "q11", "q34", "t5"]
     else:
         keys = list(BENCHES)
     rows: list[Row] = []

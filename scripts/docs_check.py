@@ -5,8 +5,9 @@ Two checks, both hard CI failures (wired into scripts/smoke.sh):
 
 1. **Docstring coverage** — every module, public module-level function,
    public class, and public method of a public class under
-   ``src/repro/api``, ``src/repro/dist``, and ``src/repro/core`` must carry
-   a docstring.  Private names (leading underscore, including dunders) are
+   ``src/repro/api``, ``src/repro/dist``, ``src/repro/core``, and
+   ``src/repro/serving`` (plus the ``src/repro/launch/serve.py`` front
+   door) must carry a docstring.  Private names (leading underscore, including dunders) are
    exempt, and so is a method override whose base class (resolvable in the
    same module) documents the same method — the contract is documented
    once, at the declaration site (``PlanNode.label`` speaks for every node
@@ -30,7 +31,9 @@ import sys
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
-DOC_PACKAGES = ("src/repro/api", "src/repro/dist", "src/repro/core")
+# packages (every .py in the dir) or single .py files
+DOC_PACKAGES = ("src/repro/api", "src/repro/dist", "src/repro/core",
+                "src/repro/serving", "src/repro/launch/serve.py")
 REF_SCAN_DIRS = ("src", "benchmarks", "scripts", "tests", "examples", "docs")
 REF_SCAN_ROOT_MD = True       # also scan *.md at the repo root
 
@@ -61,11 +64,14 @@ def check_docstrings(failures: list[str]) -> int:
     """AST-walk the documented packages; append violations, return #symbols."""
     checked = 0
     for pkg in DOC_PACKAGES:
-        pkg_dir = os.path.join(REPO, pkg)
-        for fname in sorted(os.listdir(pkg_dir)):
-            if not fname.endswith(".py"):
-                continue
-            path = os.path.join(pkg_dir, fname)
+        full = os.path.join(REPO, pkg)
+        if pkg.endswith(".py"):
+            paths = [full]
+        else:
+            paths = [os.path.join(full, fname)
+                     for fname in sorted(os.listdir(full))
+                     if fname.endswith(".py")]
+        for path in paths:
             rel = os.path.relpath(path, REPO)
             with open(path) as f:
                 tree = ast.parse(f.read(), filename=rel)

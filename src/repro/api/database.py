@@ -27,13 +27,15 @@ reporting cache hit, chosen lowering, and live executor state.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Any
 
 import numpy as np
 
-from ..core.compiler import (CompiledQuery, compile_plan, fingerprint_digest,
-                             plan_fingerprint, _stacked_qn)
+from ..core.compiler import (CompiledQuery, StalePlanError, compile_plan,
+                             fingerprint_digest, plan_fingerprint,
+                             _stacked_qn)
 from ..core.expr import Param
 from ..core.physical import EngineOptions
 from ..core.schema import Catalog
@@ -50,38 +52,64 @@ class CacheInfo:
     hits: int
     misses: int
     entries: int
+    evictions: int = 0
+    max_entries: "int | None" = None
 
 
 @dataclasses.dataclass
 class _CacheEntry:
     """One normalized plan: the compiled artifact plus ITS parameter names in
-    canonical slot order (variants translate their names slot-by-slot)."""
+    canonical slot order (variants translate their names slot-by-slot).
+
+    ``evicted`` flips when the LRU bound (or a stale-plan invalidation)
+    drops the entry from the cache: Statements still holding it re-prepare
+    transparently on their next execute and release the dead compiled
+    object (so eviction actually frees the executables)."""
     compiled: CompiledQuery
     param_order: tuple[str, ...]
     fingerprint: str
+    evicted: bool = False
 
 
 def connect(catalog: Catalog, options: EngineOptions | None = None,
+            max_cached_plans: int | None = 128,
             **option_overrides) -> "Database":
     """Open a session over a catalog — the one front door to the engine.
 
     ``option_overrides`` are convenience kwargs onto :class:`EngineOptions`
-    (``connect(cat, engine="chase", use_pallas=True)``)."""
+    (``connect(cat, engine="chase", use_pallas=True)``);
+    ``max_cached_plans`` bounds the normalized plan cache (LRU; None =
+    unbounded)."""
     if option_overrides:
         options = dataclasses.replace(options or EngineOptions(),
                                       **option_overrides)
-    return Database(catalog, options or EngineOptions())
+    return Database(catalog, options or EngineOptions(),
+                    max_cached_plans=max_cached_plans)
 
 
 class Database:
-    """A connection-like session: catalog + options + normalized plan cache."""
+    """A connection-like session: catalog + options + normalized plan cache.
 
-    def __init__(self, catalog: Catalog, options: EngineOptions | None = None):
+    The cache is LRU-bounded (``max_cached_plans``): long-running sessions
+    preparing many distinct statements evict the least-recently-prepared
+    plan instead of holding every executable ever compiled.  A
+    :class:`Statement` still holding an evicted entry re-prepares through
+    the cache transparently on its next execute."""
+
+    def __init__(self, catalog: Catalog, options: EngineOptions | None = None,
+                 max_cached_plans: int | None = 128):
+        if max_cached_plans is not None and max_cached_plans < 1:
+            raise ValueError(
+                f"max_cached_plans must be >= 1 or None, "
+                f"got {max_cached_plans}")
         self.catalog = catalog
         self.options = options or EngineOptions()
-        self._cache: dict[tuple, _CacheEntry] = {}
+        self.max_cached_plans = max_cached_plans
+        self._cache: "collections.OrderedDict[tuple, _CacheEntry]" = (
+            collections.OrderedDict())
         self._hits = 0
         self._misses = 0
+        self._evictions = 0
 
     # -- prepared statements ------------------------------------------------
 
@@ -107,15 +135,26 @@ class Database:
         key = (fp, eff_options.fingerprint(),
                self._static_key(static_binds, param_order))
         entry = self._cache.get(key)
+        if entry is not None:
+            try:
+                # catalog-version check on the hit path: a structurally
+                # stale entry (table re-registered, index presence flipped)
+                # must recompile, not resurface frozen closures
+                entry.compiled.ensure_fresh()
+            except StalePlanError:
+                self._evict(key)
+                entry = None
         if entry is None:
             self._misses += 1
             compiled = compile_plan(sql, plan, self.catalog, eff_options,
                                     dict(static_binds))
             entry = _CacheEntry(compiled, param_order, fp)
             self._cache[key] = entry
+            self._trim()
             cache_hit = False
         else:
             self._hits += 1
+            self._cache.move_to_end(key)
             cache_hit = True
         return Statement(self, sql, entry, param_order, hints, cache_hit,
                          base_options, dict(static_binds))
@@ -127,14 +166,20 @@ class Database:
 
     def serve(self, statement: "Statement | str", config=None, *,
               max_batch: int = 64, max_wait_ms: float = 2.0,
-              pilot_budget: int = 0, **static_binds):
+              pilot_budget: int = 0, policy=None, faults=None,
+              **static_binds):
         """An async submit/poll server over one prepared statement.
 
         Wraps :class:`~repro.serving.scheduler.BatchScheduler`: requests
         coalesce under the deadline rule and drain through the statement's
         size-bucketed executor cache (``pilot_budget`` > 0 adds two-phase
-        effort-bucketed IVF probing)."""
-        from ..serving.scheduler import BatchScheduler, SchedulerConfig
+        effort-bucketed IVF probing).  Passing a ``policy``
+        (:class:`~repro.serving.resilience.DegradePolicy`) or ``faults``
+        (:class:`~repro.serving.faults.FaultInjector`) upgrades to a
+        :class:`~repro.serving.scheduler.ResilientScheduler` with graceful
+        degradation under overload (DESIGN.md §11)."""
+        from ..serving.scheduler import (BatchScheduler, ResilientScheduler,
+                                         SchedulerConfig)
         if isinstance(statement, str):
             statement = self.prepare(statement, **static_binds)
         elif static_binds:
@@ -146,13 +191,29 @@ class Database:
             config = SchedulerConfig(max_batch=max_batch,
                                      max_wait_ms=max_wait_ms,
                                      pilot_budget=pilot_budget)
+        if policy is not None or faults is not None:
+            return ResilientScheduler(statement, config, policy=policy,
+                                      faults=faults)
         return BatchScheduler(statement, config)
 
     def cache_info(self) -> CacheInfo:
-        """Hits / misses / live entries of the normalized plan cache."""
-        return CacheInfo(self._hits, self._misses, len(self._cache))
+        """Hits / misses / live entries / evictions of the plan cache."""
+        return CacheInfo(self._hits, self._misses, len(self._cache),
+                         self._evictions, self.max_cached_plans)
 
     # -- internals ----------------------------------------------------------
+
+    def _evict(self, key: tuple) -> None:
+        entry = self._cache.pop(key, None)
+        if entry is not None:
+            entry.evicted = True
+            self._evictions += 1
+
+    def _trim(self) -> None:
+        if self.max_cached_plans is None:
+            return
+        while len(self._cache) > self.max_cached_plans:
+            self._evict(next(iter(self._cache)))
 
     @staticmethod
     def _static_key(static_binds: dict, param_order: tuple[str, ...]) -> tuple:
@@ -212,6 +273,32 @@ class Statement:
         """True when the plan's batched lowering is native (no vmap)."""
         return self._entry.compiled.batch_native
 
+    def ensure_fresh(self) -> None:
+        """Make this statement's entry current before execution.
+
+        Two recoveries, both transparent to the caller (DESIGN.md §11):
+
+        * the entry was **evicted** from the LRU-bounded plan cache — drop
+          the dead reference and re-prepare through the cache (releasing the
+          evicted executables for real);
+        * the catalog moved **structurally** under the plan
+          (:class:`~repro.core.compiler.StalePlanError`) — re-prepare, which
+          recompiles against the current catalog.  Plain index replacements
+          never reach here: ``CompiledQuery.ensure_fresh`` re-binds them in
+          place with zero retraces."""
+        if not self._entry.evicted:
+            try:
+                self._entry.compiled.ensure_fresh()
+                return
+            except StalePlanError:
+                pass
+        fresh = self._db.prepare(self.sql, hints=self.hints,
+                                 options=self._base_options,
+                                 **self._static_binds)
+        self._entry = fresh._entry
+        self._rename = fresh._rename
+        self.cache_hit = fresh.cache_hit
+
     def _stack_binds(self, binds_list, stacked) -> dict:
         if binds_list is not None:
             binds_list = [self._renamed(b) for b in binds_list]
@@ -231,6 +318,7 @@ class Statement:
 
         Returns :class:`Result` (single) or :class:`ResultBatch` (batch);
         both are bit-identical to the legacy ``CompiledQuery`` surfaces."""
+        self.ensure_fresh()
         hints = self.hints if hints is None else hints
         if hints.join_lowering is not None and (
                 hints.join_lowering != self.compiled.options.join_lowering):

@@ -31,11 +31,18 @@ class ExecutionHints:
     * ``join_lowering`` — override ``EngineOptions.join_lowering`` for this
       statement.  Compile-affecting: a differing override re-prepares through
       the plan cache (a distinct options fingerprint is a distinct entry).
+    * ``deadline_ms`` / ``priority`` — serving-tier hints (DESIGN.md §11):
+      when a statement is served through a scheduler the request carries this
+      relative deadline (shed if still queued past it) and drain priority.
+      Inert on direct ``Statement.execute`` calls — there is no queue to
+      wait in, so a direct call can never expire while queued.
     """
     probe_budget: "int | tuple[int, ...] | None" = None
     pilot_budget: int = 0
     exact_shape: bool = False
     join_lowering: str | None = None
+    deadline_ms: float | None = None
+    priority: int = 0
 
     def __post_init__(self):
         pb = self.probe_budget
@@ -73,6 +80,9 @@ class ExecutionHints:
                 "pilot_budget and probe_budget are mutually exclusive: "
                 "effort bucketing IS a probe-budget schedule (the pilot caps "
                 "phase 1; phase 2 re-runs the heavy remainder unbudgeted)")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms must be positive, got {self.deadline_ms}")
 
     # -- plan-dependent validation (called by Statement) --------------------
 

@@ -47,6 +47,7 @@ class ExplainReport:
     effort: dict | None = None          # n_light / n_heavy split, if any
     shards: int | None = None           # corpus shard count (dist plans)
     merge_depth: int | None = None      # hierarchical-merge levels (dist)
+    degraded: dict | None = None        # overload level/budget, if degraded
 
     def render(self) -> str:
         """Multi-line text form (what ``print(explain())`` shows)."""
@@ -69,6 +70,10 @@ class ExplainReport:
             out.append(exec_line)
         if self.effort is not None:
             out.append(f"-- effort: {self.effort}")
+        if self.degraded is not None:
+            out.append(f"-- DEGRADED: overload level="
+                       f"{self.degraded.get('level')} "
+                       f"probe_budget={self.degraded.get('probe_budget')}")
         out += ["-- logical plan:", self.logical_plan,
                 "-- rewritten plan:", self.rewritten_plan]
         return "\n".join(out)

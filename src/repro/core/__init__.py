@@ -5,7 +5,8 @@ code should go through the session API (:mod:`repro.api`), which adds a
 normalized plan cache, unified execution hints, and structured results on
 top of the same compilation stack."""
 from .compiler import (BucketedExecutor, CompiledPlan, CompiledQuery,
-                       compile_plan, compile_query, plan_fingerprint)
+                       StalePlanError, compile_plan, compile_query,
+                       plan_fingerprint)
 from .expr import Bindings, Column, Const, Distance, Param
 from .physical import EngineOptions
 from .schema import (Catalog, ColumnKind, ColumnType, Metric, Schema, Table,
@@ -15,8 +16,8 @@ from .sql import parse_sql
 from .rewriter import rewrite
 
 __all__ = [
-    "BucketedExecutor", "CompiledPlan", "CompiledQuery", "compile_plan",
-    "compile_query", "plan_fingerprint", "Bindings", "Column", "Const",
+    "BucketedExecutor", "CompiledPlan", "CompiledQuery", "StalePlanError",
+    "compile_plan", "compile_query", "plan_fingerprint", "Bindings", "Column", "Const",
     "Distance", "Param", "EngineOptions", "Catalog", "ColumnKind",
     "ColumnType", "Metric", "Schema", "Table", "bool_col", "category_col",
     "float_col", "int_col", "vector_col", "Analysis", "QueryClass", "analyze",

@@ -44,6 +44,35 @@ from .semantics import Analysis, QueryClass, analyze
 from .sql import parse_sql
 
 
+class StalePlanError(RuntimeError):
+    """A compiled plan's catalog registrations changed in a way that cannot
+    be re-bound in place (DESIGN.md §11).
+
+    Raised when a table was re-registered (the builders close over its
+    predicate columns) or an index appeared/disappeared after compilation
+    (index *presence* selects the lowering at build time).  Recovery is a
+    re-prepare: the session API does it transparently
+    (:meth:`repro.api.Statement` re-prepares through the plan cache); legacy
+    ``compile_query`` callers must compile fresh."""
+
+
+def _catalog_dep_keys(a: Analysis, options: EngineOptions) -> tuple:
+    """The catalog registration keys a compiled plan captures — what
+    :meth:`CompiledQuery.ensure_fresh` watches for version bumps."""
+    qc = a.query_class
+    if qc in (QueryClass.VKNN_SF, QueryClass.DR_SF,
+              QueryClass.CATEGORY_PARTITION):
+        keys = [("table", a.table), ("index", a.table, a.vector_column)]
+        scan = (a.table, a.vector_column)
+    else:
+        keys = [("table", a.left_table), ("table", a.right_table),
+                ("index", a.right_table, a.right_vector)]
+        scan = (a.right_table, a.right_vector)
+    if options.dist is not None:
+        keys.append(("sharded",) + scan)
+    return tuple(keys)
+
+
 # ---------------------------------------------------------------------------
 # plan fingerprinting (the normalized plan-cache key, DESIGN.md §9)
 # ---------------------------------------------------------------------------
@@ -249,6 +278,12 @@ class CompiledQuery:
     _arrays: Any
     _batch_jitted: Any
     executor: BucketedExecutor
+    # catalog-version invalidation (DESIGN.md §11): the catalog, the
+    # registration keys this plan captured, and their versions at bind time
+    _catalog: Any = None
+    _dep_keys: tuple = ()
+    _bound_versions: tuple = ()
+    rebinds: int = 0
 
     # -- plan delegation (back-compat surface) ------------------------------
     @property
@@ -281,7 +316,53 @@ class CompiledQuery:
         """True when execute_batch lowers natively (no vmap fallback)."""
         return self.plan.batch_native
 
+    def ensure_fresh(self) -> bool:
+        """Re-bind this plan to the catalog's current registrations.
+
+        Called at execute time by every surface (single / exact-shape /
+        bucketed, and by the session API / scheduler).  Compares the
+        captured registration versions against the catalog clock:
+
+        * unchanged — no-op (a few dict lookups);
+        * an index / sharded-handle replacement — re-gathers the plan's
+          device ``arrays`` in place (the jitted pipelines take arrays as an
+          *argument*, so a same-shape replacement costs zero retraces) and
+          returns True;
+        * a table re-registration, or index presence flipping — raises
+          :class:`StalePlanError` (the builders' closures hold stale state;
+          only a re-prepare can fix it).
+        """
+        if self._catalog is None:
+            return False
+        current = self._catalog.version_snapshot(self._dep_keys)
+        if current == self._bound_versions:
+            return False
+        stale_tables = [
+            k[1] for k, old, new in zip(self._dep_keys, self._bound_versions,
+                                        current)
+            if old != new and k[0] == "table"]
+        if stale_tables:
+            raise StalePlanError(
+                f"table(s) {stale_tables} were re-registered after this plan "
+                f"compiled; the plan's predicate columns are frozen at the "
+                f"old table — re-prepare the statement")
+        new_arrays = _gather_arrays(self.analysis, self._catalog,
+                                    self.options)
+        if set(new_arrays) != set(self._arrays):
+            raise StalePlanError(
+                f"catalog registration change altered the plan's array set "
+                f"({sorted(self._arrays)} -> {sorted(new_arrays)}); index "
+                f"presence selects the lowering at compile time — "
+                f"re-prepare the statement")
+        # in place: the BucketedExecutor holds THE SAME dict object
+        self._arrays.clear()
+        self._arrays.update(new_arrays)
+        self._bound_versions = self._catalog.version_snapshot(self._dep_keys)
+        self.rebinds += 1
+        return True
+
     def __call__(self, **binds):
+        self.ensure_fresh()
         return self._jitted(self._arrays, dict(binds))
 
     def execute_batch(self, binds_list: list[dict] | None = None, **stacked):
@@ -300,6 +381,7 @@ class CompiledQuery:
 
         NOTE: each distinct Q traces a fresh executable.  Serving traffic
         with varying batch sizes should use :meth:`execute_bucketed`."""
+        self.ensure_fresh()
         binds = self._stack_binds(binds_list, stacked)
         return self._batch_jitted(self._arrays, binds)
 
@@ -313,6 +395,7 @@ class CompiledQuery:
         sizes cost at most log2(max_batch) compilations.  ``probe_budget``
         (scalar or (Q,) int, cluster units) optionally caps each query's IVF
         probes — the effort-bucket valve used by serving/scheduler.py."""
+        self.ensure_fresh()
         binds = self._stack_binds(binds_list, stacked)
         return self.executor(binds, probe_budget=probe_budget)
 
@@ -565,5 +648,10 @@ def compile_plan(sql: str, plan: PlanNode, catalog: Catalog,
     compiled_plan = CompiledPlan(sql, a, plan, rewritten, options, fn, bfn,
                                  batch_native, batch_reason)
     executor = BucketedExecutor(compiled_plan, arrays)
+    # snapshot AFTER _gather_arrays: gathering a dist plan may itself
+    # register a sharded handle (a version bump this plan must not see as
+    # staleness on its first execute)
+    dep_keys = _catalog_dep_keys(a, options)
     return CompiledQuery(compiled_plan, jax.jit(fn), arrays, jax.jit(bfn),
-                         executor)
+                         executor, _catalog=catalog, _dep_keys=dep_keys,
+                         _bound_versions=catalog.version_snapshot(dep_keys))

@@ -169,17 +169,50 @@ class Table:
 
 class Catalog:
     """Name → Table registry plus per-(table, column) ANN indexes and
-    row-sharded corpus handles (for distributed plans, DESIGN.md §10)."""
+    row-sharded corpus handles (for distributed plans, DESIGN.md §10).
+
+    Every registration is **versioned** (DESIGN.md §11): ``register`` /
+    ``register_index`` / ``register_sharded`` bump a monotonic catalog clock
+    and stamp the touched registration key with it.  Compiled plans snapshot
+    the versions of the registrations they captured at prepare time and
+    compare at execute time (``CompiledQuery.ensure_fresh``), so a
+    post-prepare ``register_index`` re-binds the plan's arrays — or raises a
+    clear ``StalePlanError`` — instead of silently serving frozen data (the
+    historical stale-plan invalidation bug)."""
 
     def __init__(self):
         self._tables: dict[str, Table] = {}
         self._indexes: dict[tuple[str, str], Any] = {}
         self._sharded: dict[tuple[str, str], Any] = {}
+        self._clock = 0
+        self._versions: dict[tuple, int] = {}
+
+    def _bump(self, key: tuple) -> None:
+        self._clock += 1
+        self._versions[key] = self._clock
+
+    def version(self, key: tuple) -> int:
+        """Monotonic version of one registration key.
+
+        Keys are ``("table", name)``, ``("index", table, column)``, or
+        ``("sharded", table, column)``; a key never registered is version 0.
+        Versions only grow, and no two bumps share a value (one global
+        catalog clock), so equality of snapshots implies nothing changed."""
+        return self._versions.get(key, 0)
+
+    def version_snapshot(self, keys: tuple) -> tuple:
+        """Versions of ``keys`` as an orderless-compare-safe tuple."""
+        return tuple(self.version(k) for k in keys)
 
     def register(self, name: str, table: Table) -> None:
-        """Register (or replace) a table under ``name``."""
+        """Register (or replace) a table under ``name``.
+
+        Replacing bumps ``("table", name)``: plans compiled against the old
+        table hold its columns in their closures and cannot re-bind — they
+        raise ``StalePlanError`` and must be re-prepared."""
         table.name = name
         self._tables[name] = table
+        self._bump(("table", name))
 
     def table(self, name: str) -> Table:
         """Look up a registered table (KeyError when absent)."""
@@ -190,8 +223,14 @@ class Catalog:
         return name in self._tables
 
     def register_index(self, table: str, column: str, index: Any) -> None:
-        """Attach an ANN index to a (table, vector column) pair."""
+        """Attach (or replace) an ANN index on a (table, vector column) pair.
+
+        Bumps ``("index", table, column)``: compiled plans re-bind the new
+        index arrays on their next execute (``ensure_fresh``) — index data
+        rides the ``arrays`` argument of the jitted pipeline, so a
+        same-structure replacement costs zero retraces."""
         self._indexes[(table, column)] = index
+        self._bump(("index", table, column))
 
     def index_for(self, table: str, column: str):
         """The ANN index registered for (table, column), or None."""
@@ -204,8 +243,13 @@ class Catalog:
         Keyed by the handle's own mesh spec (``sharded.spec``), so handles
         for different meshes coexist: every plan compiled with a matching
         ``EngineOptions.dist`` reuses the handle's device placement instead
-        of re-slicing the corpus per prepare."""
+        of re-slicing the corpus per prepare.
+
+        Bumps ``("sharded", table, column)`` (spec-independent on purpose:
+        any handle change invalidates every dist plan on the pair; a
+        spurious re-bind re-reads an unchanged handle and is cheap)."""
         self._sharded[(table, column, sharded.spec)] = sharded
+        self._bump(("sharded", table, column))
 
     def sharded_for(self, table: str, column: str, spec: Any):
         """The ShardedCorpus registered for (table, column) on exactly the

@@ -1,4 +1,22 @@
-"""Serving launcher: batched generation with optional CHASE hybrid retrieval.
+"""Serving launcher: the resilient asyncio front door for hybrid queries,
+plus batched LM generation with optional CHASE retrieval.
+
+Front door (DESIGN.md §11) — an in-process stand-in for the network edge of
+a CHASE deployment:
+
+  PYTHONPATH=src python -m repro.launch.serve --front-door --requests 64
+
+:class:`QueryServer` stacks the full resilience pipeline over one prepared
+statement: **admission control** (bounded in-flight watermark ->
+:class:`~repro.serving.resilience.BackpressureError` with a retry-after
+hint), **bind validation** (poisoned payloads rejected at the door),
+**deadlines** (expired requests shed before execution), and **graceful
+degradation** (probe budgets step down under queue pressure; served results
+report degraded mode in ``explain()``).  ``await server.submit(binds)``
+resolves to the request's :class:`~repro.api.result.Result` or raises its
+typed serving error — never a hang.
+
+LM decode path (unchanged):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b --smoke \
       --batch 2 --prompt-len 16 --gen 16 --rag
@@ -6,21 +24,243 @@
 from __future__ import annotations
 
 import argparse
+import asyncio
+import dataclasses
 import time
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import get_config
-from ..models import init_params
-from ..serving.decode import generate
-from ..serving.rag import HybridRetriever
+from ..serving.resilience import (AdmissionConfig, AdmissionController,
+                                  DegradePolicy, validate_binds)
+from ..serving.scheduler import ResilientScheduler, SchedulerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Front-door knobs: admission + scheduler + degradation policy.
+
+    ``idle_tick_ms`` bounds how long the drain loop sleeps with work queued
+    (the liveness backstop: even if no submit ever kicks the loop again, a
+    queued request is examined within one tick)."""
+    admission: AdmissionConfig = AdmissionConfig()
+    scheduler: SchedulerConfig = SchedulerConfig()
+    policy: DegradePolicy | None = DegradePolicy()
+    idle_tick_ms: float = 50.0
+
+
+class QueryServer:
+    """Asyncio front door over a :class:`~repro.serving.scheduler.ResilientScheduler`.
+
+    One server serves one prepared statement (the deployment unit).  Use as
+    an async context manager::
+
+        async with QueryServer(stmt, config) as server:
+            res = await server.submit({"qv": q, "p": 0.5}, deadline_ms=20)
+
+    ``submit`` applies the admission pipeline inline (backpressure, bind
+    validation) and then awaits the request's outcome; the background drain
+    loop coalesces queued requests and runs batches on the default executor
+    thread so the event loop never blocks on a kernel."""
+
+    def __init__(self, statement, config: ServeConfig | None = None,
+                 faults=None):
+        self.config = config if config is not None else ServeConfig()
+        self.scheduler = ResilientScheduler(statement,
+                                            self.config.scheduler,
+                                            policy=self.config.policy,
+                                            faults=faults)
+        self.admission = AdmissionController(self.config.admission)
+        self.faults = faults
+        self._futures: dict[int, asyncio.Future] = {}
+        self._kick: asyncio.Event | None = None
+        self._loop_task: asyncio.Task | None = None
+        self._running = False
+
+    @property
+    def statement(self):
+        """The prepared Statement this server deploys."""
+        return self.scheduler.statement
+
+    # -- lifecycle ----------------------------------------------------------
+
+    async def start(self) -> "QueryServer":
+        """Start the background drain loop (idempotence-guarded)."""
+        if self._running:
+            raise RuntimeError("server already started")
+        self._kick = asyncio.Event()
+        self._running = True
+        self._loop_task = asyncio.create_task(self._drain_loop())
+        return self
+
+    async def stop(self) -> None:
+        """Graceful shutdown: stop admitting, drain everything queued,
+        resolve every in-flight future (no request is left dangling)."""
+        if not self._running:
+            return
+        self._running = False
+        self._kick.set()
+        await self._loop_task
+        loop = asyncio.get_running_loop()
+        done = await loop.run_in_executor(None, self.scheduler.flush)
+        for rid in done:
+            self._resolve(rid)
+        for rid, fut in list(self._futures.items()):
+            if not fut.done():
+                fut.set_exception(RuntimeError(
+                    f"server stopped with request {rid} unresolved"))
+            self._futures.pop(rid, None)
+
+    async def __aenter__(self) -> "QueryServer":
+        return await self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await self.stop()
+
+    # -- request path -------------------------------------------------------
+
+    async def submit(self, binds: dict, *, deadline_ms: float | None = None,
+                     priority: int | None = None) -> Any:
+        """Admit, enqueue, and await one request.
+
+        Raises :class:`~repro.serving.resilience.BackpressureError` at the
+        door when in-flight depth is at the watermark,
+        :class:`~repro.serving.resilience.PoisonedBindError` on non-finite
+        payloads, :class:`~repro.serving.resilience.DeadlineExceededError`
+        if the request expires while queued, and whatever the execution
+        itself raised (contained per batch).  Otherwise resolves to the
+        request's :class:`~repro.api.result.Result` view."""
+        if not self._running:
+            raise RuntimeError("server is not running (use `async with` "
+                               "or call start())")
+        self.admission.admit(len(self._futures))
+        if self.faults is not None:
+            binds, _poisoned = self.faults.maybe_poison(binds)
+        validate_binds(binds)
+        hints = getattr(self.statement, "hints", None)
+        if deadline_ms is None and hints is not None:
+            deadline_ms = hints.deadline_ms
+        if priority is None:
+            priority = getattr(hints, "priority", 0) if hints else 0
+        rid = self.scheduler.submit_request(binds, deadline_ms=deadline_ms,
+                                            priority=priority)
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[rid] = fut
+        self._kick.set()
+        return await fut
+
+    def snapshot(self) -> dict:
+        """Admission + scheduler + load (+ fault) counters in one view."""
+        return {"admission": self.admission.snapshot(),
+                "in_flight": len(self._futures),
+                **self.scheduler.snapshot()}
+
+    # -- internals ----------------------------------------------------------
+
+    def _resolve(self, rid: int) -> None:
+        fut = self._futures.pop(rid, None)
+        if fut is None or fut.done():
+            return
+        try:
+            out = self.scheduler.result(rid)
+        except Exception as e:
+            fut.set_exception(e)
+        else:
+            fut.set_result(out)
+
+    async def _drain_loop(self) -> None:
+        loop = asyncio.get_running_loop()
+        sched = self.scheduler
+        while self._running:
+            self._kick.clear()
+            done = await loop.run_in_executor(None, sched.poll)
+            for rid in done:
+                self._resolve(rid)
+            if sched.pending():
+                # work queued but not yet due: sleep to (at most) the
+                # coalescing window so the due-check lands on time
+                await asyncio.sleep(
+                    min(self.config.scheduler.max_wait_ms,
+                        self.config.idle_tick_ms) * 1e-3)
+            else:
+                try:
+                    await asyncio.wait_for(
+                        self._kick.wait(),
+                        timeout=self.config.idle_tick_ms * 1e-3)
+                except asyncio.TimeoutError:
+                    pass
+
+
+# -- demo traffic -----------------------------------------------------------
+
+
+def _build_demo_statement(n_rows: int, seed: int):
+    """A small VKNN-SF deployment: LAION-style catalog + IVF index."""
+    from ..api import connect
+    from ..core import Metric
+    from ..data import make_laion_catalog
+    from ..index import build_ivf
+    from ..index.ivf import ProbeConfig
+
+    cat = make_laion_catalog(n_rows=n_rows, n_queries=8, dim=16, n_modes=8,
+                             seed=seed)
+    idx = build_ivf(jax.random.key(seed), cat.table("laion")["vec"],
+                    nlist=32, metric=Metric.INNER_PRODUCT, iters=3)
+    cat.register_index("products", "embedding", idx)
+    db = connect(cat, engine="chase",
+                 probe=ProbeConfig(max_probes=32, probe_batch=2,
+                                   termination="counter"))
+    stmt = db.prepare("SELECT sample_id FROM products WHERE price < ${p} "
+                      "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+    return cat, stmt
+
+
+async def _front_door_demo(args) -> int:
+    cat, stmt = _build_demo_statement(args.rows, args.seed)
+    rng = np.random.default_rng(args.seed)
+    qs = np.asarray(cat.table("queries")["embedding"]).astype(np.float32)
+    config = ServeConfig(
+        admission=AdmissionConfig(max_queue_depth=args.watermark),
+        scheduler=SchedulerConfig(max_batch=16, max_wait_ms=1.0,
+                                  default_deadline_ms=args.deadline_ms),
+        policy=DegradePolicy(steps=((8, 8), (16, 4)), hysteresis=2))
+    outcomes = {"ok": 0, "degraded": 0, "backpressure": 0, "deadline": 0}
+
+    async def one(i: int) -> None:
+        from ..serving.resilience import (BackpressureError,
+                                          DeadlineExceededError)
+        binds = {"qv": qs[i % qs.shape[0]], "p": np.float32(1e9)}
+        try:
+            # staggered arrivals: early requests see a shallow queue (full
+            # effort), the later burst pushes into degraded territory
+            await asyncio.sleep(i * 0.001 if i < args.requests // 2 else 0)
+            res = await server.submit(binds)
+        except BackpressureError:
+            outcomes["backpressure"] += 1
+        except DeadlineExceededError:
+            outcomes["deadline"] += 1
+        else:
+            rep = res.explain()
+            outcomes["degraded" if rep.degraded else "ok"] += 1
+
+    t0 = time.perf_counter()
+    async with QueryServer(stmt, config) as server:
+        server.scheduler.warm({"qv": qs[0], "p": np.float32(1e9)}, [1, 16])
+        await asyncio.gather(*(one(i) for i in range(args.requests)))
+        snap = server.snapshot()
+    dt = time.perf_counter() - t0
+    print(f"[front-door] {args.requests} requests in {dt:.2f}s")
+    print(f"[front-door] outcomes: {outcomes}")
+    print(f"[front-door] snapshot: {snap}")
+    return 0
 
 
 def main(argv=None) -> int:
+    """CLI: --front-door resilience demo, or the LM decode path."""
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", help="LM decode path: model architecture")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=16)
@@ -28,8 +268,24 @@ def main(argv=None) -> int:
     ap.add_argument("--rag", action="store_true",
                     help="hybrid retrieval (CHASE VKNN-SF) before decode")
     ap.add_argument("--rag-docs", type=int, default=2000)
+    ap.add_argument("--front-door", action="store_true",
+                    help="resilient hybrid-query front-door demo")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--rows", type=int, default=1500)
+    ap.add_argument("--watermark", type=int, default=64)
+    ap.add_argument("--deadline-ms", type=float, default=200.0)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.front_door:
+        return asyncio.run(_front_door_demo(args))
+    if not args.arch:
+        ap.error("--arch is required unless --front-door is given")
+
+    from ..configs import get_config
+    from ..models import init_params
+    from ..serving.decode import generate
+    from ..serving.rag import HybridRetriever
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.input_mode != "tokens":

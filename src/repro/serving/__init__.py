@@ -1,8 +1,20 @@
+"""The serving tier: LM decode, hybrid RAG retrieval, the dynamic batch
+scheduler, and the resilience layer (admission control, deadlines, graceful
+degradation, seeded fault injection — DESIGN.md §11)."""
 from .decode import build_serve_step, generate, prefill
+from .faults import FaultInjector, FaultSpec, InjectedKernelError
 from .rag import HybridRetriever
-from .scheduler import (BatchScheduler, SchedulerConfig, latency_stats,
-                        run_effort_bucketed)
+from .resilience import (AdmissionConfig, AdmissionController,
+                         BackpressureError, DeadlineExceededError,
+                         DegradePolicy, LoadController, PoisonedBindError,
+                         ServingError, validate_binds)
+from .scheduler import (BatchScheduler, ResilientScheduler, SchedulerConfig,
+                        latency_stats, run_effort_bucketed)
 
 __all__ = ["build_serve_step", "generate", "prefill", "HybridRetriever",
-           "BatchScheduler", "SchedulerConfig", "latency_stats",
-           "run_effort_bucketed"]
+           "BatchScheduler", "ResilientScheduler", "SchedulerConfig",
+           "latency_stats", "run_effort_bucketed",
+           "FaultInjector", "FaultSpec", "InjectedKernelError",
+           "AdmissionConfig", "AdmissionController", "BackpressureError",
+           "DeadlineExceededError", "DegradePolicy", "LoadController",
+           "PoisonedBindError", "ServingError", "validate_binds"]

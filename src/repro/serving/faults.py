@@ -1,0 +1,143 @@
+"""Deterministic fault injection for the serving tier (DESIGN.md §11).
+
+Chaos testing is only useful if a failing run can be replayed: every
+injection decision here is drawn from a seeded, *per-fault-type* RNG
+stream, so
+
+* the same ``FaultSpec(seed=s)`` driven through the same request sequence
+  injects the same faults at the same decision sites, and
+* enabling one fault type does not shift the draw sequence of another
+  (independent streams keyed by ``(seed, fault-name)``).
+
+Four injectable fault classes, mirroring what production serving actually
+sees:
+
+* **latency spikes** — an execute suddenly takes ``latency_spike_ms``
+  longer (a slow kernel, a noisy neighbor).  The deadline machinery must
+  shed what the spike expired, not hang behind it.
+* **kernel exceptions** — the execute raises
+  :class:`InjectedKernelError`.  The scheduler must fail that batch's
+  requests with the error and keep serving (fault containment).
+* **poisoned binds** — a request payload is corrupted to NaN on submit.
+  Admission validation must reject it before it reaches a kernel.
+* **mid-flight catalog bumps** — ``register_index`` fires between batches
+  (a background re-build landing).  The catalog-version invalidation rule
+  must re-bind the plan before the next execute (no stale results, no
+  crash).
+
+The injector wraps an execute callable (:meth:`FaultInjector.wrap`);
+``counters`` record exactly what was injected so chaos tests can assert
+counter-exact outcomes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import numpy as np
+
+
+class InjectedKernelError(RuntimeError):
+    """The fault harness's stand-in for a kernel/runtime failure during a
+    batch execution (the scheduler must contain it per batch)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """What to inject, with what probability — all draws seeded.
+
+    Probabilities are per decision site: ``poison_bind_p`` per submitted
+    request; the others per batch execution."""
+    seed: int = 0
+    latency_spike_p: float = 0.0
+    latency_spike_ms: float = 20.0
+    kernel_error_p: float = 0.0
+    poison_bind_p: float = 0.0
+    catalog_bump_p: float = 0.0
+
+    def __post_init__(self):
+        for f in ("latency_spike_p", "kernel_error_p", "poison_bind_p",
+                  "catalog_bump_p"):
+            p = getattr(self, f)
+            if not 0.0 <= p <= 1.0:
+                raise ValueError(f"{f} must be a probability, got {p}")
+
+
+class FaultInjector:
+    """Seeded chaos: wraps the serving execute path and corrupts submits.
+
+    ``bump_fn`` is the mid-flight catalog mutation to fire (typically a
+    ``register_index`` re-registering a rebuilt index); ``sleep_fn`` lets
+    virtual-clock harnesses account spike time without wall-clock sleeping.
+    """
+
+    _STREAMS = ("latency", "kernel", "poison", "bump")
+
+    def __init__(self, spec: FaultSpec,
+                 bump_fn: Callable[[], None] | None = None,
+                 sleep_fn: Callable[[float], None] | None = None):
+        self.spec = spec
+        self.bump_fn = bump_fn
+        self.sleep_fn = sleep_fn if sleep_fn is not None else time.sleep
+        # independent streams: enabling/IGNORING one fault type never
+        # shifts another type's draw sequence
+        self._rng = {name: np.random.default_rng([spec.seed, i])
+                     for i, name in enumerate(self._STREAMS)}
+        self.counters = {"latency_spikes": 0, "kernel_errors": 0,
+                         "poisoned_binds": 0, "catalog_bumps": 0}
+
+    # -- submit-side --------------------------------------------------------
+
+    def maybe_poison(self, binds: dict) -> tuple[dict, bool]:
+        """With ``poison_bind_p``, corrupt the request's first float-array
+        bind to NaN (returns (binds, poisoned)); draws exactly once per
+        call, so the decision sequence is submit-order deterministic."""
+        if self._rng["poison"].random() >= self.spec.poison_bind_p:
+            return binds, False
+        out = dict(binds)
+        for name in sorted(out):
+            arr = np.asarray(out[name])
+            if np.issubdtype(arr.dtype, np.floating) and arr.ndim >= 1:
+                bad = np.array(arr, dtype=arr.dtype)
+                bad[...] = np.nan
+                out[name] = bad
+                self.counters["poisoned_binds"] += 1
+                return out, True
+        return binds, False
+
+    # -- execute-side -------------------------------------------------------
+
+    def before_execute(self) -> None:
+        """Pre-batch decision site: maybe fire the mid-flight catalog bump
+        (draws once per batch whether or not a ``bump_fn`` is wired)."""
+        fire = self._rng["bump"].random() < self.spec.catalog_bump_p
+        if fire and self.bump_fn is not None:
+            self.counters["catalog_bumps"] += 1
+            self.bump_fn()
+
+    def around_execute(self, fn: Callable[[], Any]) -> Any:
+        """Run one batch execution under the latency/kernel fault draws."""
+        if self._rng["latency"].random() < self.spec.latency_spike_p:
+            self.counters["latency_spikes"] += 1
+            self.sleep_fn(self.spec.latency_spike_ms * 1e-3)
+        if self._rng["kernel"].random() < self.spec.kernel_error_p:
+            self.counters["kernel_errors"] += 1
+            raise InjectedKernelError(
+                f"injected kernel fault (seed={self.spec.seed}, "
+                f"fault #{self.counters['kernel_errors']})")
+        return fn()
+
+    def wrap(self, execute: Callable) -> Callable:
+        """Wrap a ``execute(binds_list) -> out`` callable with the full
+        per-batch fault sequence (catalog bump, spike, kernel error)."""
+
+        def wrapped(binds_list):
+            self.before_execute()
+            return self.around_execute(lambda: execute(binds_list))
+
+        return wrapped
+
+    def snapshot(self) -> dict:
+        """Injection counters (copies — safe to diff across phases)."""
+        return dict(self.counters)

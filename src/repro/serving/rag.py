@@ -42,6 +42,7 @@ class HybridRetriever:
 
     @property
     def catalog(self) -> Catalog:
+        """The session's catalog (docs table + IVF index)."""
         return self.db.catalog
 
     @property
@@ -54,6 +55,8 @@ class HybridRetriever:
               safety: jnp.ndarray, k: int = 4, nlist: int = 64,
               metric: Metric = Metric.INNER_PRODUCT,
               probe: ProbeConfig = ProbeConfig(), seed: int = 0):
+        """Build a retriever over raw doc embeddings: catalog + IVF index +
+        prepared hybrid statement, in one call."""
         n, dim = doc_embeddings.shape
         schema = Schema({
             "doc_id": int_col(),
@@ -77,6 +80,8 @@ class HybridRetriever:
         return cls(db, statement, k)
 
     def retrieve(self, query_embedding, min_freshness=0.0, safety_class=0):
+        """Single-query hybrid retrieval: (ids, sims, valid) top-k under the
+        freshness / safety filters."""
         out = self.statement.execute({
             "query_embedding": query_embedding,
             "min_freshness": min_freshness,

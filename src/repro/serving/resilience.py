@@ -1,0 +1,212 @@
+"""Resilience primitives for the serving tier (DESIGN.md §11).
+
+The serving path survives production traffic by making every failure mode
+an *explicit, typed stage* between "request arrives" and "kernel runs":
+
+* **Admission control** (:class:`AdmissionController`): a bounded queue
+  with a hard depth watermark.  A saturated server rejects at the door with
+  :class:`BackpressureError` carrying a ``retry_after_ms`` hint — clients
+  get an immediate, actionable signal instead of a timeout.
+* **Bind validation** (:func:`validate_binds`): poisoned payloads
+  (non-finite query vectors) are rejected with :class:`PoisonedBindError`
+  *before* they reach a compiled kernel, where NaNs would silently corrupt
+  a whole coalesced batch's top-k ordering.
+* **Deadlines** (:class:`DeadlineExceededError`): requests carry absolute
+  deadlines; the scheduler sheds expired requests before
+  compilation/execution and never holds a batch past its tightest member's
+  deadline (see :mod:`repro.serving.scheduler`).
+* **Graceful degradation** (:class:`LoadController`): under overload the
+  controller steps the per-query IVF ``probe_budget`` down through
+  configured (queue-depth, budget) steps — riding the effort-bucketed
+  machinery of DESIGN.md §8 — trading recall for goodput instead of letting
+  the queue blow through every deadline.  Hysteresis keeps the level from
+  flapping at a watermark.  Executions run at a degraded level report it in
+  ``Result.explain()``.
+
+Everything here is deterministic given the observed queue depths — chaos
+tests (:mod:`repro.serving.faults`) replay exact scenarios from seeds.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class ServingError(RuntimeError):
+    """Base class for explicit serving-tier failures (every subclass is a
+    *terminal, typed* request outcome — never a hang, never a bare
+    timeout)."""
+
+
+class BackpressureError(ServingError):
+    """Admission rejected: the queue is at its watermark.
+
+    Carries ``retry_after_ms`` — the client-facing shed signal ("come back
+    later"), the opposite of an opaque timeout."""
+
+    def __init__(self, depth: int, watermark: int, retry_after_ms: float):
+        super().__init__(
+            f"queue depth {depth} at/over admission watermark {watermark}; "
+            f"retry after {retry_after_ms:.1f}ms")
+        self.depth = depth
+        self.watermark = watermark
+        self.retry_after_ms = retry_after_ms
+
+
+class DeadlineExceededError(ServingError):
+    """The request's deadline passed while it was still queued; it was shed
+    *before* compilation/execution (no kernel time was wasted on it)."""
+
+    def __init__(self, rid: int, late_ms: float):
+        super().__init__(f"request {rid} shed: deadline exceeded by "
+                         f"{late_ms:.2f}ms while queued")
+        self.rid = rid
+        self.late_ms = late_ms
+
+
+class PoisonedBindError(ServingError):
+    """A bind payload failed validation (non-finite values) and was rejected
+    at admission, before it could reach — and corrupt — a coalesced kernel
+    batch."""
+
+    def __init__(self, name: str):
+        super().__init__(f"bind parameter {name!r} carries non-finite "
+                         f"values; rejected at admission")
+        self.name = name
+
+
+def validate_binds(binds: dict) -> None:
+    """Reject non-finite float bind values (raises PoisonedBindError).
+
+    A NaN query vector inside a coalesced batch poisons every distance the
+    kernel tile computes for that lane and can destabilize the shared
+    top-k extract-min; the serving tier fails the one bad request at the
+    door instead."""
+    for name, v in binds.items():
+        arr = np.asarray(v)
+        if np.issubdtype(arr.dtype, np.floating) and not np.all(
+                np.isfinite(arr)):
+            raise PoisonedBindError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdmissionConfig:
+    """Admission-control knobs.
+
+    ``max_queue_depth`` is the hard watermark: a submit that would make the
+    number of in-flight requests exceed it is rejected.  ``retry_after_ms``
+    scales linearly with how far over the watermark demand is pushing."""
+    max_queue_depth: int = 256
+    retry_after_ms: float = 10.0
+
+    def __post_init__(self):
+        if self.max_queue_depth < 1:
+            raise ValueError(f"max_queue_depth must be >= 1, "
+                             f"got {self.max_queue_depth}")
+
+
+class AdmissionController:
+    """Bounded-queue admission: admit or reject-with-retry-after.
+
+    Stateless beyond counters — the decision is a pure function of the
+    observed depth, so replays are deterministic."""
+
+    def __init__(self, config: AdmissionConfig | None = None):
+        self.config = config if config is not None else AdmissionConfig()
+        self.admitted = 0
+        self.rejected = 0
+
+    def admit(self, depth: int) -> None:
+        """Admit a request arriving at queue depth ``depth`` (the in-flight
+        count *before* this request), or raise :class:`BackpressureError`."""
+        cfg = self.config
+        if depth >= cfg.max_queue_depth:
+            self.rejected += 1
+            over = (depth - cfg.max_queue_depth) / cfg.max_queue_depth
+            raise BackpressureError(
+                depth, cfg.max_queue_depth,
+                cfg.retry_after_ms * (1.0 + over))
+        self.admitted += 1
+
+    def snapshot(self) -> dict:
+        """Counters: requests admitted / rejected so far."""
+        return {"admitted": self.admitted, "rejected": self.rejected}
+
+
+@dataclasses.dataclass(frozen=True)
+class DegradePolicy:
+    """Load-controller policy: queue-depth watermarks -> probe budgets.
+
+    ``steps`` is an ascending sequence of ``(queue_depth, probe_budget)``
+    pairs: when the observed depth reaches ``steps[i][0]`` the controller
+    moves to level ``i + 1`` and batched IVF executions are capped at
+    ``steps[i][1]`` clusters per query (the DESIGN.md §8 straggler valve,
+    repurposed as the overload valve).  Level 0 = full effort.
+    ``hysteresis`` is how far below a step's watermark the depth must drop
+    before stepping back up a level (no flapping at the boundary)."""
+    steps: tuple = ((32, 16), (64, 4))
+    hysteresis: int = 4
+
+    def __post_init__(self):
+        depths = [d for d, _ in self.steps]
+        budgets = [b for _, b in self.steps]
+        if depths != sorted(depths) or len(set(depths)) != len(depths):
+            raise ValueError(f"step depths must be strictly ascending, "
+                             f"got {depths}")
+        if any(b < 1 for b in budgets):
+            raise ValueError(f"probe budgets must be >= 1, got {budgets}")
+        if budgets != sorted(budgets, reverse=True):
+            raise ValueError(f"probe budgets must be non-increasing "
+                             f"(deeper queue -> less effort), got {budgets}")
+        if self.hysteresis < 0:
+            raise ValueError(f"hysteresis must be >= 0, "
+                             f"got {self.hysteresis}")
+
+
+class LoadController:
+    """Graceful-degradation state machine: queue depth -> effort level.
+
+    ``observe(depth)`` is called once per drain with the current queue
+    depth; it returns the level to run the next batch at.  Level L > 0 maps
+    to ``policy.steps[L-1][1]`` as the per-query probe budget.  Transitions
+    are deterministic: UP to the highest level whose watermark the depth
+    reaches, DOWN one level at a time once depth falls ``hysteresis`` below
+    the current level's watermark."""
+
+    def __init__(self, policy: DegradePolicy | None = None):
+        self.policy = policy if policy is not None else DegradePolicy()
+        self.level = 0
+        self.transitions = 0
+        self.degraded_batches = 0
+
+    def observe(self, depth: int) -> int:
+        """Update and return the effort level for a drain at ``depth``."""
+        steps = self.policy.steps
+        up = 0
+        for i, (watermark, _budget) in enumerate(steps):
+            if depth >= watermark:
+                up = i + 1
+        if up > self.level:
+            self.level = up
+            self.transitions += 1
+        elif self.level > 0:
+            watermark = steps[self.level - 1][0]
+            if depth <= max(0, watermark - self.policy.hysteresis):
+                self.level -= 1
+                self.transitions += 1
+        if self.level > 0:
+            self.degraded_batches += 1
+        return self.level
+
+    def probe_budget(self) -> int | None:
+        """The current level's per-query probe budget (None = full effort)."""
+        if self.level == 0:
+            return None
+        return self.policy.steps[self.level - 1][1]
+
+    def snapshot(self) -> dict:
+        """Live controller state: level, budget, transition/batch counters."""
+        return {"level": self.level, "probe_budget": self.probe_budget(),
+                "transitions": self.transitions,
+                "degraded_batches": self.degraded_batches}

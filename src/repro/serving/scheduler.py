@@ -26,6 +26,16 @@ module closes both gaps on top of :class:`~repro.core.compiler.BucketedExecutor`
   in their query-batch form (the PR-2 flattening: left rows ARE the query
   batch — benchmarks/q8_sched_qps.py measures exactly that shape).
 
+Resilience (DESIGN.md §11): requests may carry **deadlines** and
+**priorities**.  Expired requests are shed *before* compilation/execution
+(:class:`~repro.serving.resilience.DeadlineExceededError` — no kernel time
+is spent on a result nobody can use), a forming batch never waits past its
+tightest member's deadline, and an execution that raises is contained to
+its own batch — every member fails with the error, the queue keeps
+draining.  :class:`ResilientScheduler` adds graceful degradation (a
+:class:`~repro.serving.resilience.LoadController` stepping probe budgets
+down under queue pressure) and fault-injection hooks on top.
+
 A virtual-clock queueing simulation (:meth:`BatchScheduler.simulate`) backs
 benchmarks/q8_sched_qps.py: arrivals advance on a virtual clock, service
 times are measured wall-clock of the real batch executions.
@@ -41,20 +51,37 @@ import jax
 
 import numpy as np
 
+from .resilience import DeadlineExceededError, LoadController
+
 
 @dataclasses.dataclass(frozen=True)
 class SchedulerConfig:
-    """Coalescing + effort-bucketing knobs.
+    """Coalescing + effort-bucketing + deadline knobs.
 
     ``max_wait_ms`` bounds the queueing latency the scheduler may add: a
     request never waits more than ``max_wait_ms`` for co-batched company
     before execution starts (it may still wait for the server to free up).
     ``pilot_budget`` > 0 enables two-phase effort-bucketed IVF execution
     (cluster units; a sensible pilot is ``ProbeConfig.min_probes`` plus a
-    few rounds' worth of clusters)."""
+    few rounds' worth of clusters).  ``default_deadline_ms`` stamps every
+    request submitted without an explicit deadline (None = no deadline);
+    ``deadline_margin_ms`` drains a forming batch that much *before* its
+    tightest member deadline (headroom for service time)."""
     max_batch: int = 64
     max_wait_ms: float = 2.0
     pilot_budget: int = 0
+    default_deadline_ms: float | None = None
+    deadline_margin_ms: float = 0.0
+
+
+@dataclasses.dataclass
+class _Request:
+    """One queued request: binds + arrival/deadline/priority metadata."""
+    rid: int
+    binds: dict
+    arrival: float
+    deadline: float | None = None     # absolute, clock units (seconds)
+    priority: int = 0                 # higher drains first
 
 
 @dataclasses.dataclass
@@ -68,6 +95,7 @@ class SimRecord:
 
     @property
     def latency(self) -> float:
+        """Request latency (finish - arrival) in virtual-clock seconds."""
         return self.finish - self.arrival
 
 
@@ -145,58 +173,154 @@ class BatchScheduler:
         # every scheduler ever constructed.
         self.config = config if config is not None else SchedulerConfig()
         self.clock = clock
-        self._queue: collections.deque = collections.deque()
+        self._queue: collections.deque[_Request] = collections.deque()
         self._results: dict[int, Any] = {}
         self._next_rid = 0
+        self.counters = {"submitted": 0, "executed": 0, "batches": 0,
+                         "shed_deadline": 0, "failed": 0}
 
     # -- online API ---------------------------------------------------------
 
     def submit(self, **binds) -> int:
+        """Enqueue a request with default deadline/priority (back-compat
+        surface; see :meth:`submit_request` for the full contract)."""
+        return self.submit_request(binds)
+
+    def submit_request(self, binds: dict, *, deadline_ms: float | None = None,
+                       deadline: float | None = None,
+                       priority: int = 0) -> int:
+        """Enqueue a request and return its id.
+
+        ``deadline_ms`` is relative to now; ``deadline`` is absolute in
+        clock units (seconds) and wins when both are given.  Without either,
+        ``config.default_deadline_ms`` applies (None = never expires).
+        Higher ``priority`` drains first; ties drain in arrival order."""
         rid = self._next_rid
         self._next_rid += 1
-        self._queue.append((rid, binds, self.clock()))
+        now = self.clock()
+        if deadline is None:
+            if deadline_ms is None:
+                deadline_ms = self.config.default_deadline_ms
+            if deadline_ms is not None:
+                deadline = now + deadline_ms * 1e-3
+        self._queue.append(_Request(rid, binds, now, deadline, priority))
+        self.counters["submitted"] += 1
         return rid
 
     def pending(self) -> int:
+        """Number of requests queued (submitted, not yet drained/shed)."""
         return len(self._queue)
 
     def due(self, now: float | None = None) -> bool:
-        """Deadline rule: drain when full OR the oldest request has waited
-        out its ``max_wait_ms`` coalescing window."""
+        """Drain rule: full batch, OR the oldest request waited out its
+        ``max_wait_ms`` coalescing window, OR the tightest queued deadline
+        is within ``deadline_margin_ms`` — a batch never idles past the
+        point where one of its members would expire."""
         if not self._queue:
             return False
         if len(self._queue) >= self.config.max_batch:
             return True
         now = self.clock() if now is None else now
-        oldest = self._queue[0][2]
-        return (now - oldest) * 1e3 >= self.config.max_wait_ms
+        oldest = self._queue[0].arrival
+        if (now - oldest) * 1e3 >= self.config.max_wait_ms:
+            return True
+        deadlines = [r.deadline for r in self._queue if r.deadline is not None]
+        if deadlines:
+            margin = self.config.deadline_margin_ms * 1e-3
+            return now >= min(deadlines) - margin
+        return False
+
+    def shed_expired(self, now: float | None = None) -> list[int]:
+        """Drop every queued request whose deadline has passed (strict
+        ``now > deadline`` — a drain at exactly the deadline still serves).
+        Each shed rid completes with a stored
+        :class:`~repro.serving.resilience.DeadlineExceededError` that
+        :meth:`result` re-raises; no kernel time is spent on them."""
+        if not self._queue:
+            return []
+        now = self.clock() if now is None else now
+        shed: list[int] = []
+        keep: collections.deque[_Request] = collections.deque()
+        for r in self._queue:
+            if r.deadline is not None and now > r.deadline:
+                self._results[r.rid] = DeadlineExceededError(
+                    r.rid, (now - r.deadline) * 1e3)
+                shed.append(r.rid)
+            else:
+                keep.append(r)
+        if shed:
+            self._queue = keep
+            self.counters["shed_deadline"] += len(shed)
+        return shed
 
     def poll(self, now: float | None = None) -> list[int]:
-        """Drain ONE batch if due; returns the completed request ids."""
-        if not self.due(now):
-            return []
-        return self._drain()
+        """Shed expired requests, then drain ONE batch if due; returns the
+        completed request ids (shed rids included — their results raise)."""
+        now = self.clock() if now is None else now
+        done = self.shed_expired(now)
+        if self.due(now):
+            done.extend(self._drain(now))
+        return done
 
-    def flush(self) -> list[int]:
+    def flush(self, now: float | None = None) -> list[int]:
         """Drain everything queued, one max_batch execution at a time."""
-        done: list[int] = []
+        now = self.clock() if now is None else now
+        done = self.shed_expired(now)
         while self._queue:
-            done.extend(self._drain())
+            done.extend(self._drain(now))
         return done
 
     def result(self, rid: int):
-        return self._results.pop(rid)
+        """Pop the request's outcome: sliced outputs, or — for a shed or
+        failed request — re-raise its stored exception."""
+        out = self._results.pop(rid)
+        if isinstance(out, BaseException):
+            raise out
+        return out
 
     # -- execution ----------------------------------------------------------
 
-    def _drain(self) -> list[int]:
+    def _take(self) -> list[_Request]:
+        """Pop up to max_batch requests, highest priority first (arrival
+        order within a priority level, and the all-default-priority path
+        stays pure FIFO)."""
         take = min(len(self._queue), self.config.max_batch)
-        entries = [self._queue.popleft() for _ in range(take)]
-        rids = [rid for rid, _, _ in entries]
-        out = self.execute([binds for _, binds, _ in entries])
-        for i, rid in enumerate(rids):
-            self._results[rid] = jax.tree.map(lambda v: v[i], out)
-        return rids
+        if any(r.priority for r in self._queue):
+            ordered = sorted(self._queue,
+                             key=lambda r: (-r.priority, r.arrival, r.rid))
+            chosen = {r.rid for r in ordered[:take]}
+            entries = [r for r in self._queue if r.rid in chosen]
+            self._queue = collections.deque(
+                r for r in self._queue if r.rid not in chosen)
+            return entries
+        return [self._queue.popleft() for _ in range(take)]
+
+    def _drain(self, now: float | None = None) -> list[int]:
+        now = self.clock() if now is None else now
+        done = self.shed_expired(now)
+        if not self._queue:
+            return done
+        entries = self._take()
+        try:
+            out = self.execute([r.binds for r in entries])
+        except Exception as e:
+            # fault containment: the failure is scoped to this batch —
+            # every member completes with the error, the queue keeps
+            # draining, and nothing is left dangling (no hangs).
+            for r in entries:
+                self._results[r.rid] = e
+            self.counters["failed"] += len(entries)
+        else:
+            for i, r in enumerate(entries):
+                self._results[r.rid] = self._slice(out, i)
+            self.counters["executed"] += len(entries)
+            self.counters["batches"] += 1
+        return done + [r.rid for r in entries]
+
+    def _slice(self, out, i: int):
+        """Extract request ``i``'s view of a batch output (overridable —
+        :class:`ResilientScheduler` slices structured ResultBatch)."""
+        return jax.tree.map(lambda v: v[i], out)
 
     def execute(self, binds_list: list[dict]):
         """Execute one coalesced batch through the bucketed executor
@@ -255,7 +379,7 @@ class BatchScheduler:
                 start = close
             t0 = time.perf_counter()
             out = self.execute(binds_list[i:j])
-            jax.block_until_ready(jax.tree.leaves(out)[0])
+            jax.block_until_ready(jax.tree.leaves(getattr(out, "data", out))[0])
             exec_s = time.perf_counter() - t0
             finish = start + exec_s
             for r in range(i, j):
@@ -264,6 +388,85 @@ class BatchScheduler:
             server_free = finish
             i = j
         return records
+
+
+class ResilientScheduler(BatchScheduler):
+    """Deadline scheduler + graceful degradation + fault injection.
+
+    Serves a session-API :class:`~repro.api.Statement` (required — the
+    structured-result surface is what carries degraded-mode reporting).
+    On every drain the :class:`~repro.serving.resilience.LoadController`
+    observes the pre-drain queue depth and picks an effort level; level
+    L > 0 caps batched IVF executions at the policy's per-query
+    ``probe_budget`` (trading recall for goodput) and the served results'
+    ``explain()`` reports ``degraded``.  A
+    :class:`~repro.serving.faults.FaultInjector`, when wired, wraps each
+    batch execution (latency spikes, kernel errors, catalog bumps) —
+    injected kernel errors are contained per batch like any real failure.
+    """
+
+    def __init__(self, statement, config: SchedulerConfig | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 policy=None, faults=None):
+        super().__init__(statement, config, clock)
+        self.load = LoadController(policy)
+        self.faults = faults
+
+    @property
+    def statement(self):
+        """The served Statement (alias of the scheduler's compiled slot)."""
+        return self.compiled
+
+    def execute(self, binds_list: list[dict]):
+        # local import: repro.api imports this module at package init
+        from ..api.hints import ExecutionHints
+        from ..api.result import ResultBatch
+
+        depth = self.pending() + len(binds_list)  # pre-drain queue depth
+        level = self.load.observe(depth)
+        budget = self.load.probe_budget()
+        if budget is not None and self.compiled.batch_native:
+            hints = ExecutionHints(probe_budget=budget)
+        elif self.config.pilot_budget > 0:
+            hints = ExecutionHints(pilot_budget=self.config.pilot_budget)
+        else:
+            hints = None
+        run = lambda bl: self.compiled.execute(bl, hints=hints)
+        if self.faults is not None:
+            run = self.faults.wrap(run)
+        out = run(binds_list)
+        if level > 0 and isinstance(out, ResultBatch):
+            info = {"level": level, "probe_budget": budget}
+            base_fn = out._explain_fn
+            out = ResultBatch(out.data,
+                              lambda: dataclasses.replace(base_fn(),
+                                                          degraded=info),
+                              len(out))
+        return out
+
+    def _slice(self, out, i: int):
+        if hasattr(out, "query"):
+            return out.query(i)
+        return super()._slice(out, i)
+
+    def warm(self, sample_binds: dict, batch_sizes: list[int]) -> None:
+        """Also pre-trace the probe-budgeted executables degraded drains
+        run (a load transition must not pay a compile on the hot path —
+        that latency spike is exactly what degradation is fighting)."""
+        super().warm(sample_binds, batch_sizes)
+        if self.load.policy.steps and self.compiled.batch_native:
+            budget = self.load.policy.steps[-1][1]
+            ex = self.compiled.executor
+            for b in sorted({ex.bucket_for(s) for s in batch_sizes}):
+                stacked = self.compiled._stack_binds([sample_binds] * b, {})
+                ex(stacked, probe_budget=budget)
+
+    def snapshot(self) -> dict:
+        """Scheduler counters + load-controller state (+ fault counters)."""
+        snap = {**self.counters, "load": self.load.snapshot()}
+        if self.faults is not None:
+            snap["faults"] = self.faults.snapshot()
+        return snap
 
 
 def latency_stats(records: list[SimRecord]) -> dict:

@@ -1,0 +1,308 @@
+"""Resilient serving tier (DESIGN.md §11): admission control, graceful
+degradation, deterministic fault injection, and the asyncio front door.
+
+Contracts under test:
+* admission is a pure function of observed depth — reject at the watermark
+  with a ``retry_after_ms`` that scales with how far over demand pushes;
+* poisoned (non-finite) binds are rejected at the door, never batched;
+* the :class:`LoadController` steps UP immediately to the deepest reached
+  watermark and DOWN one level at a time behind hysteresis;
+* fault injection replays bit-identically from a seed, with per-fault-type
+  streams that do not shift each other;
+* a degraded :class:`ResilientScheduler` execution reports its level and
+  probe budget through ``Result.explain()``;
+* :class:`QueryServer` resolves EVERY submit to a typed outcome — result,
+  BackpressureError, DeadlineExceededError — never a hang.
+"""
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import connect
+from repro.core import Metric
+from repro.data import make_laion_catalog
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+from repro.launch.serve import QueryServer, ServeConfig
+from repro.serving import (AdmissionConfig, AdmissionController,
+                           BackpressureError, DeadlineExceededError,
+                           DegradePolicy, FaultInjector, FaultSpec,
+                           InjectedKernelError, LoadController,
+                           PoisonedBindError, ResilientScheduler,
+                           SchedulerConfig, validate_binds)
+
+SQL = ("SELECT sample_id FROM products WHERE price < ${p} "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+
+
+@pytest.fixture(scope="module")
+def env():
+    cat = make_laion_catalog(n_rows=600, n_queries=8, dim=16, n_modes=8,
+                             seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=8,
+                    metric=Metric.INNER_PRODUCT, iters=2)
+    cat.register_index("products", "embedding", idx)
+    db = connect(cat, engine="chase",
+                 probe=ProbeConfig(max_probes=8, probe_batch=2,
+                                   termination="counter"))
+    stmt = db.prepare(SQL)
+    qs = np.asarray(cat.table("queries")["embedding"]).astype(np.float32)
+    return cat, stmt, qs
+
+
+def _binds(qs, i=0):
+    return {"qv": qs[i % qs.shape[0]], "p": np.float32(1e9)}
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+def test_admission_rejects_at_watermark_with_scaled_retry_after():
+    adm = AdmissionController(AdmissionConfig(max_queue_depth=4,
+                                              retry_after_ms=10.0))
+    for depth in range(4):
+        adm.admit(depth)                    # below watermark: admitted
+    with pytest.raises(BackpressureError) as ei:
+        adm.admit(4)
+    assert ei.value.retry_after_ms == pytest.approx(10.0)
+    assert ei.value.watermark == 4
+    with pytest.raises(BackpressureError) as ei:
+        adm.admit(8)                        # 100% over: retry hint doubles
+    assert ei.value.retry_after_ms == pytest.approx(20.0)
+    assert adm.snapshot() == {"admitted": 4, "rejected": 2}
+
+
+def test_admission_config_validation():
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        AdmissionConfig(max_queue_depth=0)
+
+
+def test_validate_binds_rejects_non_finite():
+    validate_binds({"qv": np.ones(4, np.float32), "p": np.float32(2.0)})
+    bad = np.ones(4, np.float32)
+    bad[2] = np.nan
+    with pytest.raises(PoisonedBindError, match="qv"):
+        validate_binds({"qv": bad})
+    with pytest.raises(PoisonedBindError, match="p"):
+        validate_binds({"p": np.float32(np.inf)})
+    validate_binds({"k": np.int32(7)})      # integers are never "poisoned"
+
+
+# ---------------------------------------------------------------------------
+# degradation policy + load controller
+# ---------------------------------------------------------------------------
+
+def test_degrade_policy_validation():
+    DegradePolicy(steps=((4, 8), (8, 2)), hysteresis=2)     # well-formed
+    with pytest.raises(ValueError, match="ascending"):
+        DegradePolicy(steps=((8, 8), (4, 2)))
+    with pytest.raises(ValueError, match="ascending"):
+        DegradePolicy(steps=((4, 8), (4, 2)))               # duplicate depth
+    with pytest.raises(ValueError, match="budgets must be >= 1"):
+        DegradePolicy(steps=((4, 0),))
+    with pytest.raises(ValueError, match="non-increasing"):
+        DegradePolicy(steps=((4, 2), (8, 8)))               # effort UP? no
+    with pytest.raises(ValueError, match="hysteresis"):
+        DegradePolicy(hysteresis=-1)
+
+
+def test_load_controller_up_immediate_down_hysteretic():
+    lc = LoadController(DegradePolicy(steps=((4, 8), (8, 2)), hysteresis=2))
+    assert lc.observe(0) == 0 and lc.probe_budget() is None
+    assert lc.observe(4) == 1 and lc.probe_budget() == 8
+    assert lc.observe(9) == 2 and lc.probe_budget() == 2
+    assert lc.observe(7) == 2               # 7 > 8-2: hysteresis holds
+    assert lc.observe(6) == 1               # 6 <= 8-2: down ONE level
+    assert lc.observe(6) == 1               # still >= step-1 watermark
+    assert lc.observe(2) == 0               # 2 <= 4-2: recovered
+    snap = lc.snapshot()
+    assert snap["transitions"] == 4
+    assert snap["degraded_batches"] == 5    # every level>0 observation
+    assert snap["level"] == 0 and snap["probe_budget"] is None
+
+
+def test_load_controller_jumps_straight_to_deepest_watermark():
+    lc = LoadController(DegradePolicy(steps=((4, 8), (8, 2)), hysteresis=2))
+    assert lc.observe(100) == 2             # no level-at-a-time climb
+    assert lc.transitions == 1
+
+
+# ---------------------------------------------------------------------------
+# fault injection: seeded, replayable, independent streams
+# ---------------------------------------------------------------------------
+
+def _drive(inj, n=32):
+    """A fixed decision-site sequence; returns the observable outcomes."""
+    spikes, errors = [], []
+    for _ in range(n):
+        try:
+            inj.around_execute(lambda: "ok")
+        except InjectedKernelError:
+            errors.append(True)
+        else:
+            errors.append(False)
+    return errors, dict(inj.counters)
+
+
+def test_fault_injection_is_seed_deterministic():
+    spec = FaultSpec(seed=7, latency_spike_p=0.3, latency_spike_ms=1.0,
+                     kernel_error_p=0.2, poison_bind_p=0.5)
+    sleeps_a, sleeps_b = [], []
+    a = FaultInjector(spec, sleep_fn=sleeps_a.append)
+    b = FaultInjector(spec, sleep_fn=sleeps_b.append)
+    binds = {"qv": np.ones(4, np.float32)}
+    pa = [a.maybe_poison(binds)[1] for _ in range(16)]
+    pb = [b.maybe_poison(binds)[1] for _ in range(16)]
+    assert pa == pb and any(pa)
+    ea, ca = _drive(a)
+    eb, cb = _drive(b)
+    assert ea == eb and ca == cb and sleeps_a == sleeps_b
+    assert ca["kernel_errors"] == sum(ea) > 0
+    assert ca["latency_spikes"] == len(sleeps_a) > 0
+
+
+def test_fault_streams_are_independent():
+    # enabling kernel errors must not shift the latency draw sequence
+    lat_only = FaultInjector(FaultSpec(seed=3, latency_spike_p=0.4),
+                             sleep_fn=lambda s: None)
+    both = FaultInjector(FaultSpec(seed=3, latency_spike_p=0.4,
+                                   kernel_error_p=0.9),
+                         sleep_fn=lambda s: None)
+    _drive(lat_only)
+    _drive(both)
+    assert (lat_only.counters["latency_spikes"]
+            == both.counters["latency_spikes"] > 0)
+
+
+def test_maybe_poison_nans_first_float_bind_only():
+    inj = FaultInjector(FaultSpec(seed=0, poison_bind_p=1.0))
+    binds = {"qv": np.ones(4, np.float32), "p": np.float32(0.5)}
+    out, poisoned = inj.maybe_poison(binds)
+    assert poisoned and np.isnan(out["qv"]).all()
+    assert out["p"] == binds["p"]           # scalars / later binds untouched
+    assert np.isfinite(binds["qv"]).all()   # caller's dict never mutated
+    with pytest.raises(PoisonedBindError):
+        validate_binds(out)                 # the door catches the poison
+    # no float-array bind to poison: draw consumed, nothing corrupted
+    out2, poisoned2 = inj.maybe_poison({"k": np.int32(3)})
+    assert not poisoned2 and out2 == {"k": np.int32(3)}
+    assert inj.counters["poisoned_binds"] == 1
+
+
+def test_wrap_fires_bump_before_execute():
+    fired = []
+    inj = FaultInjector(FaultSpec(seed=0, catalog_bump_p=1.0),
+                        bump_fn=lambda: fired.append(len(fired)))
+    calls = []
+    wrapped = inj.wrap(lambda bl: calls.append(bl) or "out")
+    assert wrapped(["b"]) == "out"
+    assert fired == [0] and calls == [["b"]]
+    assert inj.counters["catalog_bumps"] == 1
+
+
+# ---------------------------------------------------------------------------
+# degraded execution reports through explain()
+# ---------------------------------------------------------------------------
+
+def test_resilient_scheduler_degrades_and_reports(env):
+    _cat, stmt, qs = env
+    sched = ResilientScheduler(
+        stmt, SchedulerConfig(max_batch=8, max_wait_ms=50.0),
+        policy=DegradePolicy(steps=((4, 2),), hysteresis=0))
+    rids = [sched.submit_request(_binds(qs, i)) for i in range(6)]
+    done = sched.flush()
+    assert sorted(done) == sorted(rids)
+    for rid in rids:
+        rep = sched.result(rid).explain()
+        assert rep.degraded == {"level": 1, "probe_budget": 2}
+        assert "DEGRADED" in rep.render()
+    snap = sched.snapshot()
+    assert snap["executed"] == 6 and snap["batches"] == 1
+    assert snap["load"]["degraded_batches"] == 1
+    # shallow traffic runs at full effort and does NOT report degraded
+    rid = sched.submit_request(_binds(qs, 0))
+    sched.flush()
+    assert sched.result(rid).explain().degraded is None
+
+
+# ---------------------------------------------------------------------------
+# QueryServer: the asyncio front door
+# ---------------------------------------------------------------------------
+
+def _serve_config(watermark, max_batch=4, max_wait_ms=100.0,
+                  deadline_ms=None):
+    return ServeConfig(
+        admission=AdmissionConfig(max_queue_depth=watermark,
+                                  retry_after_ms=5.0),
+        scheduler=SchedulerConfig(max_batch=max_batch,
+                                  max_wait_ms=max_wait_ms,
+                                  default_deadline_ms=deadline_ms),
+        policy=DegradePolicy(steps=((8, 4),), hysteresis=2),
+        idle_tick_ms=5.0)
+
+
+def test_query_server_backpressure_is_typed_and_counted(env):
+    _cat, stmt, qs = env
+
+    async def scenario():
+        server = QueryServer(stmt, _serve_config(watermark=4))
+        server.scheduler.warm(_binds(qs, 0), [1, 2, 4])
+        async with server:
+            outs = await asyncio.gather(
+                *(server.submit(_binds(qs, i)) for i in range(12)),
+                return_exceptions=True)
+            snap = server.snapshot()
+        return outs, snap
+
+    outs, snap = asyncio.run(scenario())
+    ok = [o for o in outs if not isinstance(o, BaseException)]
+    bp = [o for o in outs if isinstance(o, BackpressureError)]
+    # the gather submits all 12 before any batch resolves: exactly the
+    # watermark's worth admitted, the rest explicitly rejected at the door
+    assert len(ok) == 4 and len(bp) == 8
+    assert all(e.retry_after_ms > 0 for e in bp)
+    assert all(np.asarray(r.ids).shape == (4,) for r in ok)
+    assert snap["admission"] == {"admitted": 4, "rejected": 8}
+    assert snap["executed"] == 4 and snap["in_flight"] == 0
+
+
+def test_query_server_rejects_poison_and_sheds_deadlines(env):
+    _cat, stmt, qs = env
+
+    async def scenario():
+        server = QueryServer(stmt, _serve_config(watermark=64))
+        server.scheduler.warm(_binds(qs, 0), [1])
+        bad = dict(_binds(qs, 0))
+        bad["qv"] = np.full_like(bad["qv"], np.nan)
+        async with server:
+            with pytest.raises(PoisonedBindError):
+                await server.submit(bad)
+            # a deadline in the past is shed at the first poll, typed
+            with pytest.raises(DeadlineExceededError):
+                await server.submit(_binds(qs, 1), deadline_ms=1e-3)
+            ok = await server.submit(_binds(qs, 2))
+        return ok, server.snapshot()
+
+    ok, snap = asyncio.run(scenario())
+    assert np.asarray(ok.ids).shape == (4,)
+    assert snap["shed_deadline"] == 1
+    assert snap["admission"]["admitted"] == 3     # poison admitted-then-shot
+    assert snap["in_flight"] == 0
+
+
+def test_query_server_lifecycle_guards(env):
+    _cat, stmt, qs = env
+
+    async def scenario():
+        server = QueryServer(stmt, _serve_config(watermark=4))
+        with pytest.raises(RuntimeError, match="not running"):
+            await server.submit(_binds(qs, 0))
+        async with server:
+            with pytest.raises(RuntimeError, match="already started"):
+                await server.start()
+        await server.stop()                 # second stop is a no-op
+
+    asyncio.run(scenario())

@@ -204,3 +204,120 @@ def test_simulation_serves_all_with_sane_timelines(env):
     assert all(1 <= r.batch_size <= 4 for r in records)
     stats = latency_stats(records)
     assert stats["p50_ms"] <= stats["p95_ms"]
+
+
+# ---------------------------------------------------------------------------
+# deadlines, priorities, fault containment (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def test_flush_empty_and_submit_after_flush(env):
+    cat, q = env
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=4, max_wait_ms=0.0))
+    assert sched.flush() == []             # empty flush is a no-op
+    assert sched.counters["batches"] == 0
+    reqs = _requests(cat, 3)
+    rids = [sched.submit(**r) for r in reqs]
+    assert sorted(sched.flush()) == sorted(rids)
+    # the scheduler is reusable after a flush: fresh rids, fresh results
+    rid2 = sched.submit(**reqs[0])
+    assert rid2 > max(rids)
+    assert sched.flush() == [rid2]
+    again = jax.tree.map(np.asarray, sched.result(rid2))
+    direct = jax.tree.map(np.asarray, q.execute_bucketed(
+        binds_list=[{k: np.asarray(v) for k, v in reqs[0].items()}]))
+    assert np.array_equal(again["ids"], direct["ids"][0])
+
+
+def test_all_expired_batch_never_executes(env):
+    from repro.serving.resilience import DeadlineExceededError
+    cat, q = env
+    clock = FakeClock()
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=4, max_wait_ms=0.0),
+                           clock=clock)
+    reqs = _requests(cat, 3)
+    rids = [sched.submit_request(dict(r), deadline_ms=5.0) for r in reqs]
+    clock.t = 0.010                        # everyone is 5ms past deadline
+    done = sched.flush()
+    assert sorted(done) == sorted(rids)
+    assert sched.counters["batches"] == 0  # nothing reached the executor
+    assert sched.counters["shed_deadline"] == 3
+    for rid in rids:
+        with pytest.raises(DeadlineExceededError):
+            sched.result(rid)
+
+
+def test_deadline_tie_still_serves(env):
+    """Shedding is strict (now > deadline): a drain at exactly the deadline
+    serves the request instead of dropping it."""
+    cat, q = env
+    clock = FakeClock()
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=4, max_wait_ms=50.0),
+                           clock=clock)
+    (r0,) = _requests(cat, 1)
+    rid = sched.submit_request(dict(r0), deadline_ms=10.0)
+    clock.t = 0.004
+    assert not sched.due()                 # before window AND deadline
+    clock.t = 0.010                        # exactly the deadline
+    assert sched.due()                     # tightest-deadline drain rule
+    assert sched.poll() == [rid]
+    out = sched.result(rid)                # served, not shed
+    assert np.asarray(out["ids"]).shape == (4,)
+
+
+def test_tightest_deadline_preempts_wait_window(env):
+    cat, q = env
+    clock = FakeClock()
+    sched = BatchScheduler(
+        q, SchedulerConfig(max_batch=8, max_wait_ms=100.0,
+                           deadline_margin_ms=2.0), clock=clock)
+    reqs = _requests(cat, 2)
+    sched.submit_request(dict(reqs[0]))                     # no deadline
+    sched.submit_request(dict(reqs[1]), deadline_ms=10.0)
+    clock.t = 0.007
+    assert not sched.due()                 # 10 - 2 margin = 8ms, not yet
+    clock.t = 0.008
+    assert sched.due()                     # batch must not idle past it
+    assert len(sched.poll()) == 2
+
+
+def test_priority_orders_drain(env):
+    cat, q = env
+    clock = FakeClock()
+    sched = BatchScheduler(q, SchedulerConfig(max_batch=2, max_wait_ms=0.0),
+                           clock=clock)
+    reqs = _requests(cat, 3)
+    r_low1 = sched.submit_request(dict(reqs[0]), priority=0)
+    r_low2 = sched.submit_request(dict(reqs[1]), priority=0)
+    r_high = sched.submit_request(dict(reqs[2]), priority=5)
+    first = sched.poll()
+    assert r_high in first and r_low1 in first   # prio, then arrival order
+    assert sched.pending() == 1
+    assert sched.flush() == [r_low2]
+
+
+def test_execution_failure_is_contained_per_batch(env):
+    cat, q = env
+
+    class Flaky(BatchScheduler):
+        fail_next = False
+
+        def execute(self, binds_list):
+            if self.fail_next:
+                self.fail_next = False
+                raise RuntimeError("injected batch failure")
+            return super().execute(binds_list)
+
+    sched = Flaky(q, SchedulerConfig(max_batch=4, max_wait_ms=0.0))
+    reqs = _requests(cat, 4)
+    bad = [sched.submit(**r) for r in reqs[:2]]
+    sched.fail_next = True
+    assert sorted(sched.flush()) == sorted(bad)
+    for rid in bad:
+        with pytest.raises(RuntimeError, match="injected batch failure"):
+            sched.result(rid)
+    assert sched.counters["failed"] == 2
+    # the scheduler keeps serving after the contained failure
+    good = [sched.submit(**r) for r in reqs[2:]]
+    sched.flush()
+    for rid in good:
+        assert np.asarray(sched.result(rid)["ids"]).shape == (4,)

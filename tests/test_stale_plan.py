@@ -1,0 +1,185 @@
+"""Catalog-version plan invalidation + plan-cache LRU (DESIGN.md §11).
+
+The PR-4/PR-5 stale-plan bug: compiled plans close over catalog state
+(Table objects in predicate builders, the build-time index-presence
+branch), so re-registering a table or index under a cached plan silently
+served results from the *old* data.  The fix under test:
+
+* every ``Catalog`` registration bumps a monotonic version clock;
+* ``CompiledQuery.ensure_fresh`` checks the snapshot at execute time —
+  plain index replacement **re-binds in place with zero retraces** (index
+  arrays ride the executor's arrays argument), while structural drift
+  (table re-registered, index presence flipped) raises
+  :class:`~repro.core.StalePlanError`;
+* session-API ``Statement``s recover transparently (re-prepare through the
+  cache); legacy ``CompiledQuery`` surfaces raise loudly;
+* the plan cache is LRU-bounded: evicted entries are marked, and
+  Statements still holding one re-prepare on next execute (releasing the
+  dead executables), asserted via ``trace_counts``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExecutionHints, connect
+from repro.core import Metric, StalePlanError, compile_query
+from repro.data import make_laion_catalog
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+
+SQL = ("SELECT sample_id FROM products WHERE price < ${p} "
+       "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+
+
+def _env(seed=0, with_index=True):
+    cat = make_laion_catalog(n_rows=600, n_queries=4, dim=16, n_modes=8,
+                             seed=seed)
+    idx_a = build_ivf(jax.random.key(0), cat.table("laion")["vec"],
+                      nlist=16, metric=Metric.INNER_PRODUCT, iters=2)
+    idx_b = build_ivf(jax.random.key(1), cat.table("laion")["vec"],
+                      nlist=16, metric=Metric.INNER_PRODUCT, iters=3)
+    if with_index:
+        cat.register_index("products", "embedding", idx_a)
+    db = connect(cat, engine="chase",
+                 probe=ProbeConfig(max_probes=16, probe_batch=2,
+                                   termination="counter"))
+    qv = np.asarray(cat.table("queries")["embedding"])[0].astype(np.float32)
+    binds = {"qv": qv, "p": np.float32(1e9)}
+    return cat, db, binds, (idx_a, idx_b)
+
+
+def test_catalog_version_clock_is_monotonic():
+    cat, _db, _binds, (idx_a, idx_b) = _env()
+    key = ("index", "products", "embedding")
+    v0 = cat.version(key)
+    assert v0 > 0                           # registration bumped it
+    cat.register_index("products", "embedding", idx_b)
+    v1 = cat.version(key)
+    cat.register_index("products", "embedding", idx_a)
+    v2 = cat.version(key)
+    assert v0 < v1 < v2
+    assert cat.version(("table", "nonexistent")) == 0
+
+
+def test_index_replacement_rebinds_in_place_without_retrace():
+    cat, db, binds, (idx_a, idx_b) = _env()
+    stmt = db.prepare(SQL)
+    before = np.asarray(stmt.execute(binds).ids)
+    traces = dict(stmt.executor.trace_counts)
+    # a background rebuild lands: same shapes, different clustering
+    cat.register_index("products", "embedding", idx_b)
+    after = np.asarray(stmt.execute(binds).ids)
+    # the re-bound plan serves the NEW index... with ZERO new traces
+    fresh = np.asarray(connect(cat, engine="chase",
+                               probe=ProbeConfig(max_probes=16,
+                                                 probe_batch=2,
+                                                 termination="counter"))
+                       .prepare(SQL).execute(binds).ids)
+    np.testing.assert_array_equal(after, fresh)
+    assert dict(stmt.executor.trace_counts) == traces
+    assert stmt.compiled.rebinds == 1
+    # idempotent: no version change, no re-bind
+    stmt.execute(binds)
+    assert stmt.compiled.rebinds == 1
+
+
+def test_stale_hit_is_recompiled_through_the_cache():
+    cat, db, binds, (idx_a, idx_b) = _env()
+    db.prepare(SQL)
+    cat.register_index("products", "embedding", idx_b)
+    stmt = db.prepare(SQL)                  # hit path must version-check
+    got = np.asarray(stmt.execute(binds).ids)
+    fresh = np.asarray(connect(cat, engine="chase",
+                               probe=ProbeConfig(max_probes=16,
+                                                 probe_batch=2,
+                                                 termination="counter"))
+                       .prepare(SQL).execute(binds).ids)
+    np.testing.assert_array_equal(got, fresh)
+
+
+def test_table_reregistration_raises_stale_plan_on_legacy_surface():
+    cat, db, binds, _ = _env()
+    q = compile_query(SQL, cat, db.options)
+    q(**binds)
+    # table swap: builders closed over the OLD Table's predicate columns
+    cat.register("products", cat.table("laion"))
+    with pytest.raises(StalePlanError, match="products"):
+        q(**binds)
+
+
+def test_index_presence_flip_raises_stale_plan():
+    cat, db, binds, (idx_a, _idx_b) = _env(with_index=False)
+    q = compile_query(SQL, cat, db.options)
+    q(**binds)                              # compiled on the flat path
+    cat.register_index("products", "embedding", idx_a)
+    with pytest.raises(StalePlanError):     # arrays set changed shape
+        q(**binds)
+
+
+def test_statement_recovers_transparently_from_structural_staleness():
+    cat, db, binds, _ = _env()
+    stmt = db.prepare(SQL)
+    before = np.asarray(stmt.execute(binds).ids)
+    misses0 = db.cache_info().misses
+    cat.register("products", cat.table("laion"))
+    after = stmt.execute(binds)             # re-prepares, does not raise
+    assert db.cache_info().misses == misses0 + 1
+    assert np.asarray(after.ids).shape == before.shape
+
+
+# ---------------------------------------------------------------------------
+# plan-cache LRU bound
+# ---------------------------------------------------------------------------
+
+def test_lru_bound_evicts_and_statements_reprepare():
+    cat, db0, binds, _ = _env()
+    db = connect(cat, engine="chase", max_cached_plans=2,
+                 probe=ProbeConfig(max_probes=16, probe_batch=2,
+                                   termination="counter"))
+    sqls = [SQL.replace("LIMIT 4", f"LIMIT {k}") for k in (2, 4, 8)]
+    stmts = [db.prepare(s) for s in sqls]
+    info = db.cache_info()
+    assert info.entries == 2 and info.evictions == 1
+    assert info.max_entries == 2
+    assert stmts[0]._entry.evicted          # oldest fell off
+    old_entry = stmts[0]._entry
+    out = stmts[0].execute([binds])         # transparent re-prepare
+    assert np.asarray(out.ids).shape == (1, 2)
+    assert stmts[0]._entry is not old_entry
+    assert not stmts[0]._entry.evicted
+    # the re-prepared executor is fresh: exactly one trace for this bucket
+    assert dict(stmts[0].executor.trace_counts) == {1: 1}
+    # ...and that re-prepare itself evicted the next-oldest entry
+    assert db.cache_info().evictions == 2
+
+
+def test_lru_hit_refreshes_recency():
+    cat, _db0, binds, _ = _env()
+    db = connect(cat, engine="chase", max_cached_plans=2,
+                 probe=ProbeConfig(max_probes=16, probe_batch=2,
+                                   termination="counter"))
+    sqls = [SQL.replace("LIMIT 4", f"LIMIT {k}") for k in (2, 4, 8)]
+    s0 = db.prepare(sqls[0])
+    db.prepare(sqls[1])
+    db.prepare(sqls[0])                     # touch: s0 becomes most-recent
+    db.prepare(sqls[2])                     # evicts sqls[1], not sqls[0]
+    assert not s0._entry.evicted
+    assert db.prepare(sqls[0]).cache_hit
+
+
+def test_unbounded_cache_never_evicts():
+    cat, _db0, _binds, _ = _env()
+    db = connect(cat, engine="chase", max_cached_plans=None,
+                 probe=ProbeConfig(max_probes=16, probe_batch=2,
+                                   termination="counter"))
+    for k in (2, 3, 4, 5, 6):
+        db.prepare(SQL.replace("LIMIT 4", f"LIMIT {k}"))
+    info = db.cache_info()
+    assert info.entries == 5 and info.evictions == 0
+    assert info.max_entries is None
+
+
+def test_connect_rejects_bad_bound():
+    cat, _db0, _binds, _ = _env()
+    with pytest.raises(ValueError, match="max_cached_plans"):
+        connect(cat, max_cached_plans=0)
