@@ -29,6 +29,15 @@ phases per seed:
   :class:`~repro.serving.resilience.BackpressureError` carrying a positive
   ``retry_after_ms`` (never a timeout), and admission counters add up.
 
+* **Live-corpus crash phase** (DESIGN.md §12) — a scripted mutation
+  sequence on a :class:`~repro.data.mutations.LiveCorpus` is killed at
+  every WAL / snapshot / compaction crash site
+  (:data:`repro.serving.faults.CRASH_SITES`), then recovered from disk
+  alone into a fresh catalog.  Asserts the recovered state tree is
+  bit-identical to an unfailed replay at the recovered LSN — inserts and
+  deletes either committed entirely or vanished entirely, at every kill
+  point.
+
 Standalone:  PYTHONPATH=src python -m benchmarks.chaos_smoke [--seeds N]
 """
 from __future__ import annotations
@@ -251,6 +260,99 @@ async def _run_async(seed: int) -> dict:
     return {**counts, "snapshot": snap}
 
 
+def _run_live_recovery(seed: int) -> dict:
+    """Kill a scripted mutation sequence at every crash site; recover from
+    disk into a fresh catalog and compare bitwise against an unfailed
+    replay at the same LSN (the compact twin of tests/test_live_chaos.py)."""
+    import copy
+    import shutil
+    import tempfile
+
+    import jax.numpy as jnp
+
+    from repro.core.schema import (Catalog, Metric, Schema, Table,
+                                   float_col, int_col, vector_col)
+    from repro.data.mutations import attach_live, recover
+    from repro.serving.faults import (CRASH_SITES, FaultInjector, FaultSpec,
+                                      InjectedCrashError)
+
+    dim, n0 = 8, 48
+
+    def mk_catalog():
+        rng = np.random.default_rng(seed)
+        vecs = rng.standard_normal((n0, dim)).astype(np.float32)
+        vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+        schema = Schema({"sample_id": int_col(jnp.int64),
+                         "vec": vector_col(dim, Metric.L2)})
+        cat = Catalog()
+        cat.register("items", Table(schema, {
+            "sample_id": jnp.arange(n0, dtype=jnp.int64),
+            "vec": jnp.asarray(vecs)}))
+        return cat
+
+    rng = np.random.default_rng([seed, 29])
+
+    def v(n):
+        x = rng.standard_normal((n, dim)).astype(np.float32)
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+    fresh = [v(5), v(3), v(2)]
+    seq = [lambda l: l.insert(np.arange(100, 105), fresh[0]),
+           lambda l: l.delete([3, 102]),
+           lambda l: l.snapshot(),
+           lambda l: l.insert(np.arange(200, 203), fresh[1]),
+           lambda l: l.compact(),
+           lambda l: l.insert(np.arange(300, 302), fresh[2]),
+           lambda l: l.delete([200, 10]),
+           lambda l: l.compact()]
+
+    def attach(cat, path, faults=None):
+        return attach_live(cat, "items", "vec", path, delta_cap=16,
+                           seed=0, iters=3, faults=faults)
+
+    def tree_equal(a, b, ctx):
+        assert a.keys() == b.keys(), (ctx, sorted(a), sorted(b))
+        for key in a:
+            if isinstance(a[key], dict):
+                tree_equal(a[key], b[key], f"{ctx}.{key}")
+            else:
+                np.testing.assert_array_equal(
+                    np.asarray(a[key]), np.asarray(b[key]),
+                    err_msg=f"{ctx} leaf {key}")
+
+    tmp = tempfile.mkdtemp(prefix="chaos_live_")
+    recovered = 0
+    try:
+        # unfailed replay: state tree after every op, keyed by the LSN it
+        # left the corpus at (identically-built catalogs mint identical
+        # LSNs, so the durable frontier lines up bitwise)
+        replay = attach(mk_catalog(), f"{tmp}/replay")
+        states = {replay.lsn: copy.deepcopy(replay._state_tree())}
+        for step in seq:
+            step(replay)
+            states[replay.lsn] = copy.deepcopy(replay._state_tree())
+
+        for site in CRASH_SITES:
+            faults = FaultInjector(FaultSpec(seed=seed, crash_site=site,
+                                             crash_at=1))
+            path = f"{tmp}/{site.replace('.', '_')}"
+            live = attach(mk_catalog(), path, faults=faults)
+            try:
+                for step in seq:
+                    step(live)
+            except InjectedCrashError:
+                pass
+            else:
+                raise AssertionError(f"crash site {site} never fired")
+            rec = recover(mk_catalog(), "items", "vec", path)
+            assert rec.lsn in states, (site, rec.lsn, sorted(states))
+            tree_equal(rec._state_tree(), states[rec.lsn], site)
+            recovered += 1
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return {"sites": recovered}
+
+
 def run_chaos(n_seeds: int = 3) -> None:
     from repro.serving import FaultSpec
 
@@ -266,7 +368,8 @@ def run_chaos(n_seeds: int = 3) -> None:
         out0, snap0, _ = _run_deterministic(seed, spec=FaultSpec(seed=seed))
         assert all(v in ("ok", "deadline") for v in out0.values())
         assert snap0["faults"] == {"latency_spikes": 0, "kernel_errors": 0,
-                                   "poisoned_binds": 0, "catalog_bumps": 0}
+                                   "poisoned_binds": 0, "catalog_bumps": 0,
+                                   "crashes": 0}
         kinds = {k: sum(1 for v in out1.values() if v == k)
                  for k in ("ok", "deadline", "kernel", "poisoned")}
         print(f"[chaos] seed={seed} sync outcomes={kinds} "
@@ -276,8 +379,11 @@ def run_chaos(n_seeds: int = 3) -> None:
         snap = counts.pop("snapshot")
         print(f"[chaos] seed={seed} async outcomes={counts} "
               f"faults={snap.get('faults')} OK", flush=True)
+        rec = _run_live_recovery(seed)
+        print(f"[chaos] seed={seed} live recovery sites={rec['sites']} "
+              f"bit-identical OK", flush=True)
     print(f"[chaos] {n_seeds} seeds passed (no hangs, no stale results, "
-          f"counters exact)", flush=True)
+          f"counters exact, crash recovery bit-identical)", flush=True)
 
 
 def main(argv=None) -> int:

@@ -27,6 +27,16 @@ Rows gated:
     the sharded lowering at one shard IS the flat path plus a no-op merge,
     so its QPS is gate-stable; multi-shard rows measure fake-CPU-device
     collective overhead and stay tracked-not-gated.
+  * BENCH_live.json:  zero_delta rows (key: batch, qps) — live-corpus
+    scans with an empty delta segment are the flat path plus a shared
+    validity mask and a runtime-skipped merge.  Two gates: fresh-vs-
+    committed QPS like every other row, AND live-vs-frozen-twin overhead
+    within one run (the q12 report carries a frozen ``frozen_qps`` twin
+    measured back-to-back, so the <20% zero-delta regression bound never
+    rides cross-run machine noise).  ``batch: 1`` is tracked-not-gated:
+    live single queries reuse the batch lowering at Q=1
+    (``compiler._single_via_batch``) and carry its documented per-call
+    overhead.
 
 Exit codes: 0 pass/skip (no committed baseline, or git unavailable),
 1 regression.  Tolerance: BENCH_GATE_TOL env var (default 0.20 = 20%).
@@ -166,6 +176,31 @@ def main() -> int:
 
         checked += _gate_rows("dist.shards1", dist_rows(base),
                               dist_rows(fresh), "batch", "qps", failures)
+
+    base = _committed("BENCH_live.json")
+    fresh = _fresh("BENCH_live.json")
+    if base and fresh and _same_config("BENCH_live.json", base, fresh,
+                                       ("flat_rows", "dim", "k",
+                                        "delta_cap", "cap_main")):
+        # batched rows only; b1 is tracked-not-gated (see module docstring)
+        def live_rows(report: dict) -> list:
+            return [e for e in report.get("zero_delta", [])
+                    if e.get("batch", 0) >= 8]
+
+        checked += _gate_rows("live.zero_delta", live_rows(base),
+                              live_rows(fresh), "batch", "qps", failures)
+    # live-vs-frozen twin bound, within one run (fresh if present)
+    for e in ((fresh or base) or {}).get("zero_delta", []):
+        if e.get("batch", 0) < 8 or "frozen_qps" not in e:
+            continue
+        checked += 1
+        floor = (1.0 - TOL) * e["frozen_qps"]
+        if e["qps"] < floor:
+            failures.append(
+                f"live.zero_delta[batch={e['batch']}].qps: live "
+                f"{e['qps']:.1f} < {floor:.1f} "
+                f"(same-run frozen twin {e['frozen_qps']:.1f}, "
+                f"tol {TOL:.0%})")
 
     if checked == 0:
         print("bench_gate: no committed baselines to compare against — skip")

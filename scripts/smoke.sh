@@ -2,17 +2,19 @@
 # CI smoke: the tier-1 suite (fast tests only — `slow`-marked subprocess
 # integration tests are deselected by pytest.ini) plus the quick benchmark
 # sweep (q1 latency/recall, q7 batched QPS, q8 scheduler smoke, q9 plan
-# cache, q10 sharded scan, q11 overload goodput, q34 batch-native joins,
-# t5 counters) on the tiny catalog — q34 exercises the join families
+# cache, q10 sharded scan, q11 overload goodput, q12 live-corpus
+# freshness, q34 batch-native joins, t5 counters) on the tiny catalog —
+# q34 exercises the join families
 # end-to-end on both lowerings, q8 the dynamic batch scheduler (Poisson
 # policies + effort-bucketed IVF), q10 the multi-device sharded lowering
 # (fake CPU devices in a child process; asserts shards=1 bit-parity), q11
 # graceful degradation vs naive queueing under overload — then the seeded
 # chaos smoke of the resilient serving tier, the benchmark regression gate
 # (scripts/bench_gate.py: fresh flat-path QPS must stay within 20% of the
-# committed BENCH_* baselines) and the docs lint (scripts/docs_check.py:
-# public-symbol docstrings in api/dist/core/serving + launch/serve.py,
-# DESIGN.md §-reference validity).
+# committed BENCH_* baselines, and live zero-delta QPS within 20% of its
+# same-run frozen twin) and the docs lint (scripts/docs_check.py:
+# public-symbol docstrings in api/dist/core/serving/data/index +
+# launch/serve.py, DESIGN.md §-reference validity).
 #
 # Finishes with examples/quickstart.py --smoke so the public session API
 # (connect/prepare/execute, plan cache, explain) is exercised end-to-end.
@@ -28,9 +30,10 @@ if [[ "${SMOKE_SLOW:-0}" == "1" ]]; then
     python -m pytest -x -q -m slow
 fi
 python -m benchmarks.run --quick
-# seeded chaos smoke of the resilient serving tier (DESIGN.md §11): three
-# seeds through every fault class — asserts no hangs, no stale results,
-# exact counters, and explicit backpressure (never a timeout)
+# seeded chaos smoke (DESIGN.md §11–12): three seeds through every fault
+# class — no hangs, no stale results, exact counters, explicit
+# backpressure — plus live-corpus crash recovery at every WAL/snapshot/
+# compaction kill point, recovered bit-identical to an unfailed replay
 python -m benchmarks.run --chaos
 python scripts/bench_gate.py
 python scripts/docs_check.py

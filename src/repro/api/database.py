@@ -35,7 +35,7 @@ import numpy as np
 
 from ..core.compiler import (CompiledQuery, StalePlanError, compile_plan,
                              fingerprint_digest, plan_fingerprint,
-                             _stacked_qn)
+                             _scan_of, _stacked_qn)
 from ..core.expr import Param
 from ..core.physical import EngineOptions
 from ..core.schema import Catalog
@@ -200,6 +200,61 @@ class Database:
         """Hits / misses / live entries / evictions of the plan cache."""
         return CacheInfo(self._hits, self._misses, len(self._cache),
                          self._evictions, self.max_cached_plans)
+
+    # -- live corpus mutations (DESIGN.md §12) ------------------------------
+
+    def attach_live(self, table: str, column: str, path, **kw):
+        """Attach a :class:`~repro.data.mutations.LiveCorpus` to a (table,
+        vector column) pair, making ``db.insert`` / ``db.delete`` available
+        and every subsequently prepared plan on the pair delta-aware.
+        Delegates to :func:`repro.data.mutations.attach_live` (same kwargs:
+        ``delta_cap``, ``cap_main``, ``nlist``, ``seed``, ``ids``, ...)."""
+        from ..data.mutations import attach_live
+        return attach_live(self.catalog, table, column, path, **kw)
+
+    def _live_handle(self, table: str, column: str | None):
+        """Resolve the LiveCorpus for a mutation call (typed error when the
+        pair has none attached, or the column is ambiguous)."""
+        from ..serving.resilience import MutationError
+        if column is None:
+            cols = self.catalog.live_columns(table)
+            if len(cols) != 1:
+                raise MutationError(
+                    f"table {table!r} has {len(cols)} live vector columns "
+                    f"({sorted(cols)}); pass column= explicitly" if cols else
+                    f"table {table!r} has no live corpus attached; call "
+                    f"db.attach_live(table, column, path) first")
+            column = cols[0]
+        live = self.catalog.live_for(table, column)
+        if live is None:
+            raise MutationError(
+                f"no live corpus attached to ({table!r}, {column!r}); call "
+                f"db.attach_live(table, column, path) first")
+        return live
+
+    def insert(self, table: str, ids, vectors, columns=None, *,
+               column: str | None = None) -> int:
+        """Insert rows into a live corpus — visible to every prepared plan
+        on its next execute with zero retraces.  Returns the mutation's LSN.
+        ``column`` may be omitted when the table has exactly one live vector
+        column."""
+        return self._live_handle(table, column).insert(ids, vectors, columns)
+
+    def delete(self, table: str, ids, *, column: str | None = None) -> int:
+        """Tombstone rows of a live corpus by user id (visible on next
+        execute, zero retraces).  Returns the mutation's LSN."""
+        return self._live_handle(table, column).delete(ids)
+
+    def compact(self, table: str, *, column: str | None = None) -> int:
+        """Fold a live corpus's deltas + tombstones back into the main
+        segment (re-clustering the IVF index when one is registered) and
+        return the compaction's LSN."""
+        return self._live_handle(table, column).compact()
+
+    def freshness(self, table: str, *, column: str | None = None) -> dict:
+        """The live corpus's freshness counters (delta rows, tombstones,
+        LSNs) — the same dict ``explain()`` reports per statement."""
+        return self._live_handle(table, column).freshness()
 
     # -- internals ----------------------------------------------------------
 
@@ -390,6 +445,9 @@ class Statement:
             c = self.compiled
             ex = c.executor
             dist = c.options.dist
+            # freshness is read WHEN explain() runs (like trace_counts), so
+            # the report reflects mutations that landed after execution
+            live = self._db.catalog.live_for(*_scan_of(c.analysis))
             return ExplainReport(
                 sql=self.sql,
                 engine=c.options.engine,
@@ -404,6 +462,7 @@ class Statement:
                 rewritten_plan=c.rewritten_plan.pretty(),
                 shards=None if dist is None else dist.num_shards,
                 merge_depth=None if dist is None else dist.merge_depth,
+                freshness=None if live is None else live.freshness(),
                 **exec_fields)
 
         return build

@@ -48,6 +48,7 @@ class ExplainReport:
     shards: int | None = None           # corpus shard count (dist plans)
     merge_depth: int | None = None      # hierarchical-merge levels (dist)
     degraded: dict | None = None        # overload level/budget, if degraded
+    freshness: dict | None = None       # live-corpus state, if one attached
 
     def render(self) -> str:
         """Multi-line text form (what ``print(explain())`` shows)."""
@@ -74,6 +75,13 @@ class ExplainReport:
             out.append(f"-- DEGRADED: overload level="
                        f"{self.degraded.get('level')} "
                        f"probe_budget={self.degraded.get('probe_budget')}")
+        if self.freshness is not None:
+            out.append(f"-- live:   delta_rows="
+                       f"{self.freshness.get('delta_rows')} "
+                       f"tombstones={self.freshness.get('tombstones')} "
+                       f"lsn={self.freshness.get('lsn')} "
+                       f"last_compact_lsn="
+                       f"{self.freshness.get('last_compact_lsn')}")
         out += ["-- logical plan:", self.logical_plan,
                 "-- rewritten plan:", self.rewritten_plan]
         return "\n".join(out)

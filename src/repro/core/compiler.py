@@ -56,20 +56,33 @@ class StalePlanError(RuntimeError):
     ``compile_query`` callers must compile fresh."""
 
 
-def _catalog_dep_keys(a: Analysis, options: EngineOptions) -> tuple:
+def _scan_of(a: Analysis) -> tuple[str, str]:
+    """The (table, vector column) pair a plan's corpus scan reads — the
+    pair live-corpus / index / sharded registrations key on."""
+    if a.query_class in (QueryClass.VKNN_SF, QueryClass.DR_SF,
+                         QueryClass.CATEGORY_PARTITION):
+        return a.table, a.vector_column
+    return a.right_table, a.right_vector
+
+
+def _catalog_dep_keys(a: Analysis, catalog: Catalog,
+                      options: EngineOptions) -> tuple:
     """The catalog registration keys a compiled plan captures — what
     :meth:`CompiledQuery.ensure_fresh` watches for version bumps."""
     qc = a.query_class
+    scan = _scan_of(a)
     if qc in (QueryClass.VKNN_SF, QueryClass.DR_SF,
               QueryClass.CATEGORY_PARTITION):
-        keys = [("table", a.table), ("index", a.table, a.vector_column)]
-        scan = (a.table, a.vector_column)
+        keys = [("table", a.table), ("index",) + scan]
     else:
         keys = [("table", a.left_table), ("table", a.right_table),
-                ("index", a.right_table, a.right_vector)]
-        scan = (a.right_table, a.right_vector)
+                ("index",) + scan]
     if options.dist is not None:
         keys.append(("sharded",) + scan)
+    if catalog.live_for(*scan) is not None:
+        # every insert/delete/compact bumps this key: mutations become
+        # visible through the in-place array re-bind, zero retraces
+        keys.append(("live",) + scan)
     return tuple(keys)
 
 
@@ -474,9 +487,10 @@ def _gather_arrays(a: Analysis, catalog: Catalog,
     registered."""
     arrays: dict[str, Any] = {}
     qc = a.query_class
+    scan_table, scan_column = _scan_of(a)
+    live = catalog.live_for(scan_table, scan_column)
     if qc in (QueryClass.VKNN_SF, QueryClass.DR_SF,
               QueryClass.CATEGORY_PARTITION):
-        scan_table, scan_column = a.table, a.vector_column
         tab = catalog.table(a.table)
         arrays["corpus"] = tab[a.vector_column]
         idx = catalog.index_for(a.table, a.vector_column)
@@ -485,7 +499,6 @@ def _gather_arrays(a: Analysis, catalog: Catalog,
         if qc == QueryClass.CATEGORY_PARTITION:
             arrays["categories"] = tab[a.category_column.name]
     else:
-        scan_table, scan_column = a.right_table, a.right_vector
         ltab = catalog.table(a.left_table)
         rtab = catalog.table(a.right_table)
         arrays["left"] = ltab[a.left_vector]
@@ -495,14 +508,34 @@ def _gather_arrays(a: Analysis, catalog: Catalog,
             arrays["index"] = idx
         if qc == QueryClass.CATEGORY_JOIN:
             arrays["categories"] = rtab[a.category_column.name]
+    if live is not None:
+        # the live segment arrays REPLACE the frozen corpus: padded main
+        # segment + validity (tombstone bitmap), delta segment, and the
+        # live scalar columns predicates evaluate against (DESIGN.md §12)
+        arrays.update(live.plan_arrays())
+        if "categories" in arrays:
+            arrays["categories"] = arrays["live_cols"][a.category_column.name]
     if options is not None and options.dist is not None:
         from ..dist.sharding import ShardedCorpus, resolve_mesh
-        sharded = catalog.sharded_for(scan_table, scan_column, options.dist)
-        if sharded is None:
-            sharded = ShardedCorpus.build(resolve_mesh(options.dist),
-                                          arrays["corpus"],
-                                          options.dist.axes)
-            catalog.register_sharded(scan_table, scan_column, sharded)
+        if live is not None:
+            # keyed off the live device cache, which compaction clears (the
+            # only mutation that moves main-segment vectors) — catalog
+            # sharded registration would go stale silently
+            key = f"sharded:{options.dist!r}"
+            sharded = live._dev.get(key)
+            if sharded is None:
+                sharded = ShardedCorpus.build(resolve_mesh(options.dist),
+                                              arrays["corpus"],
+                                              options.dist.axes)
+                live._dev[key] = sharded
+        else:
+            sharded = catalog.sharded_for(scan_table, scan_column,
+                                          options.dist)
+            if sharded is None:
+                sharded = ShardedCorpus.build(resolve_mesh(options.dist),
+                                              arrays["corpus"],
+                                              options.dist.axes)
+                catalog.register_sharded(scan_table, scan_column, sharded)
         arrays["dcorpus"] = sharded.corpus
         arrays["drow_ids"] = sharded.row_ids
     return arrays
@@ -585,6 +618,29 @@ def _validate_dist(options: EngineOptions) -> None:
             "tile composition); the perleft loop has no sharded twin")
 
 
+def _validate_live(a: Analysis, catalog: Catalog,
+                   options: EngineOptions) -> None:
+    """Reject option combinations the live-corpus lowering cannot honor.
+
+    The delta merge composes with the exact paths only: the comparison
+    engines (pase / vbase / brute_sort) model *plan-structural*
+    inefficiencies of the frozen lowering, and the perleft join baseline
+    has no delta twin — same restriction (and same reasoning) as the
+    distributed lowering (:func:`_validate_dist`)."""
+    if catalog.live_for(*_scan_of(a)) is None:
+        return
+    if options.engine not in ("chase", "brute"):
+        raise ValueError(
+            f"a live corpus is attached to {'.'.join(_scan_of(a))} and only "
+            f"composes with engine 'chase' or 'brute', not "
+            f"{options.engine!r}")
+    if options.join_lowering != "batch":
+        raise ValueError(
+            "a live corpus requires join_lowering='batch': the delta merge "
+            "rides the query-batched lowering; the perleft loop has no "
+            "live twin")
+
+
 def _single_via_batch(bfn: Callable) -> Callable:
     """Single-query front for distributed plans.
 
@@ -630,12 +686,14 @@ def compile_plan(sql: str, plan: PlanNode, catalog: Catalog,
         raise NotImplementedError(
             "plan did not match a hybrid pattern; use the interpreter engine")
     _validate_dist(options)
+    _validate_live(a, catalog, options)
     rewritten = rewrite(a)
     arrays = _gather_arrays(a, catalog, options)
     batch_builder, batch_native, batch_reason = _batch_lowering(a, options)
-    if options.dist is not None:
-        # one lowering per dist plan: the sharded batched pipeline serves
-        # the single-query path at Q=1 (see _single_via_batch)
+    if options.dist is not None or catalog.live_for(*_scan_of(a)) is not None:
+        # one lowering per dist OR live plan: the batched pipeline (which
+        # carries the delta merge / shard composition) serves the
+        # single-query path at Q=1 (see _single_via_batch)
         bfn = batch_builder(a, catalog, options, Bindings(static_binds))
         fn = _single_via_batch(bfn)
     else:
@@ -651,7 +709,7 @@ def compile_plan(sql: str, plan: PlanNode, catalog: Catalog,
     # snapshot AFTER _gather_arrays: gathering a dist plan may itself
     # register a sharded handle (a version bump this plan must not see as
     # staleness on its first execute)
-    dep_keys = _catalog_dep_keys(a, options)
+    dep_keys = _catalog_dep_keys(a, catalog, options)
     return CompiledQuery(compiled_plan, jax.jit(fn), arrays, jax.jit(bfn),
                          executor, _catalog=catalog, _dep_keys=dep_keys,
                          _bound_versions=catalog.version_snapshot(dep_keys))

@@ -232,7 +232,8 @@ def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
     """Flat range scan over a (M, d) query batch, compacted to ``capacity``.
 
     Dispatch: the query-tiled Pallas kernel (``use_pallas``) or a vmapped
-    exact scan.  ``radius`` is a scalar or (M,); ``row_mask`` None or (M, N);
+    exact scan.  ``radius`` is a scalar or (M,); ``row_mask`` None, shared
+    (N,) (a live validity lane), or per-query (M, N);
     ``qvalid`` None or (M,) bool (size-bucket pad queries register no hits
     and zero counters).  Results are ordered best-first (ascending order
     key).  Returns (ids (M, P), sims, valid, count (M,), per-row stats) with
@@ -250,6 +251,9 @@ def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
         if row_mask is None:
             hit, raw = jax.vmap(lambda q, r: flat.range_mask(q, r, None))(
                 qs, radius)
+        elif row_mask.ndim == 1:
+            hit, raw = jax.vmap(
+                lambda q, r: flat.range_mask(q, r, row_mask))(qs, radius)
         else:
             hit, raw = jax.vmap(flat.range_mask)(qs, radius, row_mask)
         if qvalid is not None:
@@ -405,6 +409,179 @@ def _dist_range_core(opts: EngineOptions, metric: Metric, capacity: int,
 
 
 # ---------------------------------------------------------------------------
+# Live-corpus lowering (DESIGN.md §12) — selected by an attached LiveCorpus
+# ---------------------------------------------------------------------------
+#
+# When catalog.live_for(scan table, scan column) is attached, the batched
+# builders swap two things into the standard pipeline and leave everything
+# else untouched:
+#
+# 1. Masks come from the LIVE arrays: the main-segment validity lane (the
+#    tombstone bitmap) ANDed with the predicate evaluated over the live
+#    scalar columns — the same (Q, N) row-mask layout every kernel and IVF
+#    probe path already threads, so a tombstoned row is inert exactly the
+#    way a pad row is.  The delta segment gets the same treatment at its
+#    own width ((Q, delta_cap)).
+# 2. After the main-segment result (IVF / flat / sharded — unchanged code),
+#    the delta segment is scanned by the flat batched machinery and merged
+#    in as one extra, device-local level of the hierarchical per-query
+#    merge (index/delta.py + dist.collectives.merge_topk_level).  Merged
+#    ids >= cap_main name delta slots (LiveCorpus.user_ids maps back).
+#
+# Live mode composes with the exact engines only (chase / brute — see
+# compiler._validate_live); the single-query path reuses the batched
+# lowering at Q=1 (compiler._single_via_batch), so no single builder needs
+# a live branch.  NOTE on ordering: the delta merge re-sorts each query's
+# buffer best-first, so live IVF range results are best-first even at zero
+# deltas (fresh-attach live plans — the parity reference — share this code
+# and therefore this order; frozen IVF plans keep probe-discovery order).
+
+
+class _ColsTable:
+    """Dict-of-arrays stand-in for :class:`Table` inside ``evaluate()``
+    (expression evaluation only reads ``table[name]``), letting predicates
+    run against the live segment columns without a frozen Table."""
+
+    def __init__(self, cols: dict):
+        self._cols = cols
+
+    def __getitem__(self, name: str):
+        return self._cols[name]
+
+
+def _as_per_query(m, qn: int):
+    """Broadcast a shared 1-D live mask to the (Q, N) layout for consumers
+    without a shared-mask fast path (IVF probes, the sharded core)."""
+    if m is None or m.ndim == 2:
+        return m
+    return jnp.broadcast_to(m[None], (qn,) + m.shape)
+
+
+def _live_scan_masks(pred: Expr | None, arrays, binds, qn: int):
+    """Live (main, delta) row masks for the scan classes (Q1/Q2/Q5).
+
+    With a structured predicate each is per-query 2-D — (Q, cap_main) /
+    (Q, delta_cap) — combining the segment validity lane (tombstones +
+    unoccupied slots) with the predicate evaluated over the live scalar
+    columns.  Without one the validity lanes are returned UNBROADCAST
+    (1-D): the fused kernels take the shared-mask fast path, which keeps
+    the zero-delta live scan at frozen-scan cost (the (Q, N) mask alone
+    costs ~25% on the b64 flat workload)."""
+    mv, dv = arrays["live_main_valid"], arrays["live_delta_valid"]
+    n, dn = mv.shape[0], dv.shape[0]
+    if pred is None:
+        return mv, dv
+
+    def seg(cols, seg_valid, seg_n):
+        m = jax.vmap(lambda b: jnp.broadcast_to(
+            evaluate(pred, _ColsTable(cols), b), (seg_n,)))(binds)
+        return m & seg_valid[None, :]
+
+    return (seg(arrays["live_cols"], mv, n),
+            seg(arrays["live_dcols"], dv, dn))
+
+
+def _live_join_masks(pred: Expr | None, ltab: Table, rtab: Table,
+                     lalias: str | None, ralias: str | None,
+                     arrays, binds, qn: int, nleft: int):
+    """Live (main, delta) masks for the join classes, in the flattened
+    (Q·L, seg) layout of :func:`_flatten_left_batch`.
+
+    The twin of :func:`_join_mask_batch_fn` with right columns read from
+    the live segment arrays instead of the frozen right table (the left
+    side stays frozen — only the scanned column is live)."""
+    mv, dv = arrays["live_main_valid"], arrays["live_delta_valid"]
+    n, dn = mv.shape[0], dv.shape[0]
+    if pred is None:
+        return (jnp.broadcast_to(mv[None], (qn * nleft, n)),
+                jnp.broadcast_to(dv[None], (qn * nleft, dn)))
+    owner = _owner_fn(ltab, rtab, lalias, ralias)
+
+    def seg(cols, seg_valid, seg_n):
+        def per_bind(b):
+            m = _eval_join_pred(pred, owner,
+                                lambda name: ltab[name][:, None],
+                                lambda name: cols[name][None, :], b)
+            return jnp.broadcast_to(m, (nleft, seg_n))
+
+        m = jax.vmap(per_bind)(binds).reshape(qn * nleft, seg_n)
+        return m & seg_valid[None, :]
+
+    return (seg(arrays["live_cols"], mv, n),
+            seg(arrays["live_dcols"], dv, dn))
+
+
+def _merge_delta_topk(opts: EngineOptions, metric: Metric, arrays, qs,
+                      k: int, dmask, qvalid, ids, sims, valid, stats):
+    """Merge the delta-segment top-k into a main-segment (Q, k) result.
+
+    Main candidates go in as merge side A (ties resolve main-first —
+    ``jax.lax.top_k`` stability), so an empty delta leaves the main result
+    bit-identical — which licenses the runtime ``lax.cond`` below: with no
+    live delta row the whole scan+merge is skipped (the merge alone costs
+    ~20% of the b64 flat workload, and zero-delta is the steady state
+    between compactions).  Top-k main results are already best-first, so
+    the skip branch is the identity.  The delta scan adds delta_cap
+    distance evals per valid query to the counters only when it runs (it
+    IS a flat scan of the segment)."""
+    from ..index.delta import delta_topk_batch
+    from ..dist.collectives import merge_topk_level
+    offset = arrays["corpus"].shape[0]
+    has_delta = jnp.any(arrays["live_delta_valid"])
+
+    def merged(main):
+        ids, sims, valid = main
+        # the delta segment is delta_cap rows by construction: the jnp scan
+        # is a trivial (Q, delta_cap) matmul, while a second Pallas launch
+        # per execute costs more than the whole segment (worst in interpret
+        # mode)
+        dkeys, dgids = delta_topk_batch(
+            metric, arrays["live_delta_vec"], qs, k, dmask, qvalid, offset,
+            use_pallas=False)
+        mkeys = jnp.where(valid, order_key(metric, sims), jnp.inf)
+        mgids = jnp.where(valid, ids, -1)
+        return merge_topk_level(metric, mkeys, mgids, dkeys, dgids, k)
+
+    ids, sims, valid = jax.lax.cond(has_delta, merged, lambda main: main,
+                                    (ids, sims, valid))
+    stats = dict(stats)
+    stats["distance_evals"] = stats["distance_evals"] + jnp.where(
+        has_delta,
+        _flat_evals(qvalid, qs.shape[0], arrays["live_delta_vec"].shape[0]),
+        0)
+    return ids, sims, valid, stats
+
+
+def _merge_delta_range(opts: EngineOptions, metric: Metric, arrays, qs,
+                       radius, capacity: int, dmask, qvalid,
+                       ids, sims, valid, count, stats):
+    """Merge the delta-segment range hits into a main-segment result batch.
+
+    The merged buffer is ``min(capacity, main width + delta width)`` wide
+    best-first; ``count`` stays exact past truncation (main count + exact
+    delta hit count).  Counter accounting as in :func:`_merge_delta_topk`,
+    but NO empty-delta runtime skip: the merge is what re-sorts IVF range
+    hits (probe-discovery order) best-first, an ordering the live range
+    classes promise at any delta fill — and none of them is on the gated
+    zero-delta flat workload."""
+    from ..index.delta import delta_range_batch
+    from ..dist.collectives import merge_topk_level
+    offset = arrays["corpus"].shape[0]
+    dkeys, dgids, dcount = delta_range_batch(
+        metric, arrays["live_delta_vec"], qs, radius, dmask, qvalid, offset,
+        int(capacity), use_pallas=False)  # tiny segment: see delta_topk note
+    mkeys = jnp.where(valid, order_key(metric, sims), jnp.inf)
+    mgids = jnp.where(valid, ids, -1)
+    w = min(int(capacity), ids.shape[1] + dkeys.shape[1])
+    ids, sims, valid = merge_topk_level(metric, mkeys, mgids, dkeys, dgids,
+                                        w)
+    stats = dict(stats)
+    stats["distance_evals"] = stats["distance_evals"] + _flat_evals(
+        qvalid, qs.shape[0], arrays["live_delta_vec"].shape[0])
+    return ids, sims, valid, count + dcount.astype(count.dtype), stats
+
+
+# ---------------------------------------------------------------------------
 # Q1 — VKNN-SF
 # ---------------------------------------------------------------------------
 
@@ -543,17 +720,28 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     index = catalog.index_for(a.right_table, a.right_vector)
     cfg = dataclasses.replace(opts.probe, capacity=opts.max_pairs)
+    live = catalog.live_for(a.right_table, a.right_vector) is not None
     sharded = (_dist_range_core(opts, metric, opts.max_pairs,
                                 catalog.table(a.right_table).num_rows,
-                                per_query_mask=a.join_predicate is not None)
+                                per_query_mask=(a.join_predicate is not None
+                                                or live))
                if opts.dist is not None else None)
 
-    def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None):
+    def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None,
+             dmask=None):
         corpus = arrays["corpus"]
         m = qs.shape[0]
         radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
+
+        def out(ids, sims, valid, count, stats):
+            if not live:
+                return ids, sims, valid, count, stats
+            return _merge_delta_range(opts, metric, arrays, qs, radius,
+                                      opts.max_pairs, dmask, qvalid,
+                                      ids, sims, valid, count, stats)
+
         if sharded is not None:
-            return sharded(arrays, qs, radius, rm, qvalid)
+            return out(*sharded(arrays, qs, radius, rm, qvalid))
         if opts.engine in ("chase", "vbase") and index is not None:
             idx = arrays["index"]
             if opts.engine == "chase":
@@ -575,9 +763,10 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
                 # legacy-parity quirk: the per-left Q3 vbase plan never
                 # counted its redundant re-check evals; keep counters
                 # identical across lowerings
-            return ids, sims, valid, count, stats
-        return _flat_range_topk_batch(opts, metric, corpus, qs, radius, rm,
-                                      opts.max_pairs, qvalid=qvalid)
+            return out(ids, sims, valid, count, stats)
+        return out(*_flat_range_topk_batch(opts, metric, corpus, qs, radius,
+                                           rm, opts.max_pairs,
+                                           qvalid=qvalid))
 
     return core
 
@@ -614,18 +803,27 @@ def build_dist_join_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     ltab, rtab = catalog.table(a.left_table), catalog.table(a.right_table)
     mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
                                  a.right_alias)
+    live = catalog.live_for(a.right_table, a.right_vector) is not None
     core = _dist_join_core(a, catalog, opts)
     radius_expr = a.radius
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
-        qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
-                                                mask_b)
+        if live:
+            qn, nleft, qs, _ = _flatten_left_batch(arrays["left"], binds,
+                                                   None)
+            rm, dmask = _live_join_masks(a.join_predicate, ltab, rtab,
+                                         a.left_alias, a.right_alias,
+                                         arrays, binds, qn, nleft)
+        else:
+            qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
+                                                    mask_b)
+            dmask = None
         fq, fb = _flatten_valid_budget(qvalid, probe_budget, qn, nleft)
         radius = jnp.broadcast_to(
             jax.vmap(lambda b: evaluate(radius_expr, rtab, b))(binds), (qn,))
         ids, sims, valid, counts, stats = core(
             arrays, qs, jnp.repeat(radius, nleft), rm, qvalid=fq,
-            probe_budget=fb)
+            probe_budget=fb, dmask=dmask)
         pairs = ids.shape[1]
         shape = (qn, nleft, pairs)
         return {"qid": jnp.broadcast_to(
@@ -715,11 +913,13 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
     metric = _metric_of(catalog, a.right_table, a.right_vector)
     index = catalog.index_for(a.right_table, a.right_vector)
     cfg = opts.probe
+    live = catalog.live_for(a.right_table, a.right_vector) is not None
     sharded = (_dist_topk_core(opts, metric, k,
-                               per_query_mask=a.join_predicate is not None)
+                               per_query_mask=(a.join_predicate is not None
+                                               or live))
                if opts.dist is not None else None)
 
-    def core(arrays, qs, rm, qvalid=None, probe_budget=None):
+    def core(arrays, qs, rm, qvalid=None, probe_budget=None, dmask=None):
         corpus = arrays["corpus"]
         m, n = qs.shape[0], corpus.shape[0]
         if sharded is not None:
@@ -769,6 +969,10 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     sims = jnp.where(valid, sims, 0.0)
             stats = {"probes": jnp.zeros((m,), jnp.int32),
                      "distance_evals": _flat_evals(qvalid, m, n)}
+        if live:
+            ids, sims, valid, stats = _merge_delta_topk(
+                opts, metric, arrays, qs, k, dmask, qvalid,
+                ids, sims, valid, stats)
         return ids, sims, valid, stats
 
     return core
@@ -807,14 +1011,23 @@ def build_knn_join_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     k = _static_int(a.k, binds_static, "K")
     mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
                                  a.right_alias)
+    live = catalog.live_for(a.right_table, a.right_vector) is not None
     core = _knn_join_core(a, catalog, opts, k)
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
-        qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
-                                                mask_b)
+        if live:
+            qn, nleft, qs, _ = _flatten_left_batch(arrays["left"], binds,
+                                                   None)
+            rm, dmask = _live_join_masks(a.join_predicate, ltab, rtab,
+                                         a.left_alias, a.right_alias,
+                                         arrays, binds, qn, nleft)
+        else:
+            qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
+                                                    mask_b)
+            dmask = None
         fq, fb = _flatten_valid_budget(qvalid, probe_budget, qn, nleft)
         ids, sims, valid, stats = core(arrays, qs, rm, qvalid=fq,
-                                       probe_budget=fb)
+                                       probe_budget=fb, dmask=dmask)
         shape = (qn, nleft, k)
         return {"qid": jnp.broadcast_to(
                     jnp.arange(nleft, dtype=jnp.int32)[None, :, None], shape),
@@ -914,31 +1127,38 @@ def _rank_per_category_batch(metric: Metric, ids, keys, valid, cats,
 
 def _category_core(opts: EngineOptions, metric: Metric, index,
                    C: int, k: int, vbase_extra_evals: bool,
-                   n_rows: int = 0, per_query_mask: bool = True):
+                   n_rows: int = 0, per_query_mask: bool = True,
+                   live: bool = False, cat_col: str | None = None):
     """(arrays, qs (M,d), radius, rm (M,N)|None) -> (M, C, K) ranked batch.
 
     Shared by the Q5 bind-batch lowering and the Q6 left-row batch: probe a
     (M, d) query batch (Algorithm 2's record table batched when updateState
     applies), then run the window rank for all M queries at once.
     ``n_rows`` (the scanned table's row count) sizes the sharded range
-    buffer when ``opts.dist`` selects the distributed lowering."""
+    buffer when ``opts.dist`` selects the distributed lowering.  Under
+    ``live``, the delta segment is merged in LOSSLESSLY (main + delta
+    buffer widths) before the window rank, and merged ids >= cap_main read
+    their category from the live delta columns (``cat_col``)."""
     cfg = dataclasses.replace(opts.probe, num_categories=C, k_per_category=k)
     use_update_state = opts.engine == "chase"
     sharded = (_dist_range_core(opts, metric, cfg.capacity, n_rows,
                                 per_query_mask=per_query_mask)
                if opts.dist is not None else None)
 
-    def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None):
+    def core(arrays, qs, radius, rm, qvalid=None, probe_budget=None,
+             dmask=None):
         corpus = arrays["corpus"]
         cats = arrays["categories"]
         m = qs.shape[0]
         radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
         if sharded is not None:
-            ids, sims, valid, count, stats = sharded(arrays, qs, radius, rm,
+            ids, sims, valid, count, stats = sharded(arrays, qs, radius,
+                                                     _as_per_query(rm, m),
                                                      qvalid)
         elif index is not None and opts.engine in ("chase", "vbase",
                                                    "chase_no_updatestate"):
             idx = arrays["index"]
+            rm = _as_per_query(rm, m)
             if use_update_state:
                 ids, sims, valid, count, stats = ivf_range_category_batch(
                     idx, corpus, cats, qs, radius, rm, cfg,
@@ -961,8 +1181,24 @@ def _category_core(opts: EngineOptions, metric: Metric, index,
             ids, sims, valid, count, stats = _flat_range_topk_batch(
                 opts, metric, corpus, qs, radius, rm, cfg.capacity,
                 qvalid=qvalid)
+        if live:
+            # lossless merge width (main + delta buffers): the window rank
+            # below consumes the WHOLE buffer, so truncating here would
+            # drop per-category candidates the frozen plan would keep
+            dcap = arrays["live_delta_vec"].shape[0]
+            ids, sims, valid, count, stats = _merge_delta_range(
+                opts, metric, arrays, qs, radius, ids.shape[1] + dcap,
+                dmask, qvalid, ids, sims, valid, count, stats)
+            n = corpus.shape[0]
+            dcats = arrays["live_dcols"][cat_col]
+            bcats = jnp.where(
+                valid,
+                jnp.where(ids < n, cats[jnp.clip(ids, 0, n - 1)],
+                          dcats[jnp.clip(ids - n, 0, dcap - 1)]),
+                -1)
+        else:
+            bcats = jnp.where(valid, cats[jnp.maximum(ids, 0)], -1)
         keys = jnp.where(valid, order_key(metric, sims), jnp.inf)
-        bcats = jnp.where(valid, cats[jnp.maximum(ids, 0)], -1)
         cids, csims, cvalid = _rank_per_category_batch(
             metric, ids, keys, valid, bcats, C, k)
         return cids, csims, cvalid, stats
@@ -1044,9 +1280,11 @@ def build_category_partition_batch(a: Analysis, catalog: Catalog,
     mask_fn = _row_mask_fn(a.structured_predicate, table)
     qparam = a.query_expr
     index = catalog.index_for(a.table, a.vector_column)
+    live = catalog.live_for(a.table, a.vector_column) is not None
     core = _category_core(opts, metric, index, C, k, vbase_extra_evals=True,
                           n_rows=table.num_rows,
-                          per_query_mask=mask_fn is not None)
+                          per_query_mask=mask_fn is not None or live,
+                          live=live, cat_col=cat_col)
     radius_expr = a.radius
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
@@ -1054,10 +1292,16 @@ def build_category_partition_batch(a: Analysis, catalog: Catalog,
         qn = qs.shape[0]
         radius = jnp.broadcast_to(
             jax.vmap(lambda b: evaluate(radius_expr, table, b))(binds), (qn,))
-        row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
+        dmask = None
+        if live:
+            row_mask, dmask = _live_scan_masks(a.structured_predicate,
+                                               arrays, binds, qn)
+        else:
+            row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
         cids, csims, cvalid, stats = core(arrays, qs, radius, row_mask,
                                           qvalid=qvalid,
-                                          probe_budget=probe_budget)
+                                          probe_budget=probe_budget,
+                                          dmask=dmask)
         return {"ids": cids, "sim": csims, "valid": cvalid,
                 "category": jnp.broadcast_to(
                     jnp.arange(C, dtype=jnp.int32)[None, :, None],
@@ -1119,20 +1363,31 @@ def build_category_join_batch(a: Analysis, catalog: Catalog,
     mask_b = _join_mask_batch_fn(a.join_predicate, ltab, rtab, a.left_alias,
                                  a.right_alias)
     index = catalog.index_for(a.right_table, a.right_vector)
+    live = catalog.live_for(a.right_table, a.right_vector) is not None
     core = _category_core(opts, metric, index, C, k, vbase_extra_evals=False,
                           n_rows=rtab.num_rows,
-                          per_query_mask=a.join_predicate is not None)
+                          per_query_mask=(a.join_predicate is not None
+                                          or live),
+                          live=live, cat_col=cat_col)
     radius_expr = a.radius
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
-        qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
-                                                mask_b)
+        if live:
+            qn, nleft, qs, _ = _flatten_left_batch(arrays["left"], binds,
+                                                   None)
+            rm, dmask = _live_join_masks(a.join_predicate, ltab, rtab,
+                                         a.left_alias, a.right_alias,
+                                         arrays, binds, qn, nleft)
+        else:
+            qn, nleft, qs, rm = _flatten_left_batch(arrays["left"], binds,
+                                                    mask_b)
+            dmask = None
         fq, fb = _flatten_valid_budget(qvalid, probe_budget, qn, nleft)
         radius = jnp.broadcast_to(
             jax.vmap(lambda b: evaluate(radius_expr, rtab, b))(binds), (qn,))
         cids, csims, cvalid, stats = core(
             arrays, qs, jnp.repeat(radius, nleft), rm, qvalid=fq,
-            probe_budget=fb)
+            probe_budget=fb, dmask=dmask)
         shape = (qn, nleft, C, k)
         return {"qid": jnp.broadcast_to(
                     jnp.arange(nleft, dtype=jnp.int32)[None, :, None, None],
@@ -1239,8 +1494,9 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     assert isinstance(qparam, Param), "VKNN-SF query must be a parameter"
     index = catalog.index_for(a.table, a.vector_column)
     cfg = opts.probe
+    live = catalog.live_for(a.table, a.vector_column) is not None
     dist = (_dist_topk_core(opts, metric, k,
-                            per_query_mask=mask_fn is not None)
+                            per_query_mask=mask_fn is not None or live)
             if opts.dist is not None else None)
 
     def fn(arrays, binds, qvalid=None, probe_budget=None):
@@ -1248,18 +1504,25 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
         n = corpus.shape[0]
         qs = jnp.asarray(binds[qparam.name])                     # (Q, D)
         qn = qs.shape[0]
-        row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
+        dmask = None
+        if live:
+            row_mask, dmask = _live_scan_masks(a.structured_predicate,
+                                               arrays, binds, qn)
+        else:
+            row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
         if dist is not None:
-            ids, sims, valid, stats = dist(arrays, qs, row_mask, qvalid)
+            ids, sims, valid, stats = dist(arrays, qs,
+                                           _as_per_query(row_mask, qn),
+                                           qvalid)
         elif opts.engine == "chase" and index is not None:
             idx: IVFIndex = arrays["index"]
             ids, sims, valid, stats = ivf_topk_batch(
-                idx, corpus, qs, k, row_mask, cfg,
+                idx, corpus, qs, k, _as_per_query(row_mask, qn), cfg,
                 probe_budget=probe_budget, qvalid=qvalid)
         elif opts.engine == "vbase" and index is not None:
             idx = arrays["index"]
             ids, _sims, valid, stats = ivf_topk_batch(
-                idx, corpus, qs, k, row_mask, cfg,
+                idx, corpus, qs, k, _as_per_query(row_mask, qn), cfg,
                 probe_budget=probe_budget, qvalid=qvalid)
             ids, sims, valid = jax.vmap(
                 lambda q, i, v: _resort_redundant(metric, corpus, q, i, v, k)
@@ -1291,8 +1554,8 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     lambda i, s, v: post(i, s, v, None))(ids_o, sims_o,
                                                          valid_o)
             else:
-                ids, sims, valid = jax.vmap(post)(ids_o, sims_o, valid_o,
-                                                  row_mask)
+                ids, sims, valid = jax.vmap(post)(
+                    ids_o, sims_o, valid_o, _as_per_query(row_mask, qn))
         else:  # brute (LingoDB-V analogue) or missing index
             if opts.use_pallas:
                 from ..kernels.ops import fused_scan_topk_batch
@@ -1304,6 +1567,9 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 if row_mask is None:
                     ids, sims, valid = jax.vmap(
                         lambda q: flat.topk(q, k, None))(qs)
+                elif row_mask.ndim == 1:            # shared live validity lane
+                    ids, sims, valid = jax.vmap(
+                        lambda q: flat.topk(q, k, row_mask))(qs)
                 else:
                     ids, sims, valid = jax.vmap(
                         lambda q, rm: flat.topk(q, k, rm))(qs, row_mask)
@@ -1313,6 +1579,10 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     sims = jnp.where(valid, sims, 0.0)
             stats = {"probes": jnp.zeros((qn,), jnp.int32),
                      "distance_evals": _flat_evals(qvalid, qn, n)}
+        if live:
+            ids, sims, valid, stats = _merge_delta_topk(
+                opts, metric, arrays, qs, k, dmask, qvalid,
+                ids, sims, valid, stats)
         return {"ids": ids, "sim": sims, "valid": valid, "stats": stats}
 
     return fn
@@ -1328,8 +1598,9 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
     index = catalog.index_for(a.table, a.vector_column)
     cfg = opts.probe
     radius_expr = a.radius
+    live = catalog.live_for(a.table, a.vector_column) is not None
     dist = (_dist_range_core(opts, metric, cfg.capacity, table.num_rows,
-                             per_query_mask=mask_fn is not None)
+                             per_query_mask=mask_fn is not None or live)
             if opts.dist is not None else None)
 
     def radius_of(binds):
@@ -1341,14 +1612,20 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
         qs = jnp.asarray(binds[qparam.name])                      # (Q, D)
         qn = qs.shape[0]
         radius = jnp.broadcast_to(jax.vmap(radius_of)(binds), (qn,))
-        row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
+        dmask = None
+        if live:
+            row_mask, dmask = _live_scan_masks(a.structured_predicate,
+                                               arrays, binds, qn)
+        else:
+            row_mask = jax.vmap(mask_fn)(binds) if mask_fn else None  # (Q, N)
         if dist is not None:
             ids, sims, valid, count, stats = dist(arrays, qs, radius,
-                                                  row_mask, qvalid)
+                                                  _as_per_query(row_mask, qn),
+                                                  qvalid)
         elif opts.engine == "chase" and index is not None:
             idx = arrays["index"]
             ids, sims, valid, count, stats = ivf_range_batch(
-                idx, corpus, qs, radius, row_mask, cfg,
+                idx, corpus, qs, radius, _as_per_query(row_mask, qn), cfg,
                 probe_budget=probe_budget, qvalid=qvalid)
         elif opts.engine == "vbase" and index is not None:
             idx = arrays["index"]
@@ -1369,7 +1646,8 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                     lambda q, i, v, r: post(q, i, v, r, None))(
                         qs, ids, valid, radius)
             else:
-                sims, valid = jax.vmap(post)(qs, ids, valid, radius, row_mask)
+                sims, valid = jax.vmap(post)(qs, ids, valid, radius,
+                                             _as_per_query(row_mask, qn))
             count = jnp.sum(valid, axis=1)
             extra = (cfg.capacity if qvalid is None
                      else jnp.where(qvalid, cfg.capacity, 0))
@@ -1380,6 +1658,10 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
             ids, sims, valid, count, stats = _flat_range_topk_batch(
                 opts, metric, corpus, qs, radius, row_mask, cfg.capacity,
                 qvalid=qvalid)
+        if live:
+            ids, sims, valid, count, stats = _merge_delta_range(
+                opts, metric, arrays, qs, radius, cfg.capacity, dmask,
+                qvalid, ids, sims, valid, count, stats)
         return {"ids": ids, "sim": sims, "valid": valid, "count": count,
                 "stats": stats}
 

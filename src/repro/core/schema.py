@@ -184,6 +184,7 @@ class Catalog:
         self._tables: dict[str, Table] = {}
         self._indexes: dict[tuple[str, str], Any] = {}
         self._sharded: dict[tuple[str, str], Any] = {}
+        self._live: dict[tuple[str, str], Any] = {}
         self._clock = 0
         self._versions: dict[tuple, int] = {}
 
@@ -194,8 +195,9 @@ class Catalog:
     def version(self, key: tuple) -> int:
         """Monotonic version of one registration key.
 
-        Keys are ``("table", name)``, ``("index", table, column)``, or
-        ``("sharded", table, column)``; a key never registered is version 0.
+        Keys are ``("table", name)``, ``("index", table, column)``,
+        ``("sharded", table, column)``, or ``("live", table, column)``; a
+        key never registered is version 0.
         Versions only grow, and no two bumps share a value (one global
         catalog clock), so equality of snapshots implies nothing changed."""
         return self._versions.get(key, 0)
@@ -255,6 +257,45 @@ class Catalog:
         """The ShardedCorpus registered for (table, column) on exactly the
         mesh ``spec`` (a ``DistSpec``) describes, or None."""
         return self._sharded.get((table, column, spec))
+
+    def register_live(self, table: str, column: str, live: Any) -> None:
+        """Attach a :class:`~repro.data.mutations.LiveCorpus` to a (table,
+        vector column) pair (DESIGN.md §12).
+
+        Bumps BOTH ``("live", table, column)`` and ``("table", table)``:
+        attaching changes the corpus array layout (fixed-capacity padded
+        segments replace the frozen column), so plans compiled pre-attach
+        must raise ``StalePlanError`` and re-prepare.  Subsequent
+        insert/delete/compact mutations bump only the live key — live plans
+        carry every segment array from first compile, so mutations re-bind
+        in place with zero retraces."""
+        self._live[(table, column)] = live
+        self._bump(("live", table, column))
+        self._bump(("table", table))
+
+    def bump_live(self, table: str, column: str) -> int:
+        """Advance the ``("live", table, column)`` version (one mutation or
+        compaction landed) and return the new clock value — the WAL's LSN
+        source, so log sequence numbers ride the same monotonic clock that
+        drives plan re-binding."""
+        self._bump(("live", table, column))
+        return self._versions[("live", table, column)]
+
+    def live_for(self, table: str, column: str):
+        """The LiveCorpus attached to (table, column), or None."""
+        return self._live.get((table, column))
+
+    def live_columns(self, table: str) -> list[str]:
+        """Vector columns of ``table`` with a live corpus attached."""
+        return [c for (t, c) in self._live if t == table]
+
+    def advance_clock(self, to: int) -> None:
+        """Fast-forward the catalog clock to at least ``to``.
+
+        Crash recovery replays WAL records whose LSNs were minted by a
+        previous process's clock; bumps in the recovered process must stay
+        monotonic past them (DESIGN.md §12 LSN rule)."""
+        self._clock = max(self._clock, int(to))
 
     def tables(self) -> list[str]:
         """Names of all registered tables."""

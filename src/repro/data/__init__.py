@@ -1,3 +1,5 @@
+"""Datasets and mutations: the LAION-style synthetic catalog and the
+live-corpus (delta/tombstone/WAL) mutation layer (DESIGN.md §12)."""
 from .laion import make_laion_catalog, selectivity_threshold
 
 __all__ = ["make_laion_catalog", "selectivity_threshold"]

@@ -55,6 +55,10 @@ def make_laion_catalog(n_rows: int = 100_000, n_queries: int = 100,
                        num_categories: int = 8, seed: int = 0,
                        metric: Metric = Metric.INNER_PRODUCT,
                        query_spread: float = 0.15) -> Catalog:
+    """Synthetic LAION-shaped catalog (§7.1): a mixture-of-modes vector
+    corpus with correlated scalar columns, registered under the table
+    aliases the Q1–Q6 benchmark SQL expects (laion/products/images/
+    recipes/movies share one table; queries/users another)."""
     rng = np.random.default_rng(seed)
     modes = _make_modes(rng, n_modes, dim)
     vec = _mixture_vectors(rng, n_rows, dim, n_modes, modes=modes)

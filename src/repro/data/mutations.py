@@ -1,0 +1,534 @@
+"""Live corpus: crash-consistent streaming ingest and deletes (DESIGN.md §12).
+
+:class:`LiveCorpus` makes a registered (table, vector column) pair mutable
+without re-prepare.  Layout is two fixed-capacity segments — static shapes
+are the TPU discipline, so mutations never change any compiled plan's array
+shapes:
+
+* **main segment** — a (cap_main, d) padded copy of the corpus plus every
+  scalar column, a validity lane (the tombstone bitmap), and user-id slots.
+  Deletes just clear validity bits: the tombstone mask folds into the same
+  (Q, N) row-mask layout every kernel and IVF probe already threads, so a
+  dead row is inert exactly the way a pad row is.
+* **delta segment** — a (delta_cap, d) append-only buffer for inserts,
+  scanned by the flat batched kernel and merged into the main result as one
+  extra local level of the hierarchical per-query merge
+  (:func:`repro.dist.collectives.merge_topk_level`).
+
+Durability: every mutation first appends a JSON-lines record to a
+write-ahead log with monotonic LSNs minted by the Catalog version clock
+(``Catalog.bump_live`` — the LSN-vs-catalog-version rule: one clock drives
+both plan re-binding and replay ordering).  ``snapshot()`` checkpoints the
+full segment state via :mod:`repro.checkpoint.checkpointer` (atomic
+tmp-dir + rename commit) at the current LSN; :func:`recover` restores the
+newest committed snapshot and replays WAL records with higher LSNs,
+dropping at most one torn tail line.  A crash at ANY of the
+:data:`repro.serving.faults.CRASH_SITES` therefore recovers to a state
+whose query results are bit-identical to an unfailed replay.
+
+``compact()`` folds delta rows and tombstones back into the main segment:
+survivors are laid out canonically (sorted by user id, zero tail), the IVF
+is re-clustered with a fixed seed and fixed list capacity, and the swap
+happens under the version clock — in-flight compiled plans re-bind the new
+arrays with zero retraces, and because the canonical layout is a pure
+function of the logical corpus, a compacted state is bit-identical to a
+fresh :func:`attach_live` on the same logical rows.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpointer
+from ..core.schema import Catalog, ColumnKind, Metric
+from ..index.ivf import build_ivf
+from ..serving.faults import FaultInjector, InjectedCrashError
+from ..serving.resilience import (MutationError, validate_delete,
+                                  validate_insert)
+
+_SCALAR_KINDS = (ColumnKind.INT, ColumnKind.FLOAT, ColumnKind.BOOL,
+                 ColumnKind.CATEGORY)
+
+
+def _ceil8(n: int) -> int:
+    return max(8, -(-int(n) // 8) * 8)
+
+
+class LiveCorpus:
+    """Mutable (table, vector column) state: segments, WAL, snapshots.
+
+    Construct via :func:`attach_live` or :func:`recover` — both register
+    the instance with the catalog.  All segment state is host numpy;
+    :meth:`plan_arrays` materializes (and caches) the device copies that
+    compiled plans re-bind in place."""
+
+    def __init__(self, catalog: Catalog, meta: dict, path: str,
+                 faults: FaultInjector | None = None):
+        self.catalog = catalog
+        self.table = meta["table"]
+        self.column = meta["column"]
+        self.dim = int(meta["dim"])
+        self.cap_main = int(meta["cap_main"])
+        self.delta_cap = int(meta["delta_cap"])
+        self.nlist = meta["nlist"]
+        self.seed = int(meta["seed"])
+        self.iters = int(meta["iters"])
+        self.keep_last_k = int(meta.get("keep_last_k", 3))
+        self.metric = Metric[meta["metric"]]
+        self.col_dtypes = {n: np.dtype(d) for n, d in meta["cols"].items()}
+        self.path = path
+        self._faults = faults
+        self.lsn = 0
+        self.compact_lsn = 0
+        self.tombstones = 0
+        self.main_vec = np.zeros((self.cap_main, self.dim), np.float32)
+        self.main_valid = np.zeros((self.cap_main,), bool)
+        self.main_uids = np.full((self.cap_main,), -1, np.int64)
+        self.cols = {n: np.zeros((self.cap_main,), dt)
+                     for n, dt in self.col_dtypes.items()}
+        self.delta_vec = np.zeros((self.delta_cap, self.dim), np.float32)
+        self.delta_valid = np.zeros((self.delta_cap,), bool)
+        self.delta_uids = np.full((self.delta_cap,), -1, np.int64)
+        self.dcols = {n: np.zeros((self.delta_cap,), dt)
+                      for n, dt in self.col_dtypes.items()}
+        self.delta_count = 0
+        self._uid_loc: dict[int, tuple[str, int]] = {}
+        self._dev: dict[str, Any] = {}
+
+    # -- plumbing -----------------------------------------------------------
+
+    @property
+    def wal_path(self) -> str:
+        """Path of the JSON-lines write-ahead log."""
+        return os.path.join(self.path, "wal.jsonl")
+
+    @property
+    def ckpt_dir(self) -> str:
+        """Snapshot directory (checkpointer steps keyed by LSN)."""
+        return os.path.join(self.path, "ckpt")
+
+    def _crash(self, site: str) -> None:
+        if self._faults is not None:
+            self._faults.crash_point(site)
+
+    def _wal_append(self, rec: dict, torn_site: str | None) -> None:
+        """Durably append one record; ``torn_site`` arms the half-written
+        tail-line crash (flush a prefix, then die) that recovery must shed."""
+        line = json.dumps(rec, separators=(",", ":"))
+        if (torn_site is not None and self._faults is not None
+                and self._faults.armed(torn_site)):
+            with open(self.wal_path, "a") as f:
+                f.write(line[: max(1, len(line) // 2)])
+            self._faults.counters["crashes"] += 1
+            raise InjectedCrashError(f"injected crash at {torn_site!r} "
+                                     f"(half-flushed WAL line)")
+        with open(self.wal_path, "a") as f:
+            f.write(line + "\n")
+
+    def _bump(self) -> int:
+        return self.catalog.bump_live(self.table, self.column)
+
+    def _invalidate(self, *keys: str) -> None:
+        for k in keys:
+            self._dev.pop(k, None)
+
+    def _rebuild_uid_map(self) -> None:
+        self._uid_loc = {}
+        for s in np.flatnonzero(self.main_valid):
+            self._uid_loc[int(self.main_uids[s])] = ("m", int(s))
+        for s in np.flatnonzero(self.delta_valid):
+            self._uid_loc[int(self.delta_uids[s])] = ("d", int(s))
+
+    def _state_tree(self) -> dict:
+        """The full durable state as a flat-keyed pytree (snapshot unit)."""
+        tree = {"main_vec": self.main_vec, "main_valid": self.main_valid,
+                "main_uids": self.main_uids, "delta_vec": self.delta_vec,
+                "delta_valid": self.delta_valid,
+                "delta_uids": self.delta_uids,
+                "lsn": np.int64(self.lsn),
+                "compact_lsn": np.int64(self.compact_lsn),
+                "delta_count": np.int64(self.delta_count),
+                "tombstones": np.int64(self.tombstones),
+                "cols": dict(self.cols), "dcols": dict(self.dcols)}
+        return tree
+
+    def _load_state_tree(self, tree: dict) -> None:
+        # copies: restore() hands back device arrays whose numpy views are
+        # read-only, and segment state must stay mutable host memory
+        self.main_vec = np.array(tree["main_vec"], np.float32)
+        self.main_valid = np.array(tree["main_valid"], bool)
+        self.main_uids = np.array(tree["main_uids"], np.int64)
+        self.delta_vec = np.array(tree["delta_vec"], np.float32)
+        self.delta_valid = np.array(tree["delta_valid"], bool)
+        self.delta_uids = np.array(tree["delta_uids"], np.int64)
+        self.lsn = int(tree["lsn"])
+        self.compact_lsn = int(tree["compact_lsn"])
+        self.delta_count = int(tree["delta_count"])
+        self.tombstones = int(tree["tombstones"])
+        self.cols = {n: np.array(v, self.col_dtypes[n])
+                     for n, v in tree["cols"].items()}
+        self.dcols = {n: np.array(v, self.col_dtypes[n])
+                      for n, v in tree["dcols"].items()}
+
+    # -- mutations ----------------------------------------------------------
+
+    def _normalize_columns(self, columns: dict | None, n: int) -> dict:
+        out = {}
+        for name, vals in (columns or {}).items():
+            if name not in self.col_dtypes:
+                raise MutationError(f"unknown scalar column {name!r}; "
+                                    f"live columns: "
+                                    f"{sorted(self.col_dtypes)}")
+            arr = np.asarray(vals).astype(self.col_dtypes[name])
+            arr = np.broadcast_to(np.atleast_1d(arr), (n,)).copy()
+            if (np.issubdtype(arr.dtype, np.floating)
+                    and not np.all(np.isfinite(arr))):
+                raise MutationError(f"non-finite values for column {name!r}")
+            out[name] = arr
+        for name, dt in self.col_dtypes.items():
+            out.setdefault(name, np.zeros((n,), dt))
+        return out
+
+    def insert(self, ids, vectors, columns: dict | None = None) -> int:
+        """Admit a batch of new rows into the delta segment; returns the LSN.
+
+        Typed rejections (:mod:`repro.serving.resilience`) fire BEFORE the
+        WAL append — a rejected insert has no side effects.  Visibility is
+        immediate: the next ``ensure_fresh`` re-binds the delta arrays
+        (zero retraces) and every Q1-Q6 plan merges the new rows."""
+        ids, vectors = validate_insert(
+            ids, vectors, self.dim, self._uid_loc,
+            self.delta_cap - self.delta_count)
+        cols = self._normalize_columns(columns, len(ids))
+        rec = {"op": "insert", "ids": [int(i) for i in ids],
+               "vecs": [[float(x) for x in v] for v in vectors],
+               "cols": {n: np.asarray(v).tolist() for n, v in cols.items()}}
+        self._crash("wal.pre_append")
+        rec["lsn"] = lsn = self._bump()
+        self._wal_append(rec, torn_site="wal.torn_append")
+        self._crash("wal.post_append")
+        self._apply_insert(ids, vectors, cols, lsn)
+        return lsn
+
+    def _apply_insert(self, ids, vectors, cols, lsn: int) -> None:
+        n = len(ids)
+        slots = np.arange(self.delta_count, self.delta_count + n)
+        self.delta_vec[slots] = vectors
+        self.delta_valid[slots] = True
+        self.delta_uids[slots] = ids
+        for name, vals in cols.items():
+            self.dcols[name][slots] = vals
+        for uid, s in zip(ids, slots):
+            self._uid_loc[int(uid)] = ("d", int(s))
+        self.delta_count += n
+        self.lsn = lsn
+        self._invalidate("live_delta_vec", "live_delta_valid", "live_dcols")
+
+    def delete(self, ids) -> int:
+        """Tombstone a batch of live rows; returns the LSN.
+
+        A main-segment delete clears a validity bit that every scan path
+        already ANDs into its row mask; a delta-segment delete clears the
+        matching delta-validity bit.  No data moves until ``compact()``."""
+        ids = validate_delete(ids, self._uid_loc)
+        rec = {"op": "delete", "ids": [int(i) for i in ids]}
+        self._crash("wal.pre_append")
+        rec["lsn"] = lsn = self._bump()
+        self._wal_append(rec, torn_site="wal.torn_append")
+        self._crash("wal.post_append")
+        self._apply_delete(ids, lsn)
+        return lsn
+
+    def _apply_delete(self, ids, lsn: int) -> None:
+        touched_main = touched_delta = False
+        for uid in ids:
+            seg, slot = self._uid_loc.pop(int(uid))
+            if seg == "m":
+                self.main_valid[slot] = False
+                touched_main = True
+            else:
+                self.delta_valid[slot] = False
+                touched_delta = True
+            self.tombstones += 1
+        self.lsn = lsn
+        if touched_main:
+            self._invalidate("live_main_valid")
+        if touched_delta:
+            self._invalidate("live_delta_valid")
+
+    def snapshot(self) -> str:
+        """Checkpoint the full segment state at the current LSN (atomic
+        tmp-dir + rename commit via the checkpointer); returns the path."""
+        self._crash("snapshot.pre_commit")
+        out = checkpointer.save(self.ckpt_dir, self.lsn, self._state_tree(),
+                                keep_last_k=self.keep_last_k)
+        self._crash("snapshot.post_commit")
+        return out
+
+    # -- compaction ---------------------------------------------------------
+
+    def _canonical_state(self) -> dict:
+        """The compacted state: survivors (main ∪ delta, minus tombstones)
+        sorted by user id into slots 0..n-1, zero tail, empty delta.  A pure
+        function of the logical corpus — which is what makes a compacted
+        live corpus bit-identical to a fresh attach on the same rows."""
+        m = np.flatnonzero(self.main_valid)
+        d = np.flatnonzero(self.delta_valid)
+        uids = np.concatenate([self.main_uids[m], self.delta_uids[d]])
+        vecs = np.concatenate([self.main_vec[m], self.delta_vec[d]])
+        n = len(uids)
+        if n > self.cap_main:
+            raise MutationError(
+                f"main segment capacity {self.cap_main} cannot hold {n} "
+                f"live rows; re-attach with a larger capacity")
+        order = np.argsort(uids)
+        tree = {"main_vec": np.zeros_like(self.main_vec),
+                "main_valid": np.zeros_like(self.main_valid),
+                "main_uids": np.full_like(self.main_uids, -1),
+                "delta_vec": np.zeros_like(self.delta_vec),
+                "delta_valid": np.zeros_like(self.delta_valid),
+                "delta_uids": np.full_like(self.delta_uids, -1),
+                "delta_count": np.int64(0), "tombstones": np.int64(0),
+                "cols": {}, "dcols": {}}
+        tree["main_vec"][:n] = vecs[order]
+        tree["main_valid"][:n] = True
+        tree["main_uids"][:n] = uids[order]
+        for name in self.cols:
+            merged = np.concatenate([self.cols[name][m],
+                                     self.dcols[name][d]])
+            col = np.zeros_like(self.cols[name])
+            col[:n] = merged[order]
+            tree["cols"][name] = col
+            tree["dcols"][name] = np.zeros_like(self.dcols[name])
+        return tree
+
+    def compact(self) -> int:
+        """Fold deltas + tombstones into the main segment; returns the LSN.
+
+        Durability order: compute the canonical state, log one ``compact``
+        WAL record (replay recomputes it deterministically), checkpoint the
+        post-compaction state at the compact LSN, THEN swap in memory and
+        re-register the rebuilt IVF under the version clock — a reader
+        never observes a half-compacted corpus, and in-flight plans re-bind
+        with zero retraces (index ``nlist``/``cap`` are pinned)."""
+        staged = self._canonical_state()
+        self._crash("compact.pre_log")
+        lsn = self._bump()
+        self._wal_append({"op": "compact", "lsn": lsn}, torn_site=None)
+        self._crash("compact.post_log")
+        staged["lsn"] = np.int64(lsn)
+        staged["compact_lsn"] = np.int64(lsn)
+        checkpointer.save(self.ckpt_dir, lsn, staged,
+                          keep_last_k=self.keep_last_k)
+        self._crash("compact.pre_swap")
+        self._swap_compacted(staged, lsn)
+        return lsn
+
+    def _swap_compacted(self, staged: dict, lsn: int) -> None:
+        self._load_state_tree(staged)
+        self.lsn = lsn
+        self.compact_lsn = lsn
+        self._rebuild_uid_map()
+        self._dev.clear()
+        self._register_index()
+
+    def _register_index(self) -> None:
+        """(Re)build the IVF over the FULL padded main segment with pinned
+        (seed, nlist, cap): same shapes, same static meta — the re-bind
+        path stays retrace-free — and deterministic given the canonical
+        layout."""
+        if self.nlist is None:
+            return
+        ivf = build_ivf(jax.random.PRNGKey(self.seed),
+                        jnp.asarray(self.main_vec), int(self.nlist),
+                        metric=self.metric, iters=self.iters,
+                        cap=_ceil8(self.cap_main))
+        self.catalog.register_index(self.table, self.column, ivf)
+
+    # -- read side ----------------------------------------------------------
+
+    def plan_arrays(self) -> dict:
+        """Device arrays for compiled plans, cached per segment piece so a
+        delta-only mutation re-uploads only the delta arrays on re-bind."""
+        def dev(key, host):
+            if key not in self._dev:
+                self._dev[key] = jnp.asarray(host)
+            return self._dev[key]
+
+        if "live_cols" not in self._dev:
+            self._dev["live_cols"] = {n: jnp.asarray(v)
+                                      for n, v in self.cols.items()}
+        if "live_dcols" not in self._dev:
+            self._dev["live_dcols"] = {n: jnp.asarray(v)
+                                       for n, v in self.dcols.items()}
+        return {"corpus": dev("corpus", self.main_vec),
+                "live_main_valid": dev("live_main_valid", self.main_valid),
+                "live_delta_vec": dev("live_delta_vec", self.delta_vec),
+                "live_delta_valid": dev("live_delta_valid",
+                                        self.delta_valid),
+                "live_cols": self._dev["live_cols"],
+                "live_dcols": self._dev["live_dcols"]}
+
+    def freshness(self) -> dict:
+        """Observable corpus freshness (surfaced by ``explain()``): delta
+        rows awaiting compaction, tombstone count, and the LSN frontier."""
+        return {"delta_rows": int(self.delta_valid.sum()),
+                "tombstones": int(self.tombstones),
+                "live_rows": int(self.main_valid.sum()
+                                 + self.delta_valid.sum()),
+                "lsn": int(self.lsn),
+                "last_compact_lsn": int(self.compact_lsn)}
+
+    def user_ids(self, slot_ids) -> np.ndarray:
+        """Map plan-result slot ids (main slot, or cap_main + delta slot;
+        -1 invalid) back to user ids."""
+        slots = np.asarray(slot_ids)
+        flat = slots.reshape(-1)
+        out = np.full(flat.shape, -1, np.int64)
+        main = (flat >= 0) & (flat < self.cap_main)
+        out[main] = self.main_uids[flat[main]]
+        delta = flat >= self.cap_main
+        out[delta] = self.delta_uids[flat[delta] - self.cap_main]
+        return out.reshape(slots.shape)
+
+
+def _write_meta(path: str, meta: dict) -> None:
+    with open(os.path.join(path, "meta.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+
+def attach_live(catalog: Catalog, table: str, column: str, path: str, *,
+                delta_cap: int = 256, cap_main: int | None = None,
+                nlist: int | None = None, seed: int = 0, iters: int = 8,
+                ids=None, keep_last_k: int = 3,
+                faults: FaultInjector | None = None) -> LiveCorpus:
+    """Make (table, column) mutable: build the live segments from the
+    frozen table, write meta + an LSN-0-equivalent base snapshot, register
+    with the catalog, and (when ``nlist`` is given, or an IVF was already
+    registered) build the live IVF over the padded main segment.
+
+    Registration bumps the table's version on purpose: plans compiled
+    against the frozen layout raise ``StalePlanError`` and transparently
+    re-prepare onto the live lowering.  ``ids`` assigns user ids to the
+    existing rows (default: row positions).  Mutations are visible ONLY
+    through plans that scan ``column`` — other vector columns of the table
+    keep frozen-snapshot semantics (documented limitation, DESIGN.md §12).
+    """
+    tab = catalog.table(table)
+    spec = tab.schema[column]
+    if spec.kind != ColumnKind.VECTOR:
+        raise ValueError(f"{table}.{column} is not a vector column")
+    vectors = np.asarray(tab[column], np.float32)
+    n0, dim = vectors.shape
+    if cap_main is None:
+        cap_main = _ceil8(n0 + 4 * delta_cap)
+    cap_main = _ceil8(cap_main)
+    if cap_main < n0:
+        raise ValueError(f"cap_main {cap_main} < existing rows {n0}")
+    existing = catalog.index_for(table, column)
+    if nlist is None and existing is not None:
+        nlist = int(existing.nlist)
+    col_names = [n for n, t in tab.schema.columns.items()
+                 if t.kind in _SCALAR_KINDS]
+    meta = {"table": table, "column": column, "dim": int(dim),
+            "cap_main": int(cap_main), "delta_cap": int(delta_cap),
+            "nlist": None if nlist is None else int(nlist),
+            "seed": int(seed), "iters": int(iters),
+            "keep_last_k": int(keep_last_k), "metric": spec.metric.name,
+            "cols": {n: np.asarray(tab[n]).dtype.str for n in col_names}}
+    os.makedirs(path, exist_ok=True)
+    _write_meta(path, meta)
+    live = LiveCorpus(catalog, meta, path, faults=faults)
+    uids = (np.arange(n0, dtype=np.int64) if ids is None
+            else np.asarray(ids, np.int64))
+    if len(np.unique(uids)) != n0:
+        raise ValueError("attach ids must be unique")
+    live.main_vec[:n0] = vectors
+    live.main_valid[:n0] = np.asarray(tab.valid)
+    live.main_uids[:n0] = uids
+    for name in col_names:
+        live.cols[name][:n0] = np.asarray(tab[name])
+    live._rebuild_uid_map()
+    catalog.register_live(table, column, live)
+    live.lsn = catalog.version(("live", table, column))
+    open(live.wal_path, "w").close()
+    checkpointer.save(live.ckpt_dir, live.lsn, live._state_tree(),
+                      keep_last_k=keep_last_k)
+    live._register_index()
+    return live
+
+
+def _read_wal(wal_path: str) -> list[dict]:
+    """Parse the WAL, dropping at most one torn (half-flushed) tail line;
+    corruption anywhere else is a hard error."""
+    if not os.path.exists(wal_path):
+        return []
+    with open(wal_path) as f:
+        lines = f.read().splitlines()
+    out = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            out.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                break                      # torn tail from a mid-append crash
+            raise MutationError(f"corrupt WAL record at line {i + 1}")
+    return out
+
+
+def recover(catalog: Catalog, table: str, column: str, path: str, *,
+            faults: FaultInjector | None = None) -> LiveCorpus:
+    """Rebuild a live corpus from disk alone after a crash.
+
+    Restores the newest committed snapshot, replays WAL records with LSNs
+    past it (``compact`` records recompute the canonical state
+    deterministically), fast-forwards the catalog clock past every replayed
+    LSN, and re-registers corpus + IVF.  The recovered state's query
+    results are bit-identical to an unfailed replay of the same mutation
+    sequence — the chaos suite asserts exactly that at every crash site."""
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    if meta["table"] != table or meta["column"] != column:
+        raise MutationError(
+            f"live state at {path} is for {meta['table']}.{meta['column']}, "
+            f"not {table}.{column}")
+    live = LiveCorpus(catalog, meta, path, faults=faults)
+    step = checkpointer.latest_step(live.ckpt_dir)
+    if step is None:
+        raise MutationError(f"no committed snapshot under {live.ckpt_dir}")
+    tree = checkpointer.restore(live.ckpt_dir, step, live._state_tree())
+    live._load_state_tree(tree)
+    live._rebuild_uid_map()
+    max_lsn = live.lsn
+    for rec in _read_wal(live.wal_path):
+        lsn = int(rec["lsn"])
+        max_lsn = max(max_lsn, lsn)
+        if lsn <= live.lsn:
+            continue                       # already folded into the snapshot
+        if rec["op"] == "insert":
+            ids = np.asarray(rec["ids"], np.int64)
+            vecs = np.asarray(rec["vecs"], np.float32)
+            cols = {n: np.asarray(v, live.col_dtypes[n])
+                    for n, v in rec["cols"].items()}
+            live._apply_insert(ids, vecs, cols, lsn)
+        elif rec["op"] == "delete":
+            live._apply_delete(np.asarray(rec["ids"], np.int64), lsn)
+        elif rec["op"] == "compact":
+            staged = live._canonical_state()
+            staged["lsn"] = np.int64(lsn)
+            staged["compact_lsn"] = np.int64(lsn)
+            live._load_state_tree(staged)
+            live._rebuild_uid_map()
+        else:
+            raise MutationError(f"unknown WAL op {rec['op']!r}")
+    catalog.advance_clock(max_lsn)
+    catalog.register_live(table, column, live)
+    live._register_index()
+    return live

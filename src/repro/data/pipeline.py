@@ -16,6 +16,7 @@ import numpy as np
 
 @dataclasses.dataclass(frozen=True)
 class DataConfig:
+    """Synthetic-stream shape knobs (batch/sequence/vocab sizing)."""
     seed: int = 0
     global_batch: int = 8
     seq_len: int = 128
@@ -37,6 +38,8 @@ class SyntheticLM:
 
     def batch_at(self, step: int, host_start: int = 0,
                  host_count: int | None = None) -> dict:
+        """Deterministic batch for ``step`` (optionally a host shard slice):
+        the same (seed, step) always yields the same tokens/labels."""
         cfg = self.cfg
         count = host_count if host_count is not None else cfg.global_batch
         rng = np.random.default_rng(
@@ -64,6 +67,7 @@ class SyntheticLM:
                 "labels": jnp.asarray(labels)}
 
     def iterate(self, start_step: int = 0):
+        """Endless (step, batch) stream beginning at ``start_step``."""
         step = start_step
         while True:
             yield step, self.batch_at(step)

@@ -118,6 +118,39 @@ def distributed_range(mesh: Mesh, metric: Metric, capacity: int,
 # Query-batched collectives (DESIGN.md §10): shard rows x tile queries
 # ---------------------------------------------------------------------------
 
+def merge_topk_level(metric: Metric,
+                     keys_a: jnp.ndarray, gids_a: jnp.ndarray,
+                     keys_b: jnp.ndarray, gids_b: jnp.ndarray,
+                     k: int):
+    """One level of the hierarchical per-query candidate merge, as a plain
+    (non-collective) function: concatenate two (Q, k_a)/(Q, k_b) candidate
+    sets column-wise and row-wise re-select the best ``k``.
+
+    This is exactly what :func:`_merge_topk` does per mesh axis, with the
+    ``all_gather`` replaced by a local ``concatenate`` — the live-corpus
+    delta segment (DESIGN.md §12) is merged into the main top-k as one
+    extra, device-local "shard level" through this primitive.
+
+    ``keys_*`` are ascending order keys with ``+inf`` on empty lanes;
+    ``gids_*`` the matching global ids with ``-1`` on empty lanes.  Ties
+    resolve to the lowest concatenated column index (``jax.lax.top_k`` is
+    stable), so with A = main and B = delta, an empty delta segment leaves
+    A's result bit-identical.  Output is padded/truncated to exactly
+    (Q, k).  Returns (ids, sims raw-metric, valid)."""
+    keys = jnp.concatenate([keys_a, keys_b], axis=1)
+    gids = jnp.concatenate([gids_a, gids_b], axis=1)
+    neg, idx = jax.lax.top_k(-keys, min(k, keys.shape[1]))
+    keys = -neg
+    gids = jnp.take_along_axis(gids, idx, axis=1)
+    if keys.shape[1] < k:
+        pad = k - keys.shape[1]
+        keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        gids = jnp.pad(gids, ((0, 0), (0, pad)), constant_values=-1)
+    valid = jnp.isfinite(keys)
+    sims = jnp.where(valid, -keys if metric.is_similarity() else keys, 0.0)
+    return jnp.where(valid, gids, -1), sims, valid
+
+
 def _merge_topk(metric: Metric, keys: jnp.ndarray, gids: jnp.ndarray,
                 k: int, axes: tuple[str, ...]):
     """Hierarchical per-query candidate merge (runs INSIDE shard_map).

@@ -1,3 +1,5 @@
+"""ANN index structures: exact flat scans, the IVF index with
+CHASE-style probes, and the live delta segment (DESIGN.md §4, §12)."""
 from .flat import FlatIndex
 from .ivf import IVFIndex, build_ivf
 from .kmeans import kmeans

@@ -1,0 +1,103 @@
+"""Delta-segment scans for the live corpus (DESIGN.md §12).
+
+Inserts land in a fixed-capacity append-only delta segment — a (delta_cap,
+d) array whose empty slots are zero rows masked off by a validity lane, the
+exact pad-row contract the fused kernels already honor for divisibility
+padding.  These helpers scan that segment with the existing flat batched
+machinery (``kernels.ops.fused_scan_topk_batch`` / ``FlatIndex``) and emit
+candidates in the (keys, global-ids) form that
+``dist.collectives.merge_topk_level`` consumes: the delta segment is merged
+into the main IVF/flat result as one extra, device-local "shard level" of
+the hierarchical per-query merge.
+
+Global ids: delta slot ``s`` surfaces as ``offset + s`` where ``offset`` is
+the main segment's capacity, so merged ids unambiguously name a row in
+either segment.  Order keys are ascending with ``+inf`` on empty lanes —
+ties against main-segment candidates resolve main-first in the merge
+(``jax.lax.top_k`` stability), keeping a zero-delta merge bit-identical to
+the main result alone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.expr import order_key
+from ..core.schema import Metric
+from .flat import FlatIndex
+
+
+def _delta_scan_topk(metric: Metric, delta_vec, qs, k: int, dmask, qvalid,
+                     use_pallas: bool, interpret):
+    """Dispatch a top-k scan over the delta segment (fused kernel or
+    FlatIndex vmap — the same dispatch rule as the main flat path)."""
+    if use_pallas:
+        from ..kernels.ops import fused_scan_topk_batch
+        return fused_scan_topk_batch(delta_vec, qs, k, dmask, metric,
+                                     interpret=interpret, qvalid=qvalid)
+    flat = FlatIndex(metric, delta_vec)
+    if dmask is None or dmask.ndim == 1:
+        ids, sims, valid = jax.vmap(lambda q: flat.topk(q, k, dmask))(qs)
+    else:
+        ids, sims, valid = jax.vmap(
+            lambda q, m: flat.topk(q, k, m))(qs, dmask)
+    if qvalid is not None:
+        valid = valid & qvalid[:, None]
+        ids = jnp.where(valid, ids, -1)
+        sims = jnp.where(valid, sims, 0.0)
+    return ids, sims, valid
+
+
+def delta_topk_batch(metric: Metric, delta_vec, qs, k: int, dmask, qvalid,
+                     offset: int, use_pallas: bool = False, interpret=None):
+    """Top-k over the (delta_cap, d) delta segment for a (Q, d) query batch.
+
+    ``dmask`` is the delta-row mask (validity ANDed with any predicate):
+    None, shared (delta_cap,), or per-query (Q, delta_cap) — the same
+    layout contract as the main-segment row mask.  Returns merge-ready
+    ``(keys, gids)``: ascending order keys with ``+inf`` empty lanes and
+    global ids ``offset + slot`` (-1 on empty lanes), each (Q, min(k,
+    delta_cap))."""
+    kd = min(int(k), delta_vec.shape[0])
+    ids, sims, valid = _delta_scan_topk(metric, delta_vec, qs, kd, dmask,
+                                        qvalid, use_pallas, interpret)
+    keys = jnp.where(valid, order_key(metric, sims), jnp.inf)
+    gids = jnp.where(valid, ids + offset, -1)
+    return keys, gids
+
+
+def delta_range_batch(metric: Metric, delta_vec, qs, radius, dmask, qvalid,
+                      offset: int, capacity: int, use_pallas: bool = False,
+                      interpret=None):
+    """Range scan over the delta segment for a (Q, d) query batch.
+
+    Mirrors the main flat range path: up to ``min(capacity, delta_cap)``
+    best-first in-range hits per query, plus an exact per-query hit count
+    (0 for ``qvalid``-invalid queries).  Returns ``(keys, gids, count)``
+    with keys/gids merge-ready as in :func:`delta_topk_batch`."""
+    m, dn = qs.shape[0], delta_vec.shape[0]
+    cap = min(int(capacity), dn)
+    radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
+    if use_pallas:
+        from ..kernels.ops import fused_range_topk_batch
+        ids, sims, valid, count = fused_range_topk_batch(
+            delta_vec, qs, radius, dmask, metric, cap,
+            interpret=interpret, qvalid=qvalid)
+    else:
+        flat = FlatIndex(metric, delta_vec)
+        if dmask is None or dmask.ndim == 1:
+            hit, raw = jax.vmap(
+                lambda q, r: flat.range_mask(q, r, dmask))(qs, radius)
+        else:
+            hit, raw = jax.vmap(flat.range_mask)(qs, radius, dmask)
+        if qvalid is not None:
+            hit = hit & qvalid[:, None]
+        keys = jnp.where(hit, order_key(metric, raw), jnp.inf)
+        neg, sel = jax.lax.top_k(-keys, cap)                       # row-wise
+        valid = jnp.isfinite(-neg)
+        ids = jnp.where(valid, sel.astype(jnp.int32), -1)
+        sims = jnp.where(valid, jnp.take_along_axis(raw, sel, axis=1), 0.0)
+        count = jnp.sum(hit, axis=1)
+    keys = jnp.where(valid, order_key(metric, sims), jnp.inf)
+    gids = jnp.where(valid, ids + offset, -1)
+    return keys, gids, count

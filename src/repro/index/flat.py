@@ -38,6 +38,7 @@ class FlatIndex:
 
     @property
     def num_rows(self) -> int:
+        """Corpus row count."""
         return int(self.vectors.shape[0])
 
     def topk(self, query: jnp.ndarray, k: int,
@@ -66,4 +67,5 @@ class FlatIndex:
     # distance evaluation count (for the paper's "number of similarity
     # computations" reporting)
     def probe_cost(self) -> int:
+        """Distance evaluations per query (always N for a flat scan)."""
         return self.num_rows

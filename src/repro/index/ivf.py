@@ -43,6 +43,9 @@ INF = jnp.float32(jnp.inf)
 )
 @dataclasses.dataclass
 class IVFIndex:
+    """Inverted-file index: k-means centroids with fixed-capacity member
+    lists (-1 padded) plus per-list radii for the geometric probe-pruning
+    bound.  A pytree — probe kernels trace over the arrays."""
     metric: Metric
     centroids: jnp.ndarray     # (nlist, d)
     lists: jnp.ndarray         # (nlist, cap) int32 row ids, -1 padded
@@ -76,15 +79,26 @@ class ProbeConfig:
 
 def build_ivf(key: jax.Array, vectors: jnp.ndarray, nlist: int,
               metric: Metric = Metric.INNER_PRODUCT, iters: int = 8,
-              cap_multiple: int = 4) -> IVFIndex:
-    """Train centroids, bucket rows into padded inverted lists."""
+              cap_multiple: int = 4, cap: int | None = None) -> IVFIndex:
+    """Train centroids, bucket rows into padded inverted lists.
+
+    ``cap`` pins the inverted-list capacity instead of deriving it from the
+    actual max cluster size.  ``cap`` (with ``nlist``/``metric``) is STATIC
+    index metadata — it shapes the compiled probe loops — so live-corpus
+    compaction (DESIGN.md §12) rebuilds with a fixed ``cap`` to keep
+    re-bound plans at zero retraces."""
     import numpy as np
     n, d = vectors.shape
     centroids = kmeans(key, vectors, nlist, iters=iters)
     a = np.asarray(assign(vectors, centroids))
     counts = np.bincount(a, minlength=nlist)
-    cap = int(counts.max())
-    cap = max(8, -(-cap // 8) * 8)  # round up for lane alignment
+    derived = int(counts.max())
+    derived = max(8, -(-derived // 8) * 8)  # round up for lane alignment
+    if cap is None:
+        cap = derived
+    elif cap < derived:
+        raise ValueError(f"fixed cap {cap} < max cluster size "
+                         f"{int(counts.max())}")
     lists = np.full((nlist, cap), -1, dtype=np.int32)
     cursor = np.zeros(nlist, dtype=np.int64)
     order = np.argsort(a, kind="stable")

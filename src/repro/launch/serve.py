@@ -151,6 +151,45 @@ class QueryServer:
         self._kick.set()
         return await fut
 
+    async def submit_mutation(self, op: str, ids=None, vectors=None,
+                              columns=None) -> int:
+        """Admit and apply one corpus mutation against the served
+        statement's live corpus (DESIGN.md §12); returns the mutation's LSN.
+
+        ``op`` is ``"insert"`` (requires ``ids`` + ``vectors``),
+        ``"delete"`` (requires ``ids``), or ``"compact"``.  Mutations share
+        the query admission watermark — a server drowning in reads also
+        backpressures writes (:class:`BackpressureError`) — and payloads are
+        validated at the door by the corpus itself (typed
+        :class:`~repro.serving.resilience.MutationError` subclasses).  The
+        WAL append + segment update run on the executor thread so the event
+        loop never blocks on disk; queries racing the mutation see either
+        the pre- or post-mutation corpus, never a torn state."""
+        from ..core.compiler import _scan_of
+        from ..serving.resilience import MutationError
+        if not self._running:
+            raise RuntimeError("server is not running (use `async with` "
+                               "or call start())")
+        self.admission.admit(len(self._futures))
+        stmt = self.statement
+        live = stmt._db.catalog.live_for(*_scan_of(stmt.compiled.analysis))
+        if live is None:
+            raise MutationError(
+                "served statement's table has no live corpus attached; "
+                "call db.attach_live(...) before submitting mutations")
+        if op == "insert":
+            call = lambda: live.insert(ids, vectors, columns)
+        elif op == "delete":
+            call = lambda: live.delete(ids)
+        elif op == "compact":
+            call = lambda: live.compact()
+        else:
+            raise MutationError(
+                f"unknown mutation op {op!r}; expected "
+                f"'insert', 'delete', or 'compact'")
+        loop = asyncio.get_running_loop()
+        return await loop.run_in_executor(None, call)
+
     def snapshot(self) -> dict:
         """Admission + scheduler + load (+ fault) counters in one view."""
         return {"admission": self.admission.snapshot(),

@@ -25,6 +25,13 @@ sees:
   must re-bind the plan before the next execute (no stale results, no
   crash).
 
+A fifth class — **process crashes** at :data:`CRASH_SITES` durability
+boundaries in the live-corpus mutation path (DESIGN.md §12) — is injected
+deterministically by (site, Nth-hit) rather than probability: crash tests
+need the failure at one exact WAL/snapshot/compaction boundary, and
+keeping crashes out of the RNG streams preserves the per-type stream
+independence above.
+
 The injector wraps an execute callable (:meth:`FaultInjector.wrap`);
 ``counters`` record exactly what was injected so chaos tests can assert
 counter-exact outcomes.
@@ -43,6 +50,30 @@ class InjectedKernelError(RuntimeError):
     batch execution (the scheduler must contain it per batch)."""
 
 
+class InjectedCrashError(RuntimeError):
+    """A process "crash" fired at a :data:`CRASH_SITES` point in the
+    mutation path (DESIGN.md §12).  The chaos harness catches it, discards
+    all in-memory state, and must recover from disk alone."""
+
+
+#: Deterministic crash points in the live-corpus mutation path, in
+#: durability order.  Each site marks the instant *before* or *after* a
+#: durability step, so a crash there is the worst torn state that step can
+#: leave on disk: a WAL record lost entirely, a half-written tail line,
+#: a snapshot requested but never written, a compaction logged but never
+#: swapped (see data/mutations.py for which site guards which step).
+CRASH_SITES = (
+    "wal.pre_append",        # mutation validated, nothing durable yet
+    "wal.torn_append",       # partial WAL line flushed, then crash
+    "wal.post_append",       # record durable, in-memory apply lost
+    "snapshot.pre_commit",   # snapshot requested, nothing written yet
+    "snapshot.post_commit",  # snapshot committed (rename landed), caller died
+    "compact.pre_log",       # compaction computed, nothing durable
+    "compact.post_log",      # compact WAL record durable, swap lost
+    "compact.pre_swap",      # post-compaction snapshot durable, swap lost
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class FaultSpec:
     """What to inject, with what probability — all draws seeded.
@@ -55,6 +86,11 @@ class FaultSpec:
     kernel_error_p: float = 0.0
     poison_bind_p: float = 0.0
     catalog_bump_p: float = 0.0
+    # crash injection is deterministic (site + Nth hit), NOT probabilistic:
+    # a crash must land at one exact durability boundary to test it, and
+    # keeping it out of the RNG streams preserves stream independence
+    crash_site: str | None = None
+    crash_at: int = 1
 
     def __post_init__(self):
         for f in ("latency_spike_p", "kernel_error_p", "poison_bind_p",
@@ -62,6 +98,12 @@ class FaultSpec:
             p = getattr(self, f)
             if not 0.0 <= p <= 1.0:
                 raise ValueError(f"{f} must be a probability, got {p}")
+        if self.crash_site is not None and self.crash_site not in CRASH_SITES:
+            raise ValueError(f"unknown crash_site {self.crash_site!r}; "
+                             f"expected one of {CRASH_SITES}")
+        if self.crash_at < 1:
+            raise ValueError(f"crash_at must be >= 1 (1 = first hit), "
+                             f"got {self.crash_at}")
 
 
 class FaultInjector:
@@ -85,7 +127,9 @@ class FaultInjector:
         self._rng = {name: np.random.default_rng([spec.seed, i])
                      for i, name in enumerate(self._STREAMS)}
         self.counters = {"latency_spikes": 0, "kernel_errors": 0,
-                         "poisoned_binds": 0, "catalog_bumps": 0}
+                         "poisoned_binds": 0, "catalog_bumps": 0,
+                         "crashes": 0}
+        self._site_hits = {site: 0 for site in CRASH_SITES}
 
     # -- submit-side --------------------------------------------------------
 
@@ -105,6 +149,28 @@ class FaultInjector:
                 self.counters["poisoned_binds"] += 1
                 return out, True
         return binds, False
+
+    # -- crash-side ---------------------------------------------------------
+
+    def armed(self, site: str) -> bool:
+        """Record a hit on ``site`` and report whether the configured crash
+        fires here (site matches and this is the ``crash_at``-th hit).
+        Hit counting is unconditional so the same mutation sequence visits
+        sites identically whether or not a crash is configured."""
+        if site not in self._site_hits:
+            raise ValueError(f"unknown crash site {site!r}")
+        self._site_hits[site] += 1
+        return (self.spec.crash_site == site
+                and self._site_hits[site] == self.spec.crash_at)
+
+    def crash_point(self, site: str) -> None:
+        """Raise :class:`InjectedCrashError` if the configured crash is
+        armed at ``site``; otherwise a no-op (plus hit accounting)."""
+        if self.armed(site):
+            self.counters["crashes"] += 1
+            raise InjectedCrashError(
+                f"injected crash at {site!r} "
+                f"(hit #{self._site_hits[site]}, seed={self.spec.seed})")
 
     # -- execute-side -------------------------------------------------------
 

@@ -76,6 +76,110 @@ class PoisonedBindError(ServingError):
         self.name = name
 
 
+class MutationError(ServingError):
+    """Base class for typed mutation rejections (DESIGN.md §12).
+
+    Every subclass is raised *at the door* — by
+    :func:`validate_insert` / :func:`validate_delete` before a mutation
+    touches the WAL or any device array — so a bad write can never surface
+    as a mid-kernel failure or a half-applied log record."""
+
+
+class UnknownIdError(MutationError):
+    """A delete named an id that is not live (never inserted, already
+    deleted, or compacted away after deletion)."""
+
+    def __init__(self, ids):
+        ids = list(ids)
+        super().__init__(f"delete of nonexistent id(s) {ids[:8]}"
+                         f"{'...' if len(ids) > 8 else ''}; "
+                         f"rejected at admission")
+        self.ids = ids
+
+
+class DuplicateIdError(MutationError):
+    """An insert named an id that is already live (in the main segment or
+    the delta segment), or repeated an id within one insert batch."""
+
+    def __init__(self, ids):
+        ids = list(ids)
+        super().__init__(f"insert of duplicate id(s) {ids[:8]}"
+                         f"{'...' if len(ids) > 8 else ''}; "
+                         f"rejected at admission")
+        self.ids = ids
+
+
+class InvalidVectorError(MutationError):
+    """An insert payload failed vector validation (non-finite values or a
+    dimension mismatch) — the mutation twin of :class:`PoisonedBindError`:
+    a NaN row admitted into the delta segment would poison every scan that
+    touches its lane."""
+
+    def __init__(self, reason: str):
+        super().__init__(f"insert vector rejected at admission: {reason}")
+        self.reason = reason
+
+
+class DeltaFullError(MutationError):
+    """The delta segment has no free slots — mutation backpressure.
+
+    The write-side analogue of :class:`BackpressureError`: carries the
+    segment capacity and a ``compact_hint`` telling the client the segment
+    drains via ``compact()`` (a retry without compaction will fail again)."""
+
+    def __init__(self, capacity: int, requested: int):
+        super().__init__(
+            f"delta segment full ({capacity} slots, {requested} more "
+            f"requested); run compact() to fold deltas into the main index")
+        self.capacity = capacity
+        self.requested = requested
+        self.compact_hint = True
+
+
+def validate_insert(ids, vectors, dim: int, live_ids, free_slots: int):
+    """Admission checks for an insert batch; returns (ids, vectors) as numpy.
+
+    Raises :class:`DuplicateIdError` (id already live, or repeated within
+    the batch), :class:`InvalidVectorError` (shape/dim mismatch or
+    non-finite values), or :class:`DeltaFullError` (no headroom) — always
+    BEFORE anything is logged or applied, so a rejected insert has no
+    side effects at any layer."""
+    ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+    vectors = np.atleast_2d(np.asarray(vectors, dtype=np.float32))
+    if vectors.ndim != 2 or vectors.shape[1] != dim:
+        raise InvalidVectorError(
+            f"expected shape (n, {dim}), got {tuple(vectors.shape)}")
+    if vectors.shape[0] != ids.shape[0]:
+        raise InvalidVectorError(
+            f"{ids.shape[0]} id(s) but {vectors.shape[0]} vector row(s)")
+    if not np.all(np.isfinite(vectors)):
+        raise InvalidVectorError("non-finite values")
+    uniq, counts = np.unique(ids, return_counts=True)
+    batch_dups = uniq[counts > 1]
+    existing = [int(i) for i in ids if int(i) in live_ids]
+    if len(batch_dups) or existing:
+        raise DuplicateIdError(sorted(set(existing) |
+                                      {int(i) for i in batch_dups}))
+    if ids.shape[0] > free_slots:
+        raise DeltaFullError(capacity=free_slots, requested=int(ids.shape[0]))
+    return ids, vectors
+
+
+def validate_delete(ids, live_ids):
+    """Admission checks for a delete batch; returns the ids as numpy int64.
+
+    Raises :class:`UnknownIdError` for any id that is not currently live
+    (and for ids repeated within the batch — the second delete would also
+    target a non-live id)."""
+    ids = np.atleast_1d(np.asarray(ids, dtype=np.int64))
+    uniq, counts = np.unique(ids, return_counts=True)
+    missing = sorted({int(i) for i in ids if int(i) not in live_ids} |
+                     {int(i) for i in uniq[counts > 1]})
+    if missing:
+        raise UnknownIdError(missing)
+    return ids
+
+
 def validate_binds(binds: dict) -> None:
     """Reject non-finite float bind values (raises PoisonedBindError).
 

