@@ -18,13 +18,21 @@ shapes:
 Durability: every mutation first appends a JSON-lines record to a
 write-ahead log with monotonic LSNs minted by the Catalog version clock
 (``Catalog.bump_live`` — the LSN-vs-catalog-version rule: one clock drives
-both plan re-binding and replay ordering).  ``snapshot()`` checkpoints the
-full segment state via :mod:`repro.checkpoint.checkpointer` (atomic
-tmp-dir + rename commit) at the current LSN; :func:`recover` restores the
-newest committed snapshot and replays WAL records with higher LSNs,
-dropping at most one torn tail line.  A crash at ANY of the
-:data:`repro.serving.faults.CRASH_SITES` therefore recovers to a state
-whose query results are bit-identical to an unfailed replay.
+both plan re-binding and replay ordering); the append is fsynced before
+the LSN is acknowledged.  ``snapshot()`` checkpoints the full segment
+state via :mod:`repro.checkpoint.checkpointer` (atomic tmp-dir + rename
+commit) at the current LSN; :func:`recover` restores the newest committed
+snapshot, replays WAL records with higher LSNs, and truncates at most one
+torn (half-flushed) tail line OFF THE FILE so post-recovery appends start
+a fresh record instead of merging with the partial bytes.  A crash at ANY
+of the :data:`repro.serving.faults.CRASH_SITES` therefore recovers to a
+state whose query results are bit-identical to an unfailed replay.
+
+Concurrency: all mutations (and ``snapshot``/``plan_arrays``) serialize on
+one internal lock, so racing writers — e.g. the serving front door running
+mutations on a thread pool — get distinct LSNs, distinct slots, and a WAL
+whose record order equals LSN order; a plan re-bind never observes a
+half-applied mutation.
 
 ``compact()`` folds delta rows and tombstones back into the main segment:
 survivors are laid out canonically (sorted by user id, zero tail), the IVF
@@ -38,6 +46,7 @@ from __future__ import annotations
 
 import json
 import os
+import threading
 from typing import Any
 
 import jax
@@ -99,6 +108,9 @@ class LiveCorpus:
         self.delta_count = 0
         self._uid_loc: dict[int, tuple[str, int]] = {}
         self._dev: dict[str, Any] = {}
+        # serializes mutations against each other and against plan re-binds
+        # (the serving front door runs mutations on a thread pool)
+        self._lock = threading.RLock()
 
     # -- plumbing -----------------------------------------------------------
 
@@ -117,18 +129,22 @@ class LiveCorpus:
             self._faults.crash_point(site)
 
     def _wal_append(self, rec: dict, torn_site: str | None) -> None:
-        """Durably append one record; ``torn_site`` arms the half-written
-        tail-line crash (flush a prefix, then die) that recovery must shed."""
+        """Durably append one record (flushed + fsynced before the LSN is
+        acknowledged); ``torn_site`` arms the half-written tail-line crash
+        (flush a prefix, then die) that recovery must shed."""
         line = json.dumps(rec, separators=(",", ":"))
         if (torn_site is not None and self._faults is not None
                 and self._faults.armed(torn_site)):
             with open(self.wal_path, "a") as f:
                 f.write(line[: max(1, len(line) // 2)])
+                f.flush()
             self._faults.counters["crashes"] += 1
             raise InjectedCrashError(f"injected crash at {torn_site!r} "
                                      f"(half-flushed WAL line)")
         with open(self.wal_path, "a") as f:
             f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
 
     def _bump(self) -> int:
         return self.catalog.bump_live(self.table, self.column)
@@ -201,19 +217,21 @@ class LiveCorpus:
         WAL append — a rejected insert has no side effects.  Visibility is
         immediate: the next ``ensure_fresh`` re-binds the delta arrays
         (zero retraces) and every Q1-Q6 plan merges the new rows."""
-        ids, vectors = validate_insert(
-            ids, vectors, self.dim, self._uid_loc,
-            self.delta_cap - self.delta_count)
-        cols = self._normalize_columns(columns, len(ids))
-        rec = {"op": "insert", "ids": [int(i) for i in ids],
-               "vecs": [[float(x) for x in v] for v in vectors],
-               "cols": {n: np.asarray(v).tolist() for n, v in cols.items()}}
-        self._crash("wal.pre_append")
-        rec["lsn"] = lsn = self._bump()
-        self._wal_append(rec, torn_site="wal.torn_append")
-        self._crash("wal.post_append")
-        self._apply_insert(ids, vectors, cols, lsn)
-        return lsn
+        with self._lock:
+            ids, vectors = validate_insert(
+                ids, vectors, self.dim, self._uid_loc,
+                self.delta_cap - self.delta_count, self.delta_cap)
+            cols = self._normalize_columns(columns, len(ids))
+            rec = {"op": "insert", "ids": [int(i) for i in ids],
+                   "vecs": [[float(x) for x in v] for v in vectors],
+                   "cols": {n: np.asarray(v).tolist()
+                            for n, v in cols.items()}}
+            self._crash("wal.pre_append")
+            rec["lsn"] = lsn = self._bump()
+            self._wal_append(rec, torn_site="wal.torn_append")
+            self._crash("wal.post_append")
+            self._apply_insert(ids, vectors, cols, lsn)
+            return lsn
 
     def _apply_insert(self, ids, vectors, cols, lsn: int) -> None:
         n = len(ids)
@@ -235,14 +253,15 @@ class LiveCorpus:
         A main-segment delete clears a validity bit that every scan path
         already ANDs into its row mask; a delta-segment delete clears the
         matching delta-validity bit.  No data moves until ``compact()``."""
-        ids = validate_delete(ids, self._uid_loc)
-        rec = {"op": "delete", "ids": [int(i) for i in ids]}
-        self._crash("wal.pre_append")
-        rec["lsn"] = lsn = self._bump()
-        self._wal_append(rec, torn_site="wal.torn_append")
-        self._crash("wal.post_append")
-        self._apply_delete(ids, lsn)
-        return lsn
+        with self._lock:
+            ids = validate_delete(ids, self._uid_loc)
+            rec = {"op": "delete", "ids": [int(i) for i in ids]}
+            self._crash("wal.pre_append")
+            rec["lsn"] = lsn = self._bump()
+            self._wal_append(rec, torn_site="wal.torn_append")
+            self._crash("wal.post_append")
+            self._apply_delete(ids, lsn)
+            return lsn
 
     def _apply_delete(self, ids, lsn: int) -> None:
         touched_main = touched_delta = False
@@ -264,11 +283,13 @@ class LiveCorpus:
     def snapshot(self) -> str:
         """Checkpoint the full segment state at the current LSN (atomic
         tmp-dir + rename commit via the checkpointer); returns the path."""
-        self._crash("snapshot.pre_commit")
-        out = checkpointer.save(self.ckpt_dir, self.lsn, self._state_tree(),
-                                keep_last_k=self.keep_last_k)
-        self._crash("snapshot.post_commit")
-        return out
+        with self._lock:
+            self._crash("snapshot.pre_commit")
+            out = checkpointer.save(self.ckpt_dir, self.lsn,
+                                    self._state_tree(),
+                                    keep_last_k=self.keep_last_k)
+            self._crash("snapshot.post_commit")
+            return out
 
     # -- compaction ---------------------------------------------------------
 
@@ -316,18 +337,19 @@ class LiveCorpus:
         re-register the rebuilt IVF under the version clock — a reader
         never observes a half-compacted corpus, and in-flight plans re-bind
         with zero retraces (index ``nlist``/``cap`` are pinned)."""
-        staged = self._canonical_state()
-        self._crash("compact.pre_log")
-        lsn = self._bump()
-        self._wal_append({"op": "compact", "lsn": lsn}, torn_site=None)
-        self._crash("compact.post_log")
-        staged["lsn"] = np.int64(lsn)
-        staged["compact_lsn"] = np.int64(lsn)
-        checkpointer.save(self.ckpt_dir, lsn, staged,
-                          keep_last_k=self.keep_last_k)
-        self._crash("compact.pre_swap")
-        self._swap_compacted(staged, lsn)
-        return lsn
+        with self._lock:
+            staged = self._canonical_state()
+            self._crash("compact.pre_log")
+            lsn = self._bump()
+            self._wal_append({"op": "compact", "lsn": lsn}, torn_site=None)
+            self._crash("compact.post_log")
+            staged["lsn"] = np.int64(lsn)
+            staged["compact_lsn"] = np.int64(lsn)
+            checkpointer.save(self.ckpt_dir, lsn, staged,
+                              keep_last_k=self.keep_last_k)
+            self._crash("compact.pre_swap")
+            self._swap_compacted(staged, lsn)
+            return lsn
 
     def _swap_compacted(self, staged: dict, lsn: int) -> None:
         self._load_state_tree(staged)
@@ -354,35 +376,40 @@ class LiveCorpus:
 
     def plan_arrays(self) -> dict:
         """Device arrays for compiled plans, cached per segment piece so a
-        delta-only mutation re-uploads only the delta arrays on re-bind."""
+        delta-only mutation re-uploads only the delta arrays on re-bind.
+        Runs under the mutation lock: a re-bind sees either the pre- or the
+        post-mutation segments, never a half-applied state."""
         def dev(key, host):
             if key not in self._dev:
                 self._dev[key] = jnp.asarray(host)
             return self._dev[key]
 
-        if "live_cols" not in self._dev:
-            self._dev["live_cols"] = {n: jnp.asarray(v)
-                                      for n, v in self.cols.items()}
-        if "live_dcols" not in self._dev:
-            self._dev["live_dcols"] = {n: jnp.asarray(v)
-                                       for n, v in self.dcols.items()}
-        return {"corpus": dev("corpus", self.main_vec),
-                "live_main_valid": dev("live_main_valid", self.main_valid),
-                "live_delta_vec": dev("live_delta_vec", self.delta_vec),
-                "live_delta_valid": dev("live_delta_valid",
-                                        self.delta_valid),
-                "live_cols": self._dev["live_cols"],
-                "live_dcols": self._dev["live_dcols"]}
+        with self._lock:
+            if "live_cols" not in self._dev:
+                self._dev["live_cols"] = {n: jnp.asarray(v)
+                                          for n, v in self.cols.items()}
+            if "live_dcols" not in self._dev:
+                self._dev["live_dcols"] = {n: jnp.asarray(v)
+                                           for n, v in self.dcols.items()}
+            return {"corpus": dev("corpus", self.main_vec),
+                    "live_main_valid": dev("live_main_valid",
+                                           self.main_valid),
+                    "live_delta_vec": dev("live_delta_vec", self.delta_vec),
+                    "live_delta_valid": dev("live_delta_valid",
+                                            self.delta_valid),
+                    "live_cols": self._dev["live_cols"],
+                    "live_dcols": self._dev["live_dcols"]}
 
     def freshness(self) -> dict:
         """Observable corpus freshness (surfaced by ``explain()``): delta
         rows awaiting compaction, tombstone count, and the LSN frontier."""
-        return {"delta_rows": int(self.delta_valid.sum()),
-                "tombstones": int(self.tombstones),
-                "live_rows": int(self.main_valid.sum()
-                                 + self.delta_valid.sum()),
-                "lsn": int(self.lsn),
-                "last_compact_lsn": int(self.compact_lsn)}
+        with self._lock:
+            return {"delta_rows": int(self.delta_valid.sum()),
+                    "tombstones": int(self.tombstones),
+                    "live_rows": int(self.main_valid.sum()
+                                     + self.delta_valid.sum()),
+                    "lsn": int(self.lsn),
+                    "last_compact_lsn": int(self.compact_lsn)}
 
     def user_ids(self, slot_ids) -> np.ndarray:
         """Map plan-result slot ids (main slot, or cap_main + delta slot;
@@ -390,10 +417,11 @@ class LiveCorpus:
         slots = np.asarray(slot_ids)
         flat = slots.reshape(-1)
         out = np.full(flat.shape, -1, np.int64)
-        main = (flat >= 0) & (flat < self.cap_main)
-        out[main] = self.main_uids[flat[main]]
-        delta = flat >= self.cap_main
-        out[delta] = self.delta_uids[flat[delta] - self.cap_main]
+        with self._lock:
+            main = (flat >= 0) & (flat < self.cap_main)
+            out[main] = self.main_uids[flat[main]]
+            delta = flat >= self.cap_main
+            out[delta] = self.delta_uids[flat[delta] - self.cap_main]
         return out.reshape(slots.shape)
 
 
@@ -441,13 +469,19 @@ def attach_live(catalog: Catalog, table: str, column: str, path: str, *,
             "seed": int(seed), "iters": int(iters),
             "keep_last_k": int(keep_last_k), "metric": spec.metric.name,
             "cols": {n: np.asarray(tab[n]).dtype.str for n in col_names}}
+    uids = (np.arange(n0, dtype=np.int64) if ids is None
+            else np.asarray(ids, np.int64))
+    # validate BEFORE touching disk: a rejected attach must leave no
+    # partial on-disk state (a bare meta.json would make a later recover()
+    # fail with 'no committed snapshot' instead of 'never attached')
+    if uids.shape != (n0,):
+        raise ValueError(f"attach ids must have shape ({n0},), "
+                         f"got {tuple(uids.shape)}")
+    if len(np.unique(uids)) != n0:
+        raise ValueError("attach ids must be unique")
     os.makedirs(path, exist_ok=True)
     _write_meta(path, meta)
     live = LiveCorpus(catalog, meta, path, faults=faults)
-    uids = (np.arange(n0, dtype=np.int64) if ids is None
-            else np.asarray(ids, np.int64))
-    if len(np.unique(uids)) != n0:
-        raise ValueError("attach ids must be unique")
     live.main_vec[:n0] = vectors
     live.main_valid[:n0] = np.asarray(tab.valid)
     live.main_uids[:n0] = uids
@@ -463,24 +497,29 @@ def attach_live(catalog: Catalog, table: str, column: str, path: str, *,
     return live
 
 
-def _read_wal(wal_path: str) -> list[dict]:
-    """Parse the WAL, dropping at most one torn (half-flushed) tail line;
-    corruption anywhere else is a hard error."""
+def _read_wal(wal_path: str) -> tuple[list[dict], int]:
+    """Parse the WAL; returns ``(records, durable_bytes)``.
+
+    ``durable_bytes`` is the length of the longest prefix ending at a
+    complete newline-terminated record — at most one torn (half-flushed,
+    unterminated) tail line past it is shed.  Every successful append
+    terminates its record, so a corrupt *terminated* line is a hard
+    error anywhere in the file."""
     if not os.path.exists(wal_path):
-        return []
-    with open(wal_path) as f:
-        lines = f.read().splitlines()
-    out = []
-    for i, line in enumerate(lines):
-        if not line.strip():
-            continue
-        try:
-            out.append(json.loads(line))
-        except json.JSONDecodeError:
-            if i == len(lines) - 1:
-                break                      # torn tail from a mid-append crash
-            raise MutationError(f"corrupt WAL record at line {i + 1}")
-    return out
+        return [], 0
+    with open(wal_path, "rb") as f:
+        chunks = f.read().split(b"\n")
+    out, durable = [], 0
+    # every chunk but the last was newline-terminated; the last is either
+    # b"" (file ends cleanly) or the torn tail of a mid-append crash
+    for i, chunk in enumerate(chunks[:-1]):
+        if chunk.strip():
+            try:
+                out.append(json.loads(chunk))
+            except json.JSONDecodeError:
+                raise MutationError(f"corrupt WAL record at line {i + 1}")
+        durable += len(chunk) + 1
+    return out, durable
 
 
 def recover(catalog: Catalog, table: str, column: str, path: str, *,
@@ -489,10 +528,12 @@ def recover(catalog: Catalog, table: str, column: str, path: str, *,
 
     Restores the newest committed snapshot, replays WAL records with LSNs
     past it (``compact`` records recompute the canonical state
-    deterministically), fast-forwards the catalog clock past every replayed
-    LSN, and re-registers corpus + IVF.  The recovered state's query
-    results are bit-identical to an unfailed replay of the same mutation
-    sequence — the chaos suite asserts exactly that at every crash site."""
+    deterministically), truncates any torn (half-flushed) tail line off
+    the WAL so the next append starts a fresh record, fast-forwards the
+    catalog clock past every replayed LSN, and re-registers corpus + IVF.
+    The recovered state's query results are bit-identical to an unfailed
+    replay of the same mutation sequence — the chaos suite asserts exactly
+    that at every crash site."""
     with open(os.path.join(path, "meta.json")) as f:
         meta = json.load(f)
     if meta["table"] != table or meta["column"] != column:
@@ -506,8 +547,16 @@ def recover(catalog: Catalog, table: str, column: str, path: str, *,
     tree = checkpointer.restore(live.ckpt_dir, step, live._state_tree())
     live._load_state_tree(tree)
     live._rebuild_uid_map()
+    records, durable = _read_wal(live.wal_path)
+    if (os.path.exists(live.wal_path)
+            and os.path.getsize(live.wal_path) > durable):
+        # shed the torn tail ON DISK too: a later append must start a fresh
+        # line, not merge with the partial bytes into one corrupt record
+        with open(live.wal_path, "rb+") as f:
+            f.truncate(durable)
+            os.fsync(f.fileno())
     max_lsn = live.lsn
-    for rec in _read_wal(live.wal_path):
+    for rec in records:
         lsn = int(rec["lsn"])
         max_lsn = max(max_lsn, lsn)
         if lsn <= live.lsn:

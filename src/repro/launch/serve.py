@@ -163,8 +163,11 @@ class QueryServer:
         validated at the door by the corpus itself (typed
         :class:`~repro.serving.resilience.MutationError` subclasses).  The
         WAL append + segment update run on the executor thread so the event
-        loop never blocks on disk; queries racing the mutation see either
-        the pre- or post-mutation corpus, never a torn state."""
+        loop never blocks on disk; :class:`~repro.data.mutations.LiveCorpus`
+        serializes mutations (and plan re-binds) on its internal lock, so
+        concurrent submits get distinct LSNs and slots with WAL order equal
+        to LSN order, and queries racing a mutation see either the pre- or
+        post-mutation corpus, never a torn state."""
         from ..core.compiler import _scan_of
         from ..serving.resilience import MutationError
         if not self._running:

@@ -124,19 +124,23 @@ class DeltaFullError(MutationError):
     """The delta segment has no free slots — mutation backpressure.
 
     The write-side analogue of :class:`BackpressureError`: carries the
-    segment capacity and a ``compact_hint`` telling the client the segment
-    drains via ``compact()`` (a retry without compaction will fail again)."""
+    segment ``capacity``, the remaining ``free_slots``, and a
+    ``compact_hint`` telling the client the segment drains via
+    ``compact()`` (a retry without compaction will fail again)."""
 
-    def __init__(self, capacity: int, requested: int):
+    def __init__(self, capacity: int, requested: int, free_slots: int):
         super().__init__(
-            f"delta segment full ({capacity} slots, {requested} more "
-            f"requested); run compact() to fold deltas into the main index")
+            f"delta segment full ({free_slots} of {capacity} slots free, "
+            f"{requested} more requested); run compact() to fold deltas "
+            f"into the main index")
         self.capacity = capacity
+        self.free_slots = free_slots
         self.requested = requested
         self.compact_hint = True
 
 
-def validate_insert(ids, vectors, dim: int, live_ids, free_slots: int):
+def validate_insert(ids, vectors, dim: int, live_ids, free_slots: int,
+                    delta_cap: int):
     """Admission checks for an insert batch; returns (ids, vectors) as numpy.
 
     Raises :class:`DuplicateIdError` (id already live, or repeated within
@@ -161,7 +165,9 @@ def validate_insert(ids, vectors, dim: int, live_ids, free_slots: int):
         raise DuplicateIdError(sorted(set(existing) |
                                       {int(i) for i in batch_dups}))
     if ids.shape[0] > free_slots:
-        raise DeltaFullError(capacity=free_slots, requested=int(ids.shape[0]))
+        raise DeltaFullError(capacity=delta_cap,
+                             requested=int(ids.shape[0]),
+                             free_slots=free_slots)
     return ids, vectors
 
 

@@ -289,15 +289,46 @@ def test_typed_mutation_errors_leave_no_partial_state(tmp_path):
         live.delete([123456])
     with pytest.raises(InvalidVectorError):
         live.insert([5000], np.full((1, DIM), np.nan, np.float32))
-    with pytest.raises(DeltaFullError):
+    with pytest.raises(DeltaFullError) as excinfo:
         live.insert(np.arange(5000, 5009),
                     rng.standard_normal((9, DIM)).astype(np.float32))
+    assert excinfo.value.capacity == 8   # the SEGMENT capacity, not free
+    assert excinfo.value.free_slots == 8
+    assert excinfo.value.requested == 9
     with pytest.raises(MutationError):
         live.insert([6000], ok, {"no_such_col": [1]})
     with pytest.raises(MutationError):   # dim mismatch
         live.insert([6000], np.zeros((1, DIM + 1), np.float32))
     assert live.freshness() == before    # failed mutations applied nothing
     assert live.lsn == before["lsn"]
+
+
+def test_concurrent_mutations_serialize(tmp_path):
+    """Racing inserts from a thread pool (the serving front door's executor
+    shape) must fully serialize: distinct LSNs, distinct slots with each
+    batch's own vectors intact, and WAL record order equal to LSN order so
+    replay reproduces the live application order."""
+    from concurrent.futures import ThreadPoolExecutor
+
+    from repro.data.mutations import _read_wal
+
+    cat = _catalog()
+    live = attach_live(cat, "products", "embedding", os.fspath(tmp_path),
+                       delta_cap=DELTA_CAP, cap_main=CAP_MAIN)
+    rng = np.random.default_rng(3)
+    vecs = rng.standard_normal((12, DIM)).astype(np.float32)
+    with ThreadPoolExecutor(max_workers=8) as ex:
+        lsns = list(ex.map(
+            lambda i: live.insert([4000 + i], vecs[i:i + 1]), range(12)))
+    assert len(set(lsns)) == 12          # no two writers shared an LSN
+    assert live.delta_count == 12        # no batch overwrote another's slot
+    for i in range(12):
+        seg, slot = live._uid_loc[4000 + i]
+        assert seg == "d"
+        np.testing.assert_array_equal(live.delta_vec[slot], vecs[i])
+    records, _ = _read_wal(live.wal_path)
+    wal_lsns = [r["lsn"] for r in records]
+    assert wal_lsns == sorted(wal_lsns)  # WAL order == LSN order
 
 
 def test_explain_surfaces_freshness(tmp_path):

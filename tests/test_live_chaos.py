@@ -136,6 +136,40 @@ def test_crash_recovers_bit_identical(tmp_path, seed, site):
     _tree_equal(rec._state_tree(), states[rec.lsn])
 
 
+@pytest.mark.parametrize("seed", [0, 1])
+def test_torn_tail_truncated_so_later_mutations_survive(tmp_path, seed):
+    """Recovery must truncate a torn WAL tail ON DISK: an append after a
+    torn-tail recovery starts a fresh record instead of merging with the
+    partial bytes, so a second recovery replays it (nothing corrupt,
+    nothing silently dropped)."""
+    cat, _ = _mk_catalog(seed)
+    faults = FaultInjector(FaultSpec(seed=seed, crash_site="wal.torn_append",
+                                     crash_at=2))
+    live = _attach(cat, os.fspath(tmp_path / "a"), seed, faults=faults)
+    with pytest.raises(InjectedCrashError):
+        for op in _ops(seed):
+            _apply(live, op)
+
+    cat2, _ = _mk_catalog(seed)
+    rec = recover(cat2, "items", "vec", os.fspath(tmp_path / "a"))
+    with open(rec.wal_path, "rb") as f:
+        raw = f.read()
+    assert raw.endswith(b"\n")           # the half-flushed tail is gone
+
+    # mutate PAST the recovery — the review scenario: these appends landed
+    # after the partial bytes before the fix, corrupting the log
+    rng = np.random.default_rng(7)
+    v = rng.standard_normal((2, DIM)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    rec.insert([900, 901], v, {"price": np.full(2, 1.5, np.float32)})
+    rec.delete([900])
+
+    cat3, _ = _mk_catalog(seed)
+    rec2 = recover(cat3, "items", "vec", os.fspath(tmp_path / "a"))
+    assert rec2.lsn == rec.lsn
+    _tree_equal(rec2._state_tree(), rec._state_tree())
+
+
 @pytest.mark.parametrize("seed", [0, 2])
 def test_recovered_corpus_equals_from_scratch_index(tmp_path, seed):
     """Compact the recovered corpus: segments AND the rebuilt IVF must be
