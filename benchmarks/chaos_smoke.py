@@ -296,15 +296,21 @@ def _run_live_recovery(seed: int) -> dict:
         x = rng.standard_normal((n, dim)).astype(np.float32)
         return x / np.linalg.norm(x, axis=1, keepdims=True)
 
-    fresh = [v(5), v(3), v(2)]
-    seq = [lambda l: l.insert(np.arange(100, 105), fresh[0]),
-           lambda l: l.delete([3, 102]),
-           lambda l: l.snapshot(),
-           lambda l: l.insert(np.arange(200, 203), fresh[1]),
-           lambda l: l.compact(),
-           lambda l: l.insert(np.arange(300, 302), fresh[2]),
-           lambda l: l.delete([200, 10]),
-           lambda l: l.compact()]
+    fresh = [v(5), v(3), v(2), v(3), v(2)]
+    group = [(np.arange(400, 403), fresh[3]),
+             (np.arange(410, 412), fresh[4])]
+    base = [lambda l: l.insert(np.arange(100, 105), fresh[0]),
+            lambda l: l.delete([3, 102]),
+            lambda l: l.snapshot(),
+            lambda l: l.insert(np.arange(200, 203), fresh[1]),
+            lambda l: l.compact(),
+            lambda l: l.insert(np.arange(300, 302), fresh[2]),
+            lambda l: l.delete([200, 10]),
+            lambda l: l.compact()]
+    seq = base + [lambda l: l.insert_batch(group)]
+    # the replay expands the group commit into sequential inserts — same
+    # LSNs, same state (so a torn group tail recovers to a recorded LSN)
+    replay_seq = base + [lambda l, g=g: l.insert(g[0], g[1]) for g in group]
 
     def attach(cat, path, faults=None):
         return attach_live(cat, "items", "vec", path, delta_cap=16,
@@ -328,7 +334,7 @@ def _run_live_recovery(seed: int) -> dict:
         # LSNs, so the durable frontier lines up bitwise)
         replay = attach(mk_catalog(), f"{tmp}/replay")
         states = {replay.lsn: copy.deepcopy(replay._state_tree())}
-        for step in seq:
+        for step in replay_seq:
             step(replay)
             states[replay.lsn] = copy.deepcopy(replay._state_tree())
 

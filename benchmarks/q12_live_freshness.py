@@ -93,9 +93,10 @@ def run(env: BenchEnv, rows: list, batches=BATCHES) -> dict:
 
         # -- zero-delta batch sweep (the frozen-flat-parity workload) -----
         # b1 rides the batch lowering at Q=1 (compiler._single_via_batch:
-        # live plans have no dedicated single pipeline), so it carries a
-        # structural per-call overhead the batched rows do not; the gate
-        # covers batches >= 8
+        # live plans have no dedicated single pipeline), but the Q=1 +
+        # 1-D validity-lane fast path routes it through the single-query
+        # fused kernel, so it no longer pays the (Q, N) mask broadcast
+        # and gates alongside the batched rows
         base_qps = None
         for b in batches:
             qs = _queries(qvecs, b)

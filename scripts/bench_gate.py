@@ -33,10 +33,16 @@ Rows gated:
     committed QPS like every other row, AND live-vs-frozen-twin overhead
     within one run (the q12 report carries a frozen ``frozen_qps`` twin
     measured back-to-back, so the <20% zero-delta regression bound never
-    rides cross-run machine noise).  ``batch: 1`` is tracked-not-gated:
-    live single queries reuse the batch lowering at Q=1
-    (``compiler._single_via_batch``) and carry its documented per-call
-    overhead.
+    rides cross-run machine noise).  ``batch: 1`` gates too: live single
+    queries reuse the batch lowering at Q=1 (``compiler._single_via_batch``)
+    but the Q=1 + 1-D validity-lane fast path routes them through the
+    single-query fused kernel, so b1 no longer pays the (Q, N) broadcast.
+  * BENCH_quant.json: flat quantized-scan rows (key: batch, qps) — the
+    same interpret-mode fused-kernel stability argument as BENCH_batch,
+    per mode (fp32 / bf16 / int8).  Two gates: fresh-vs-committed QPS per
+    (mode, batch) row, AND the within-run speedup contract int8 b64 QPS
+    >= 1.5x fp32 b64 QPS (both measured back-to-back in one q13 run, so
+    the ratio never rides cross-run machine noise).
 
 Exit codes: 0 pass/skip (no committed baseline, or git unavailable),
 1 regression.  Tolerance: BENCH_GATE_TOL env var (default 0.20 = 20%).
@@ -182,16 +188,15 @@ def main() -> int:
     if base and fresh and _same_config("BENCH_live.json", base, fresh,
                                        ("flat_rows", "dim", "k",
                                         "delta_cap", "cap_main")):
-        # batched rows only; b1 is tracked-not-gated (see module docstring)
-        def live_rows(report: dict) -> list:
-            return [e for e in report.get("zero_delta", [])
-                    if e.get("batch", 0) >= 8]
-
-        checked += _gate_rows("live.zero_delta", live_rows(base),
-                              live_rows(fresh), "batch", "qps", failures)
+        # every row gates, b1 included: the Q=1 validity-lane fast path
+        # put live single queries on the single-query fused kernel
+        checked += _gate_rows("live.zero_delta",
+                              base.get("zero_delta", []),
+                              fresh.get("zero_delta", []),
+                              "batch", "qps", failures)
     # live-vs-frozen twin bound, within one run (fresh if present)
     for e in ((fresh or base) or {}).get("zero_delta", []):
-        if e.get("batch", 0) < 8 or "frozen_qps" not in e:
+        if "frozen_qps" not in e:
             continue
         checked += 1
         floor = (1.0 - TOL) * e["frozen_qps"]
@@ -201,6 +206,35 @@ def main() -> int:
                 f"{e['qps']:.1f} < {floor:.1f} "
                 f"(same-run frozen twin {e['frozen_qps']:.1f}, "
                 f"tol {TOL:.0%})")
+
+    base = _committed("BENCH_quant.json")
+    fresh = _fresh("BENCH_quant.json")
+    if base and fresh and _same_config("BENCH_quant.json", base, fresh,
+                                       ("n_rows", "dim", "k",
+                                        "rescore_factor")):
+        for mode in ("fp32", "bf16", "int8"):
+            checked += _gate_rows(
+                f"quant.{mode}", base.get("workloads", {}).get(mode, []),
+                fresh.get("workloads", {}).get(mode, []),
+                "batch", "qps", failures)
+    # within-run speedup contract: the quantized scan must EARN its keep —
+    # int8 b64 QPS >= 1.5x fp32 b64 QPS, both timed back-to-back in one
+    # q13 run so the ratio never rides cross-run machine noise
+    rep = (fresh or base) or {}
+
+    def _b64_qps(mode: str):
+        for e in rep.get("workloads", {}).get(mode, []):
+            if e.get("batch") == 64:
+                return e.get("qps")
+        return None
+
+    i8, f32 = _b64_qps("int8"), _b64_qps("fp32")
+    if i8 is not None and f32 is not None:
+        checked += 1
+        if i8 < 1.5 * f32:
+            failures.append(
+                f"quant.speedup[batch=64]: int8 {i8:.1f} < 1.5x fp32 "
+                f"{f32:.1f} (same-run ratio {i8 / f32:.2f}x)")
 
     if checked == 0:
         print("bench_gate: no committed baselines to compare against — skip")

@@ -5,7 +5,7 @@ Two checks, both hard CI failures (wired into scripts/smoke.sh):
 
 1. **Docstring coverage** — every module, public module-level function,
    public class, and public method of a public class under
-   ``src/repro/api``, ``src/repro/dist``, ``src/repro/core``,
+   ``src/repro/api``, ``src/repro/dist``, ``src/repro/core``, ``src/repro/kernels``,
    ``src/repro/serving``, ``src/repro/data``, and ``src/repro/index``
    (plus the ``src/repro/launch/serve.py`` front door) must carry a
    docstring.  Private names (leading underscore, including dunders) are
@@ -34,8 +34,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # packages (every .py in the dir) or single .py files
 DOC_PACKAGES = ("src/repro/api", "src/repro/dist", "src/repro/core",
-                "src/repro/serving", "src/repro/data", "src/repro/index",
-                "src/repro/launch/serve.py")
+                "src/repro/kernels", "src/repro/serving", "src/repro/data",
+                "src/repro/index", "src/repro/launch/serve.py")
 REF_SCAN_DIRS = ("src", "benchmarks", "scripts", "tests", "examples", "docs")
 REF_SCAN_ROOT_MD = True       # also scan *.md at the repo root
 

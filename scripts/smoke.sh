@@ -3,7 +3,8 @@
 # integration tests are deselected by pytest.ini) plus the quick benchmark
 # sweep (q1 latency/recall, q7 batched QPS, q8 scheduler smoke, q9 plan
 # cache, q10 sharded scan, q11 overload goodput, q12 live-corpus
-# freshness, q34 batch-native joins, t5 counters) on the tiny catalog —
+# freshness, q13 quantized-scan QPS with recall==1.0 hard-asserted, q34
+# batch-native joins, t5 counters) on the tiny catalog —
 # q34 exercises the join families
 # end-to-end on both lowerings, q8 the dynamic batch scheduler (Poisson
 # policies + effort-bucketed IVF), q10 the multi-device sharded lowering

@@ -130,6 +130,9 @@ class Database:
         if hints.join_lowering is not None:
             eff_options = dataclasses.replace(
                 eff_options, join_lowering=hints.join_lowering)
+        if hints.rescore_factor is not None:
+            eff_options = dataclasses.replace(
+                eff_options, rescore_factor=hints.rescore_factor)
         plan = parse_sql(sql)
         fp, param_order = plan_fingerprint(plan)
         key = (fp, eff_options.fingerprint(),
@@ -375,8 +378,11 @@ class Statement:
         both are bit-identical to the legacy ``CompiledQuery`` surfaces."""
         self.ensure_fresh()
         hints = self.hints if hints is None else hints
-        if hints.join_lowering is not None and (
-                hints.join_lowering != self.compiled.options.join_lowering):
+        if (hints.join_lowering is not None
+                and hints.join_lowering != self.compiled.options.join_lowering
+                ) or (hints.rescore_factor is not None
+                      and hints.rescore_factor
+                      != self.compiled.options.rescore_factor):
             # compile-affecting hint: re-route through the plan cache (a
             # distinct options fingerprint is a distinct — cached — entry),
             # carrying this statement's options base and static binds

@@ -31,6 +31,13 @@ class ExecutionHints:
     * ``join_lowering`` — override ``EngineOptions.join_lowering`` for this
       statement.  Compile-affecting: a differing override re-prepares through
       the plan cache (a distinct options fingerprint is a distinct entry).
+    * ``rescore_factor`` — override ``EngineOptions.rescore_factor`` for
+      this statement: the candidate multiple c of the quantized scan's
+      fused fp32 rescore (DESIGN.md §13; only meaningful when the plan
+      compiled with ``EngineOptions.quant``).  Compile-affecting like
+      ``join_lowering``: a differing override re-prepares through the plan
+      cache.  Raise it on adversarial near-tie corpora where the default
+      candidate set is too small for bit-exactness.
     * ``deadline_ms`` / ``priority`` — serving-tier hints (DESIGN.md §11):
       when a statement is served through a scheduler the request carries this
       relative deadline (shed if still queued past it) and drain priority.
@@ -41,6 +48,7 @@ class ExecutionHints:
     pilot_budget: int = 0
     exact_shape: bool = False
     join_lowering: str | None = None
+    rescore_factor: int | None = None
     deadline_ms: float | None = None
     priority: int = 0
 
@@ -67,6 +75,12 @@ class ExecutionHints:
             raise ValueError(
                 f"join_lowering must be one of {_JOIN_LOWERINGS[1:]}, "
                 f"got {self.join_lowering!r}")
+        if self.rescore_factor is not None and (
+                not isinstance(self.rescore_factor, int)
+                or self.rescore_factor < 1):
+            raise ValueError(
+                f"rescore_factor must be an int >= 1, "
+                f"got {self.rescore_factor!r}")
         if self.exact_shape and self.pilot_budget > 0:
             raise ValueError(
                 "exact_shape and pilot_budget are mutually exclusive: "

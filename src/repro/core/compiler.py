@@ -79,6 +79,11 @@ def _catalog_dep_keys(a: Analysis, catalog: Catalog,
                 ("index",) + scan]
     if options.dist is not None:
         keys.append(("sharded",) + scan)
+    if options.quant is not None and catalog.live_for(*scan) is None:
+        # frozen quantized twin: a re-registered same-shape twin re-binds
+        # in place (live twins instead ride the live key — mutations bump
+        # it, and the twin caches on the LiveCorpus device dict)
+        keys.append(("quantized",) + scan)
     if catalog.live_for(*scan) is not None:
         # every insert/delete/compact bumps this key: mutations become
         # visible through the in-place array re-bind, zero retraces
@@ -465,6 +470,13 @@ class CompiledQuery:
         """AOT lowering for inspection (HLO text, cost analysis)."""
         return self._jitted.lower(self._arrays, dict(binds))
 
+    def lower_batch(self, binds_list: list[dict] | None = None, **stacked):
+        """AOT lowering of the BATCHED executable (HLO text, cost
+        analysis) — what ``execute_batch`` would run at this Q."""
+        self.ensure_fresh()
+        binds = self._stack_binds(binds_list, stacked)
+        return self._batch_jitted.lower(self._arrays, binds)
+
     def explain(self) -> str:
         """Engine/class/lowering summary plus both plan trees, as text."""
         out = [f"-- engine: {self.options.engine}",
@@ -538,7 +550,66 @@ def _gather_arrays(a: Analysis, catalog: Catalog,
                 catalog.register_sharded(scan_table, scan_column, sharded)
         arrays["dcorpus"] = sharded.corpus
         arrays["drow_ids"] = sharded.row_ids
+    if options is not None and options.quant is not None:
+        from ..data.quantized import quantize_corpus
+        if live is not None:
+            # keyed off the live device cache: compaction (the only
+            # mutation that moves main-segment vectors) clears it, so the
+            # twin re-quantizes exactly when the fp32 source moved; the
+            # delta segment stays fp32 (it is small and mutation-hot)
+            key = f"quant:{options.quant}"
+            quant = live._dev.get(key)
+            if quant is None:
+                quant = quantize_corpus(arrays["corpus"], options.quant)
+                live._dev[key] = quant
+        else:
+            quant = catalog.quantized_for(scan_table, scan_column,
+                                          options.quant)
+            if quant is None:
+                quant = quantize_corpus(arrays["corpus"], options.quant)
+                catalog.register_quantized(scan_table, scan_column, quant)
+        arrays.update(quant.plan_arrays())
+        if options.dist is not None:
+            arrays.update(_sharded_quant(catalog, live, options, arrays,
+                                         scan_table, scan_column)
+                          .plan_arrays(prefix="d"))
     return arrays
+
+
+def _sharded_quant(catalog, live, options, arrays, scan_table: str,
+                   scan_column: str):
+    """The quantized twin of the SHARDED corpus (divisibility-padded rows
+    included — all-zero pads quantize to zero and are masked by row_id=-1),
+    each per-row array device_put onto the dist mesh with the same row
+    sharding as ``dcorpus``.  Cached like the sharded handle itself:
+    per-(mode, spec) on the catalog, or on the live device cache."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    from ..data.quantized import QuantizedCorpus, quantize_corpus
+    from ..dist.sharding import resolve_mesh
+    if live is not None:
+        key = f"quant:{options.quant}:dist:{options.dist!r}"
+        dq = live._dev.get(key)
+    else:
+        dq = catalog.quantized_for(scan_table, scan_column,
+                                   (options.quant, options.dist))
+    if dq is None:
+        raw = quantize_corpus(arrays["dcorpus"], options.quant)
+        mesh = resolve_mesh(options.dist)
+        rows = NamedSharding(mesh, PartitionSpec(options.dist.axes, None))
+        lane = NamedSharding(mesh, PartitionSpec(options.dist.axes))
+        dq = QuantizedCorpus(
+            mode=raw.mode,
+            qvecs=jax.device_put(raw.qvecs, rows),
+            scales=jax.device_put(raw.scales, rows),
+            half_step=jax.device_put(raw.half_step, lane),
+            row_l1=jax.device_put(raw.row_l1, lane),
+            row_l2=jax.device_put(raw.row_l2, lane))
+        if live is not None:
+            live._dev[f"quant:{options.quant}:dist:{options.dist!r}"] = dq
+        else:
+            catalog.register_quantized(scan_table, scan_column, dq,
+                                       key=(options.quant, options.dist))
+    return dq
 
 
 def _vmap_fallback(fn: Callable) -> Callable:
@@ -641,10 +712,51 @@ def _validate_live(a: Analysis, catalog: Catalog,
             "live twin")
 
 
-def _single_via_batch(bfn: Callable) -> Callable:
-    """Single-query front for distributed plans.
+def _validate_quant(options: EngineOptions) -> None:
+    """Reject option combinations the quantized lowering cannot honor.
 
-    A dist plan has ONE lowering — the query-batched sharded scan — so the
+    The quantized scan IS the fused batched kernel path (DESIGN.md §13):
+    no jnp twin exists, and the comparison engines' plan-structural
+    inefficiencies would be silently bypassed — same restriction (and
+    same reasoning) as the distributed lowering (:func:`_validate_dist`).
+    IVF probes stay fp32-exact under quant (their key-dependent
+    early-stop would be perturbed), so engine 'chase' composes: flat
+    scans quantize, probes do not."""
+    if options.quant is None:
+        if options.rescore_factor < 1:
+            raise ValueError(
+                f"EngineOptions.rescore_factor must be >= 1, got "
+                f"{options.rescore_factor}")
+        return
+    from ..data.quantized import MODES
+    if options.quant not in MODES:
+        raise ValueError(
+            f"EngineOptions.quant must be one of {MODES} (or None), got "
+            f"{options.quant!r}")
+    if not options.use_pallas:
+        raise ValueError(
+            "EngineOptions.quant requires use_pallas=True: the quantized "
+            "lowering IS the fused kernel path (no jnp twin)")
+    if options.engine not in ("chase", "brute"):
+        raise ValueError(
+            f"EngineOptions.quant is exact (fused fp32 rescore) and only "
+            f"composes with engine 'chase' or 'brute', not "
+            f"{options.engine!r}")
+    if options.join_lowering != "batch":
+        raise ValueError(
+            "EngineOptions.quant requires join_lowering='batch': the "
+            "quantized kernels are query-batched; the perleft loop has no "
+            "quantized twin")
+    if options.rescore_factor < 1:
+        raise ValueError(
+            f"EngineOptions.rescore_factor must be >= 1, got "
+            f"{options.rescore_factor}")
+
+
+def _single_via_batch(bfn: Callable) -> Callable:
+    """Single-query front for distributed / live / quantized plans.
+
+    These plans have ONE lowering — the query-batched scan — so the
     single-query pipeline runs it at Q=1 and slices the leading axis off
     every output leaf (bit-identical to a one-element batch; no separate
     single-query shard_map to compile or maintain)."""
@@ -687,13 +799,15 @@ def compile_plan(sql: str, plan: PlanNode, catalog: Catalog,
             "plan did not match a hybrid pattern; use the interpreter engine")
     _validate_dist(options)
     _validate_live(a, catalog, options)
+    _validate_quant(options)
     rewritten = rewrite(a)
     arrays = _gather_arrays(a, catalog, options)
     batch_builder, batch_native, batch_reason = _batch_lowering(a, options)
-    if options.dist is not None or catalog.live_for(*_scan_of(a)) is not None:
-        # one lowering per dist OR live plan: the batched pipeline (which
-        # carries the delta merge / shard composition) serves the
-        # single-query path at Q=1 (see _single_via_batch)
+    if (options.dist is not None or options.quant is not None
+            or catalog.live_for(*_scan_of(a)) is not None):
+        # one lowering per dist, live, OR quant plan: the batched pipeline
+        # (which carries the delta merge / shard composition / quantized
+        # rescore) serves the single-query path at Q=1 (_single_via_batch)
         bfn = batch_builder(a, catalog, options, Bindings(static_binds))
         fn = _single_via_batch(bfn)
     else:

@@ -71,6 +71,20 @@ class EngineOptions:
     # index probes are bypassed (a row-sharded corpus has no co-sharded IVF
     # gather yet), so only engines 'chase' and 'brute' compose with it.
     dist: "DistSpec | None" = None
+    # Quantized corpus scan (DESIGN.md §13): stream the int8 (per-row
+    # symmetric scale) or bf16 twin of the scanned column through the
+    # quantized Pallas kernels and re-rank the top-(rescore_factor·K)
+    # candidates against the fp32 originals — 4×/2× fewer corpus bytes,
+    # results bit-identical to the fp32 path.  Requires use_pallas; only
+    # engines 'chase' and 'brute' compose (IVF probes stay fp32-exact —
+    # their key-dependent early-stop would be perturbed by quantized
+    # keys).  Fingerprint-affecting, like every field here.
+    quant: str | None = None       # None | 'int8' | 'bf16'
+    # Candidate multiple c for the fused fp32 rescore: the quantized scan
+    # keeps c·K candidates per query (c·capacity boundary rows for range).
+    # 2 is bit-exact on every parity suite; raise for adversarial
+    # near-tie corpora (ExecutionHints.rescore_factor folds in here).
+    rescore_factor: int = 2
 
     def fingerprint(self) -> str:
         """Stable serialization for the plan-cache key: every field shapes
@@ -219,6 +233,24 @@ def _flat_topk(opts: EngineOptions, flat: FlatIndex, q, k, row_mask):
     return flat.topk(q, k, row_mask)
 
 
+def _flat_topk_batch(opts: EngineOptions, arrays, metric: Metric, corpus,
+                     qs, k: int, row_mask, qvalid=None):
+    """Fused flat batched top-k; routes through the quantized lowering
+    (DESIGN.md §13) when ``EngineOptions.quant`` is set — the quantized
+    twin's arrays ride the plan's ``arrays`` dict (``qvecs``/``qscales``),
+    so Catalog re-registrations re-bind with zero retraces."""
+    if opts.quant is not None:
+        from ..kernels.quant import fused_scan_topk_batch_q
+        return fused_scan_topk_batch_q(
+            corpus, arrays["qvecs"], arrays["qscales"], qs, k, row_mask,
+            metric, rescore_factor=opts.rescore_factor,
+            interpret=opts.interpret_pallas, qvalid=qvalid)
+    from ..kernels.ops import fused_scan_topk_batch
+    return fused_scan_topk_batch(corpus, qs, k, row_mask, metric,
+                                 interpret=opts.interpret_pallas,
+                                 qvalid=qvalid)
+
+
 def _flat_evals(qvalid, m: int, n: int) -> jnp.ndarray:
     """Per-query flat-scan distance-eval counters; size-bucket pad queries
     (qvalid False) contribute zero."""
@@ -228,10 +260,12 @@ def _flat_evals(qvalid, m: int, n: int) -> jnp.ndarray:
 
 def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
                            qs, radius, row_mask, capacity: int,
-                           qvalid=None):
+                           qvalid=None, arrays=None):
     """Flat range scan over a (M, d) query batch, compacted to ``capacity``.
 
-    Dispatch: the query-tiled Pallas kernel (``use_pallas``) or a vmapped
+    Dispatch: the quantized Pallas kernel (``opts.quant``, slack-band
+    boundary rescore — needs the plan ``arrays`` for the quantized twin),
+    the query-tiled fp32 Pallas kernel (``use_pallas``), or a vmapped
     exact scan.  ``radius`` is a scalar or (M,); ``row_mask`` None, shared
     (N,) (a live validity lane), or per-query (M, N);
     ``qvalid`` None or (M,) bool (size-bucket pad queries register no hits
@@ -241,7 +275,14 @@ def _flat_range_topk_batch(opts: EngineOptions, metric: Metric, corpus,
     m, n = qs.shape[0], corpus.shape[0]
     cap = min(int(capacity), n)
     radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (m,))
-    if opts.use_pallas:
+    if opts.use_pallas and opts.quant is not None:
+        from ..kernels.quant import fused_range_topk_batch_q
+        ids, sims, valid, count = fused_range_topk_batch_q(
+            corpus, arrays["qvecs"], arrays["qscales"], arrays["qhalf"],
+            arrays["ql1"], arrays["ql2"], qs, radius, row_mask, metric,
+            cap, rescore_factor=opts.rescore_factor,
+            interpret=opts.interpret_pallas, qvalid=qvalid)
+    elif opts.use_pallas:
         from ..kernels.ops import fused_range_topk_batch
         ids, sims, valid, count = fused_range_topk_batch(
             corpus, qs, radius, row_mask, metric, cap,
@@ -359,18 +400,32 @@ def _dist_topk_core(opts: EngineOptions, metric: Metric, k: int,
     single-device flat path — N distance evals per valid query, 0 probes).
     ``per_query_mask`` is static per plan: whether this plan evaluates a
     row predicate into a (Q, N) mask (see :func:`_dist_mask`)."""
-    from ..dist.collectives import distributed_topk_batch
+    from ..dist.collectives import (distributed_topk_batch,
+                                    distributed_topk_batch_q)
     from ..dist.sharding import resolve_mesh
     spec = opts.dist
-    dfn = distributed_topk_batch(resolve_mesh(spec), metric, k, spec.axes,
-                                 interpret=opts.interpret_pallas,
-                                 per_query_mask=per_query_mask)
+    if opts.quant is not None:
+        dfn = distributed_topk_batch_q(resolve_mesh(spec), metric, k,
+                                       spec.axes,
+                                       interpret=opts.interpret_pallas,
+                                       per_query_mask=per_query_mask,
+                                       rescore_factor=opts.rescore_factor)
+    else:
+        dfn = distributed_topk_batch(resolve_mesh(spec), metric, k, spec.axes,
+                                     interpret=opts.interpret_pallas,
+                                     per_query_mask=per_query_mask)
 
     def run(arrays, qs, rm, qvalid=None):
         qn, n = qs.shape[0], arrays["corpus"].shape[0]
-        ids, sims, valid = dfn(arrays["dcorpus"], arrays["drow_ids"], qs,
-                               _dist_mask(arrays, rm, per_query_mask),
-                               _dist_qvalid(qvalid, qn))
+        mask = _dist_mask(arrays, rm, per_query_mask)
+        qv = _dist_qvalid(qvalid, qn)
+        if opts.quant is not None:
+            ids, sims, valid = dfn(arrays["dcorpus"], arrays["dqvecs"],
+                                   arrays["dqscales"], arrays["drow_ids"],
+                                   qs, mask, qv)
+        else:
+            ids, sims, valid = dfn(arrays["dcorpus"], arrays["drow_ids"], qs,
+                                   mask, qv)
         stats = {"probes": jnp.zeros((qn,), jnp.int32),
                  "distance_evals": _flat_evals(qvalid, qn, n)}
         return ids, sims, valid, stats
@@ -386,21 +441,37 @@ def _dist_range_core(opts: EngineOptions, metric: Metric, capacity: int,
     count (per-shard buffers concatenate and re-truncate best-first at each
     merge level); ``count`` stays exact past truncation (psum of per-shard
     hit counts).  ``per_query_mask`` as in :func:`_dist_topk_core`."""
-    from ..dist.collectives import distributed_range_batch
+    from ..dist.collectives import (distributed_range_batch,
+                                    distributed_range_batch_q)
     from ..dist.sharding import resolve_mesh
     spec = opts.dist
     cap = min(int(capacity), int(n_rows))
-    dfn = distributed_range_batch(resolve_mesh(spec), metric, cap, spec.axes,
-                                  interpret=opts.interpret_pallas,
-                                  per_query_mask=per_query_mask)
+    if opts.quant is not None:
+        dfn = distributed_range_batch_q(resolve_mesh(spec), metric, cap,
+                                        spec.axes,
+                                        interpret=opts.interpret_pallas,
+                                        per_query_mask=per_query_mask,
+                                        rescore_factor=opts.rescore_factor)
+    else:
+        dfn = distributed_range_batch(resolve_mesh(spec), metric, cap,
+                                      spec.axes,
+                                      interpret=opts.interpret_pallas,
+                                      per_query_mask=per_query_mask)
 
     def run(arrays, qs, radius, rm, qvalid=None):
         qn, n = qs.shape[0], arrays["corpus"].shape[0]
         radius = jnp.broadcast_to(jnp.asarray(radius, jnp.float32), (qn,))
-        ids, sims, valid, count = dfn(arrays["dcorpus"], arrays["drow_ids"],
-                                      qs, radius,
-                                      _dist_mask(arrays, rm, per_query_mask),
-                                      _dist_qvalid(qvalid, qn))
+        mask = _dist_mask(arrays, rm, per_query_mask)
+        qv = _dist_qvalid(qvalid, qn)
+        if opts.quant is not None:
+            ids, sims, valid, count = dfn(
+                arrays["dcorpus"], arrays["dqvecs"], arrays["dqscales"],
+                arrays["dqhalf"], arrays["dql1"], arrays["dql2"],
+                arrays["drow_ids"], qs, radius, mask, qv)
+        else:
+            ids, sims, valid, count = dfn(arrays["dcorpus"],
+                                          arrays["drow_ids"], qs, radius,
+                                          mask, qv)
         stats = {"probes": jnp.zeros((qn,), jnp.int32),
                  "distance_evals": _flat_evals(qvalid, qn, n)}
         return ids, sims, valid, count, stats
@@ -766,7 +837,7 @@ def _dist_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions):
             return out(ids, sims, valid, count, stats)
         return out(*_flat_range_topk_batch(opts, metric, corpus, qs, radius,
                                            rm, opts.max_pairs,
-                                           qvalid=qvalid))
+                                           qvalid=qvalid, arrays=arrays))
 
     return core
 
@@ -951,10 +1022,8 @@ def _knn_join_core(a: Analysis, catalog: Catalog, opts: EngineOptions,
                      "distance_evals": _flat_evals(qvalid, m, n)}
         else:  # brute (compiled top-k; LingoDB-V-like)
             if opts.use_pallas:
-                from ..kernels.ops import fused_scan_topk_batch
-                ids, sims, valid = fused_scan_topk_batch(
-                    corpus, qs, k, rm, metric,
-                    interpret=opts.interpret_pallas, qvalid=qvalid)
+                ids, sims, valid = _flat_topk_batch(
+                    opts, arrays, metric, corpus, qs, k, rm, qvalid=qvalid)
             else:
                 flat = FlatIndex(metric, corpus)
                 if rm is None:
@@ -1180,7 +1249,7 @@ def _category_core(opts: EngineOptions, metric: Metric, index,
         else:
             ids, sims, valid, count, stats = _flat_range_topk_batch(
                 opts, metric, corpus, qs, radius, rm, cfg.capacity,
-                qvalid=qvalid)
+                qvalid=qvalid, arrays=arrays)
         if live:
             # lossless merge width (main + delta buffers): the window rank
             # below consumes the WHOLE buffer, so truncating here would
@@ -1557,11 +1626,23 @@ def build_vknn_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
                 ids, sims, valid = jax.vmap(post)(
                     ids_o, sims_o, valid_o, _as_per_query(row_mask, qn))
         else:  # brute (LingoDB-V analogue) or missing index
-            if opts.use_pallas:
-                from ..kernels.ops import fused_scan_topk_batch
-                ids, sims, valid = fused_scan_topk_batch(
-                    corpus, qs, k, row_mask, metric,
-                    interpret=opts.interpret_pallas, qvalid=qvalid)
+            if (opts.use_pallas and opts.quant is None and qn == 1
+                    and qvalid is None
+                    and (row_mask is None or row_mask.ndim == 1)):
+                # single-query fast path: plans routed through
+                # _single_via_batch (live/dist/quant singles) share the
+                # 1-D validity-lane single kernel instead of paying the
+                # batched kernel's BLOCK_Q=8 pad + (Q, N) mask broadcast
+                # — the q12 b1 live-scan overhead (bench_gate gates it)
+                from ..kernels.ops import fused_scan_topk
+                i1, s1, v1 = fused_scan_topk(
+                    corpus, qs[0], k, row_mask, metric,
+                    interpret=opts.interpret_pallas)
+                ids, sims, valid = i1[None], s1[None], v1[None]
+            elif opts.use_pallas:
+                ids, sims, valid = _flat_topk_batch(
+                    opts, arrays, metric, corpus, qs, k, row_mask,
+                    qvalid=qvalid)
             else:
                 flat = FlatIndex(metric, corpus)
                 if row_mask is None:
@@ -1657,7 +1738,7 @@ def build_dr_sf_batch(a: Analysis, catalog: Catalog, opts: EngineOptions,
             # PASE/pgvector cannot route range queries to the ANN index (§2.3)
             ids, sims, valid, count, stats = _flat_range_topk_batch(
                 opts, metric, corpus, qs, radius, row_mask, cfg.capacity,
-                qvalid=qvalid)
+                qvalid=qvalid, arrays=arrays)
         if live:
             ids, sims, valid, count, stats = _merge_delta_range(
                 opts, metric, arrays, qs, radius, cfg.capacity, dmask,

@@ -184,6 +184,7 @@ class Catalog:
         self._tables: dict[str, Table] = {}
         self._indexes: dict[tuple[str, str], Any] = {}
         self._sharded: dict[tuple[str, str], Any] = {}
+        self._quantized: dict[tuple, Any] = {}
         self._live: dict[tuple[str, str], Any] = {}
         self._clock = 0
         self._versions: dict[tuple, int] = {}
@@ -196,8 +197,9 @@ class Catalog:
         """Monotonic version of one registration key.
 
         Keys are ``("table", name)``, ``("index", table, column)``,
-        ``("sharded", table, column)``, or ``("live", table, column)``; a
-        key never registered is version 0.
+        ``("sharded", table, column)``, ``("quantized", table, column)``,
+        or ``("live", table, column)``; a key never registered is
+        version 0.
         Versions only grow, and no two bumps share a value (one global
         catalog clock), so equality of snapshots implies nothing changed."""
         return self._versions.get(key, 0)
@@ -214,6 +216,8 @@ class Catalog:
         raise ``StalePlanError`` and must be re-prepared."""
         table.name = name
         self._tables[name] = table
+        for key in [k for k in self._quantized if k[0] == name]:
+            del self._quantized[key]     # twins of the old columns are stale
         self._bump(("table", name))
 
     def table(self, name: str) -> Table:
@@ -257,6 +261,26 @@ class Catalog:
         """The ShardedCorpus registered for (table, column) on exactly the
         mesh ``spec`` (a ``DistSpec``) describes, or None."""
         return self._sharded.get((table, column, spec))
+
+    def register_quantized(self, table: str, column: str, quant: Any,
+                           key: Any = None) -> None:
+        """Attach a :class:`~repro.data.quantized.QuantizedCorpus` twin to a
+        (table, vector column) pair (DESIGN.md §13).
+
+        Keyed by ``key`` (defaults to ``quant.mode``), so int8/bf16 twins —
+        and per-``DistSpec`` sharded twins, keyed ``(mode, spec)`` —
+        coexist.  Bumps ``("quantized", table, column)``: quant plans carry
+        the twin's arrays in their bound ``arrays`` dict, so a re-registered
+        same-shape twin re-binds through ``ensure_fresh`` with zero
+        retraces.  Re-registering the TABLE purges its twins (the fp32
+        source changed) and stales the plans via the table key."""
+        self._quantized[(table, column, key or quant.mode)] = quant
+        self._bump(("quantized", table, column))
+
+    def quantized_for(self, table: str, column: str, key: Any):
+        """The QuantizedCorpus registered for (table, column) under ``key``
+        (a mode string, or ``(mode, spec)`` for sharded twins), or None."""
+        return self._quantized.get((table, column, key))
 
     def register_live(self, table: str, column: str, live: Any) -> None:
         """Attach a :class:`~repro.data.mutations.LiveCorpus` to a (table,

@@ -44,6 +44,7 @@ fresh :func:`attach_live` on the same logical rows.
 """
 from __future__ import annotations
 
+import collections
 import json
 import os
 import threading
@@ -143,6 +144,28 @@ class LiveCorpus:
                                      f"(half-flushed WAL line)")
         with open(self.wal_path, "a") as f:
             f.write(line + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+
+    def _wal_append_group(self, recs: list, torn_site: str | None) -> None:
+        """Durably append a GROUP of records with one flush+fsync (the
+        group-commit path: N records, one durability round-trip).  The
+        armed torn crash flushes every line but the last plus half of the
+        last — the worst tail a group commit can leave, so recovery must
+        keep the complete prefix and shed only the torn suffix."""
+        lines = [json.dumps(r, separators=(",", ":")) for r in recs]
+        if (torn_site is not None and self._faults is not None
+                and self._faults.armed(torn_site)):
+            with open(self.wal_path, "a") as f:
+                for line in lines[:-1]:
+                    f.write(line + "\n")
+                f.write(lines[-1][: max(1, len(lines[-1]) // 2)])
+                f.flush()
+            self._faults.counters["crashes"] += 1
+            raise InjectedCrashError(f"injected crash at {torn_site!r} "
+                                     f"(half-flushed group-commit tail)")
+        with open(self.wal_path, "a") as f:
+            f.write("".join(line + "\n" for line in lines))
             f.flush()
             os.fsync(f.fileno())
 
@@ -246,6 +269,52 @@ class LiveCorpus:
         self.delta_count += n
         self.lsn = lsn
         self._invalidate("live_delta_vec", "live_delta_valid", "live_dcols")
+
+    def insert_batch(self, batches) -> list[int]:
+        """Group-commit: admit several insert batches with ONE WAL fsync.
+
+        Each element of ``batches`` is ``(ids, vectors)`` or
+        ``(ids, vectors, columns)``; each becomes its own WAL record with
+        its own LSN (minted in order, applied in order) — but the whole
+        group shares a single flush+fsync, so N batches pay one durability
+        round-trip instead of N.  Admission is all-or-nothing: every group
+        is validated up front (including cross-group duplicate ids and
+        cumulative delta headroom), so a rejected group rejects the whole
+        call with no side effects.  Crash semantics (DESIGN.md §12): a
+        torn group-commit tail (``wal.group_commit`` crash site) loses
+        only the un-synced suffix — recovery replays the durable prefix,
+        bit-identical to having run those prefix inserts one by one."""
+        with self._lock:
+            pending: dict[int, tuple] = {}
+            free = self.delta_cap - self.delta_count
+            norm = []
+            for group in batches:
+                ids, vectors = group[0], group[1]
+                columns = group[2] if len(group) > 2 else None
+                ids, vectors = validate_insert(
+                    ids, vectors, self.dim,
+                    collections.ChainMap(pending, self._uid_loc),
+                    free, self.delta_cap)
+                cols = self._normalize_columns(columns, len(ids))
+                for uid in ids:
+                    pending[int(uid)] = ("pending", -1)
+                free -= len(ids)
+                norm.append((ids, vectors, cols))
+            self._crash("wal.pre_append")
+            recs, lsns = [], []
+            for ids, vectors, cols in norm:
+                rec = {"op": "insert", "ids": [int(i) for i in ids],
+                       "vecs": [[float(x) for x in v] for v in vectors],
+                       "cols": {n: np.asarray(v).tolist()
+                                for n, v in cols.items()}}
+                rec["lsn"] = lsn = self._bump()
+                lsns.append(lsn)
+                recs.append(rec)
+            self._wal_append_group(recs, torn_site="wal.group_commit")
+            self._crash("wal.post_append")
+            for (ids, vectors, cols), lsn in zip(norm, lsns):
+                self._apply_insert(ids, vectors, cols, lsn)
+            return lsns
 
     def delete(self, ids) -> int:
         """Tombstone a batch of live rows; returns the LSN.

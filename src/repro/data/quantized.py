@@ -1,0 +1,77 @@
+"""Quantized corpus twins for the bandwidth-bound scan path (DESIGN.md §13).
+
+A :class:`QuantizedCorpus` is a derived, device-resident twin of a vector
+column: the same (N, D) rows stored as int8 (per-row symmetric scale) or
+bf16, plus the per-row metadata the quantized kernels and the range-query
+slack bounds need.  Twins are built once at attach/first-prepare time and
+registered on the :class:`~repro.core.schema.Catalog`, so prepared plans
+re-bind them through ``ensure_fresh`` without retracing.
+
+Per-row contract (``x`` the fp32 row, ``x̂`` its dequantization):
+
+* **int8**: ``s = max_j |x_j| / 127`` (``s = 1`` for an all-zero row),
+  ``q_j = round(x_j / s)`` ∈ [−127, 127], ``x̂_j = s · q_j``, and the
+  componentwise error obeys ``|x_j − x̂_j| ≤ s / 2 = half_step``.
+* **bf16**: ``q_j = bf16(x_j)`` (round-to-nearest, 8 significand bits →
+  unit roundoff 2⁻⁸), ``scales ≡ 1`` so ONE kernel serves both modes
+  (``1.0 · x`` is a bitwise identity), and
+  ``|x_j − x̂_j| ≤ 2⁻⁸ · |x_j| ≤ 2⁻⁸ · max_j |x_j| = half_step``.
+
+``row_l1``/``row_l2`` are norms of the *dequantized* rows — the range
+slack bounds (kernels/quant.py) are stated in terms of x̂, which the
+kernel actually scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax.numpy as jnp
+
+MODES = ("int8", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedCorpus:
+    """Device-resident quantized twin of one vector column."""
+    mode: str                 # "int8" | "bf16"
+    qvecs: jnp.ndarray        # (N, D) int8 | bfloat16
+    scales: jnp.ndarray       # (N, 1) fp32 dequant scales (ones for bf16)
+    half_step: jnp.ndarray    # (N,) fp32 componentwise |x − x̂| bound
+    row_l1: jnp.ndarray       # (N,) fp32 ‖x̂‖₁
+    row_l2: jnp.ndarray       # (N,) fp32 ‖x̂‖₂
+
+    def plan_arrays(self, prefix: str = "") -> Dict[str, Any]:
+        """The array bundle prepared plans bind (ensure_fresh re-binds the
+        same keys, so a re-registered twin never retraces)."""
+        return {prefix + "qvecs": self.qvecs,
+                prefix + "qscales": self.scales,
+                prefix + "qhalf": self.half_step,
+                prefix + "ql1": self.row_l1,
+                prefix + "ql2": self.row_l2}
+
+
+def quantize_corpus(vecs: jnp.ndarray, mode: str) -> QuantizedCorpus:
+    """Build the quantized twin of an fp32 (N, D) corpus."""
+    if mode not in MODES:
+        raise ValueError(f"unknown quantization mode {mode!r}; "
+                         f"expected one of {MODES}")
+    vecs = jnp.asarray(vecs, jnp.float32)
+    if vecs.ndim != 2:
+        raise ValueError(f"expected (N, D) corpus, got {vecs.shape}")
+    amax = jnp.max(jnp.abs(vecs), axis=1)                      # (N,)
+    if mode == "int8":
+        scale = jnp.where(amax > 0, amax / 127.0, 1.0)         # (N,)
+        q = jnp.clip(jnp.round(vecs / scale[:, None]), -127, 127)
+        q = q.astype(jnp.int8)
+        deq = q.astype(jnp.float32) * scale[:, None]
+        half = jnp.where(amax > 0, scale * 0.5, 0.0)
+    else:
+        q = vecs.astype(jnp.bfloat16)
+        scale = jnp.ones_like(amax)
+        deq = q.astype(jnp.float32)
+        half = amax * jnp.float32(2.0 ** -8)
+    row_l1 = jnp.sum(jnp.abs(deq), axis=1)
+    row_l2 = jnp.sqrt(jnp.sum(deq * deq, axis=1))
+    return QuantizedCorpus(mode=mode, qvecs=q, scales=scale[:, None],
+                           half_step=half, row_l1=row_l1, row_l2=row_l2)

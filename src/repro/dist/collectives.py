@@ -230,6 +230,46 @@ def distributed_topk_batch(mesh: Mesh, metric: Metric, k: int,
         check_rep=False)
 
 
+def distributed_topk_batch_q(mesh: Mesh, metric: Metric, k: int,
+                             axes: tuple[str, ...] = ("data",),
+                             interpret: bool | None = None,
+                             per_query_mask: bool = True,
+                             rescore_factor: int = 2):
+    """Quantized twin of :func:`distributed_topk_batch` (DESIGN.md §13).
+
+    Each device streams its int8/bf16 shard through the quantized
+    segmented kernel and rescores its own top-(rescore_factor·k)
+    candidates against its fp32 shard LOCALLY — so the (id, key) pairs
+    entering the hierarchical merge are already exact fp32 keys, bitwise
+    the keys the fp32 path would ship, and the merge (and its shards=1
+    bit-identity guarantee) is unchanged.  The interconnect still moves
+    only K·Q pairs per shard per level; the bandwidth saving is on the
+    per-device HBM corpus stream.
+
+    Returns a ``shard_map``'d callable ``fn(sh_corpus, sh_qvecs,
+    sh_scales, sh_ids, qs, sh_mask, qvalid) -> (ids, sims, valid)`` with
+    ``sh_qvecs``/``sh_scales`` the row-sharded
+    :class:`~repro.data.quantized.QuantizedCorpus` arrays (same row
+    layout as ``sh_corpus``) and everything else as in the fp32 twin."""
+
+    def local(corpus, qvecs, scales, ids, qs, mask, qvalid):
+        from ..kernels.quant import fused_scan_topk_batch_q
+        lids, lsims, lvalid = fused_scan_topk_batch_q(
+            corpus, qvecs, scales, qs, k, mask, metric,
+            rescore_factor=rescore_factor, interpret=interpret,
+            qvalid=qvalid)
+        gids = jnp.where(lvalid, ids[jnp.maximum(lids, 0)], -1)
+        keys = jnp.where(lvalid, order_key(metric, lsims), jnp.inf)
+        return _merge_topk(metric, keys, gids, k, axes)
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None), P(axes, None), P(axes),
+                  P(None, None), _mask_spec(axes, per_query_mask), P(None)),
+        out_specs=(P(None, None), P(None, None), P(None, None)),
+        check_rep=False)
+
+
 def distributed_range_batch(mesh: Mesh, metric: Metric, capacity: int,
                             axes: tuple[str, ...] = ("data",),
                             interpret: bool | None = None,
@@ -273,6 +313,45 @@ def distributed_range_batch(mesh: Mesh, metric: Metric, capacity: int,
     return shard_map(
         local, mesh=mesh,
         in_specs=(P(axes, None), P(axes), P(None, None), P(None),
+                  _mask_spec(axes, per_query_mask), P(None)),
+        out_specs=(P(None, None), P(None, None), P(None, None), P(None)),
+        check_rep=False)
+
+
+def distributed_range_batch_q(mesh: Mesh, metric: Metric, capacity: int,
+                              axes: tuple[str, ...] = ("data",),
+                              interpret: bool | None = None,
+                              per_query_mask: bool = True,
+                              rescore_factor: int = 2):
+    """Quantized twin of :func:`distributed_range_batch` (DESIGN.md §13).
+
+    Per-shard slack-band classification + local fp32 boundary rescore
+    (``kernels.quant.fused_range_topk_batch_q``), so the merged candidate
+    keys AND the ``psum``'d hit counts are exact — bitwise what the fp32
+    twin ships at shards=1.  Signature adds the quantized per-row arrays:
+    ``fn(sh_corpus, sh_qvecs, sh_scales, sh_half, sh_l1, sh_l2, sh_ids,
+    qs, radius, sh_mask, qvalid) -> (ids, sims, valid, count)``."""
+
+    def local(corpus, qvecs, scales, half, l1, l2, ids, qs, radius, mask,
+              qvalid):
+        from ..kernels.quant import fused_range_topk_batch_q
+        cap_local = min(capacity, corpus.shape[0])
+        lids, lsims, lvalid, lcount = fused_range_topk_batch_q(
+            corpus, qvecs, scales, half, l1, l2, qs, radius, mask, metric,
+            cap_local, rescore_factor=rescore_factor, interpret=interpret,
+            qvalid=qvalid)
+        gids = jnp.where(lvalid, ids[jnp.maximum(lids, 0)], -1)
+        keys = jnp.where(lvalid, order_key(metric, lsims), jnp.inf)
+        out_ids, sims, valid = _merge_topk(metric, keys, gids, capacity, axes)
+        count = lcount
+        for ax in reversed(axes):
+            count = jax.lax.psum(count, ax)
+        return out_ids, sims, valid, count
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axes, None), P(axes, None), P(axes, None), P(axes),
+                  P(axes), P(axes), P(axes), P(None, None), P(None),
                   _mask_spec(axes, per_query_mask), P(None)),
         out_specs=(P(None, None), P(None, None), P(None, None), P(None)),
         check_rep=False)

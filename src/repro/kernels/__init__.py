@@ -3,11 +3,14 @@
 Layout per the kernels contract:
 * ``scan_topk.py`` / ``range_scan.py`` / ``distance.py`` — pl.pallas_call
   bodies with explicit BlockSpec VMEM tiling,
+* ``quant.py`` — int8/bf16 quantized scan kernels + fused fp32 rescore,
 * ``ops.py``  — jit'd public wrappers (padding, two-stage merges),
 * ``ref.py``  — pure-jnp oracles used by the allclose test sweeps.
 """
 from .ops import (default_interpret, fused_range_scan, fused_range_scan_batch,
                   fused_scan_topk, fused_scan_topk_batch, pairwise_keys)
+from .quant import fused_range_topk_batch_q, fused_scan_topk_batch_q
 
 __all__ = ["default_interpret", "fused_range_scan", "fused_range_scan_batch",
-           "fused_scan_topk", "fused_scan_topk_batch", "pairwise_keys"]
+           "fused_range_topk_batch_q", "fused_scan_topk", "fused_scan_topk_batch",
+           "fused_scan_topk_batch_q", "pairwise_keys"]

@@ -65,6 +65,7 @@ class InjectedCrashError(RuntimeError):
 CRASH_SITES = (
     "wal.pre_append",        # mutation validated, nothing durable yet
     "wal.torn_append",       # partial WAL line flushed, then crash
+    "wal.group_commit",      # group commit torn: full prefix + half tail
     "wal.post_append",       # record durable, in-memory apply lost
     "snapshot.pre_commit",   # snapshot requested, nothing written yet
     "snapshot.post_commit",  # snapshot committed (rename landed), caller died

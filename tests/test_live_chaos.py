@@ -1,6 +1,6 @@
 """Crash-recovery chaos for the live corpus (DESIGN.md §12).
 
-For every injected crash site (all 8 WAL / snapshot / compaction points in
+For every injected crash site (all 9 WAL / snapshot / compaction points in
 :data:`repro.serving.faults.CRASH_SITES`) and 3 seeds, a scripted mutation
 sequence is killed mid-flight, then :func:`repro.data.mutations.recover`
 rebuilds the corpus from disk alone into a FRESH catalog.  Asserted:
@@ -68,12 +68,18 @@ def _ops(seed: int) -> list[tuple]:
             ("compact",),
             ("insert", np.arange(300, 302), v(2), None),
             ("delete", [200, 10]),
-            ("compact",)]
+            ("compact",),
+            ("insert_batch",
+             [(np.arange(400, 403), v(3),
+               {"price": np.full(3, 4.0, np.float32)}),
+              (np.arange(410, 412), v(2))])]
 
 
 def _apply(live, op):
     if op[0] == "insert":
         live.insert(op[1], op[2], op[3])
+    elif op[0] == "insert_batch":
+        live.insert_batch(op[1])
     elif op[0] == "delete":
         live.delete(op[1])
     elif op[0] == "snapshot":
@@ -106,8 +112,17 @@ def _replay_states(seed: int, path: str) -> dict[int, dict]:
     live = _attach(cat, path, seed)
     states = {live.lsn: copy.deepcopy(live._state_tree())}
     for op in _ops(seed):
-        _apply(live, op)
-        states[live.lsn] = copy.deepcopy(live._state_tree())
+        if op[0] == "insert_batch":
+            # a torn group commit recovers to an INTERMEDIATE LSN (the
+            # durable prefix of the group), so record every per-group
+            # state — group commit is semantically sequential inserts
+            for group in op[1]:
+                live.insert(group[0], group[1],
+                            group[2] if len(group) > 2 else None)
+                states[live.lsn] = copy.deepcopy(live._state_tree())
+        else:
+            _apply(live, op)
+            states[live.lsn] = copy.deepcopy(live._state_tree())
     return states
 
 
@@ -210,3 +225,106 @@ def test_recovered_corpus_equals_from_scratch_index(tmp_path, seed):
                                       np.asarray(ib.centroids))
         np.testing.assert_array_equal(np.asarray(ia.lists),
                                       np.asarray(ib.lists))
+
+
+# -- group commit (insert_batch): one fsync, sequential-insert semantics ----
+
+def _groups(seed: int, base: int = 500):
+    rng = np.random.default_rng(2000 + seed)
+
+    def v(n):
+        x = rng.standard_normal((n, DIM)).astype(np.float32)
+        return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+    return [(np.arange(base, base + 3), v(3),
+             {"price": np.full(3, 3.0, np.float32)}),
+            (np.arange(base + 10, base + 12), v(2)),
+            (np.arange(base + 20, base + 24), v(4), None)]
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_group_commit_equals_sequential_inserts(tmp_path, seed):
+    """insert_batch is semantically sequential inserts (same LSNs, same
+    segment layout) — it only collapses N fsyncs into one."""
+    cat_a, _ = _mk_catalog(seed)
+    a = _attach(cat_a, os.fspath(tmp_path / "a"), seed)
+    lsns = a.insert_batch(_groups(seed))
+    assert lsns == sorted(lsns) and len(lsns) == 3
+    assert a.lsn == lsns[-1]
+
+    cat_b, _ = _mk_catalog(seed)
+    b = _attach(cat_b, os.fspath(tmp_path / "b"), seed)
+    for g in _groups(seed):
+        b.insert(g[0], g[1], g[2] if len(g) > 2 else None)
+    _tree_equal(a._state_tree(), b._state_tree())
+
+
+def test_group_commit_pays_one_fsync(tmp_path, monkeypatch):
+    """The point of the group commit: N insert groups, ONE fsync."""
+    import repro.data.mutations as mut
+    cat, _ = _mk_catalog(0)
+    live = _attach(cat, os.fspath(tmp_path / "a"), 0)
+    counts = []
+    real_fsync = os.fsync
+    monkeypatch.setattr(mut.os, "fsync",
+                        lambda fd: (counts.append(1), real_fsync(fd))[1])
+    live.insert_batch(_groups(0))
+    assert len(counts) == 1
+
+
+def test_group_commit_rejection_has_no_side_effects(tmp_path):
+    """A duplicate id ACROSS groups rejects the whole call before anything
+    is logged or applied (all-or-nothing admission)."""
+    from repro.serving.resilience import DeltaFullError, DuplicateIdError
+    cat, _ = _mk_catalog(0)
+    live = _attach(cat, os.fspath(tmp_path / "a"), 0)
+    before = copy.deepcopy(live._state_tree())
+    gs = _groups(0)
+    dup = (np.asarray([500]), gs[0][1][:1])          # 500 already in group 0
+    with pytest.raises(DuplicateIdError):
+        live.insert_batch(gs + [dup])
+    with pytest.raises(DeltaFullError):              # cumulative headroom
+        live.insert_batch([_groups(0, base=600 + 10 * i)[2]
+                           for i in range(5)])       # 20 rows > 16 cap
+    _tree_equal(live._state_tree(), before)
+    assert not os.path.exists(live.wal_path) or \
+        b"600" not in open(live.wal_path, "rb").read()
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_group_commit_torn_tail_keeps_durable_prefix(tmp_path, seed):
+    """A crash mid group commit (full prefix + half of the last line)
+    recovers exactly the durable prefix groups, and the torn tail is
+    truncated on disk so later appends start a fresh record."""
+    cat, _ = _mk_catalog(seed)
+    faults = FaultInjector(FaultSpec(seed=seed,
+                                     crash_site="wal.group_commit",
+                                     crash_at=1))
+    live = _attach(cat, os.fspath(tmp_path / "a"), seed, faults=faults)
+    with pytest.raises(InjectedCrashError):
+        live.insert_batch(_groups(seed))
+
+    cat2, _ = _mk_catalog(seed)
+    rec = recover(cat2, "items", "vec", os.fspath(tmp_path / "a"))
+    # 3 groups: the first 2 lines were complete, the 3rd was torn — the
+    # recovered state must equal an unfailed twin that ran the first two
+    # groups as sequential inserts (identical catalogs mint identical LSNs)
+    cat_t, _ = _mk_catalog(seed)
+    twin = _attach(cat_t, os.fspath(tmp_path / "t"), seed)
+    for g in _groups(seed)[:2]:
+        twin.insert(g[0], g[1], g[2] if len(g) > 2 else None)
+    assert rec.lsn == twin.lsn
+    _tree_equal(rec._state_tree(), twin._state_tree())
+    live_uids = {int(u) for u in rec.delta_uids[np.flatnonzero(
+        rec.delta_valid)]}
+    assert {500, 501, 502, 510, 511} <= live_uids
+    assert not any(520 <= u < 524 for u in live_uids)
+    with open(rec.wal_path, "rb") as f:
+        assert f.read().endswith(b"\n")  # torn tail shed on disk
+
+    # appends after recovery start fresh records and replay cleanly
+    rec.insert_batch(_groups(seed, base=700)[:2])
+    cat3, _ = _mk_catalog(seed)
+    rec2 = recover(cat3, "items", "vec", os.fspath(tmp_path / "a"))
+    assert rec2.lsn == rec.lsn
+    _tree_equal(rec2._state_tree(), rec._state_tree())
