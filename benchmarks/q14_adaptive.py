@@ -1,0 +1,229 @@
+"""Q14 — adaptive optimizer vs the static p75 pilot (DESIGN.md §14).
+
+Two skewed-selectivity workloads where the static effort-calibration
+heuristic (pilot = p75 of a warmup run's probe counters + 1, the q8 recipe)
+leaves money on the table, timed under three policies on IDENTICAL compiled
+plans — every policy is bit-exact, only the effort split moves:
+
+* ``lockstep`` — one unbudgeted bucketed execution (stragglers couple).
+* ``static``   — :func:`run_effort_bucketed` with the scalar p75 pilot:
+  ~25% of the batch is heavy BY CONSTRUCTION every run, so phase 2 always
+  re-runs a straggler subset unbudgeted.
+* ``adaptive`` — :func:`run_effort_bucketed` with a warmed
+  :class:`LoweringAdvisor`: the stats-predicted pilot (EMA p75 x headroom)
+  covers the bulk of the batch, and on joins the per-left probe PROFILE
+  budgets each left row individually — a scalar pilot cannot express that,
+  and one heavy left re-runs its whole bind set in phase 2.
+
+Workloads:
+
+* ``single`` — the q8-shaped heterogeneous single-table batch: N_BATCH
+  date-filter selectivities spanning permissive to needle-selective over
+  one stacked top-k batch.
+* ``join``   — Q3 distance join, B_SETS stacked bind sets over an L-row
+  left table with naturally heterogeneous per-left fan-outs; the advisor's
+  (L,) profile budgets send phase 2 to zero bind sets.
+
+Writes ``BENCH_adaptive.json``; scripts/bench_gate.py gates the within-run
+contract ``join.ratio_adaptive_vs_static >= 1.0`` (advisor at least matches
+the static pilot, measured back-to-back so the ratio never rides cross-run
+machine noise) plus fresh-vs-committed QPS on the adaptive rows.
+
+Standalone:  PYTHONPATH=src python -m benchmarks.q14_adaptive [--full]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import EngineOptions, compile_query
+
+from .common import BenchEnv, Row
+
+SINGLE_ROWS = 8000   # right-table rows for the single-table batch row
+JOIN_ROWS = 2000     # right-table rows for the join row
+N_BATCH = 64         # stacked queries in the single-table batch
+N_LEFT = 16          # join left-table rows
+B_SETS = 4           # join bind sets stacked per execution
+K = 10
+REPEATS = 5
+OUT_JSON = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_adaptive.json")
+
+SQL_SINGLE = ("SELECT sample_id FROM images WHERE capture_date > ${d} "
+              "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 10")
+SQL_JOIN = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+
+
+def _catalog(env: BenchEnv, n_rows: int, n_queries: int, nlist: int):
+    import jax
+
+    from repro.data import make_laion_catalog
+    from repro.index import build_ivf
+
+    cat = make_laion_catalog(n_rows=n_rows, n_queries=n_queries,
+                             dim=env.cfg.dim, n_modes=16, seed=env.cfg.seed)
+    idx = build_ivf(jax.random.key(env.cfg.seed), cat.table("laion")["vec"],
+                    nlist=nlist, metric=env.cfg.metric, iters=4)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    return cat
+
+
+def _block(out):
+    import jax
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    return out
+
+
+def _timed_ms(fn, repeats: int = REPEATS) -> float:
+    _block(fn())                                  # compile out of the clock
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        _block(fn())
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)
+
+
+def _policies(q, binds, advisor, n_queries: int, rows: list, report: dict,
+              name: str, calib_binds=None) -> None:
+    """Time lockstep / static-p75 / adaptive back-to-back on one plan.
+
+    ``calib_binds`` (defaults to the measured binds) is what the STATIC
+    pilot is calibrated from — the q8 recipe runs its warmup once at
+    deploy time, so under workload drift the pilot is stale; the advisor
+    re-learns from the live traffic it observes."""
+    from repro.serving.scheduler import run_effort_bucketed
+
+    calib = _block(q.executor(calib_binds if calib_binds is not None
+                              else binds))
+    pilot = int(np.percentile(np.asarray(calib["stats"]["probes"]), 75)) + 1
+    lock = _block(q.executor(binds))
+    # warm the advisor: cold lock-step observe, then one budgeted round
+    for _ in range(2):
+        out, info = run_effort_bucketed(q, binds, 0, advisor=advisor)
+    assert info["opt"]["source"] in ("stats", "profile"), info
+    import jax
+    for x, y in zip(jax.tree.leaves(lock), jax.tree.leaves(out)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), \
+            "adaptive diverged from lock-step"
+    _, sinfo = run_effort_bucketed(q, binds, pilot)
+    t_lock = _timed_ms(lambda: q.executor(binds))
+    t_static = _timed_ms(
+        lambda: run_effort_bucketed(q, binds, pilot)[0])
+    t_adapt = _timed_ms(
+        lambda: run_effort_bucketed(q, binds, 0, advisor=advisor)[0])
+    entry = {
+        "workload": name, "n_queries": n_queries,
+        "static_pilot": pilot,
+        "static_heavy": sinfo["n_heavy"], "adaptive_heavy": info["n_heavy"],
+        "opt": info["opt"],
+        "ms_lockstep": round(t_lock, 2), "ms_static": round(t_static, 2),
+        "ms_adaptive": round(t_adapt, 2),
+        "qps_adaptive": round(n_queries / (t_adapt / 1e3), 1),
+        "qps_static": round(n_queries / (t_static / 1e3), 1),
+        "ratio_adaptive_vs_static": round(t_static / t_adapt, 3),
+    }
+    report["rows"].append(entry)
+    rows.append(Row(f"q14_{name}_adaptive", t_adapt,
+                    ms_static=entry["ms_static"],
+                    ms_lockstep=entry["ms_lockstep"],
+                    ratio_vs_static=entry["ratio_adaptive_vs_static"],
+                    heavy=f"{info['n_heavy']}<{sinfo['n_heavy']}"))
+
+
+def _single_row(env: BenchEnv, rows: list, report: dict) -> None:
+    import jax.numpy as jnp
+
+    from repro.opt import LoweringAdvisor
+
+    cat = _catalog(env, SINGLE_ROWS, N_BATCH, 64)
+    probe = dataclasses.replace(env.cfg.probe, probe_batch=2, max_probes=64)
+    q = compile_query(SQL_SINGLE, cat, EngineOptions(engine="chase",
+                                                     probe=probe))
+    # workload DRIFT: the static pilot is calibrated once, on permissive
+    # deploy-time traffic (low probe counts -> small pilot); the measured
+    # batch is needle-selective, so the stale pilot classifies most of it
+    # heavy and phase 2 re-runs the bulk unbudgeted.  The advisor's EMA is
+    # fed by the live traffic and re-predicts within two batches.
+    rng = np.random.default_rng(env.cfg.seed)
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    qs = np.asarray(cat.table("queries")["embedding"])[:N_BATCH]
+
+    def _binds(sel):
+        return q._stack_binds(None, dict(
+            qv=jnp.asarray(qs),
+            d=jnp.asarray(np.quantile(dates, sel).astype(np.int32))))
+
+    calib = _binds(rng.uniform(0.0, 0.8, N_BATCH))       # deploy-time
+    sel = np.concatenate([rng.uniform(0.9, 0.99, N_BATCH - 12),
+                          rng.uniform(0.995, 0.9995, 12)])
+    rng.shuffle(sel)
+    live = _binds(sel)                                   # drifted traffic
+    _policies(q, live, LoweringAdvisor(cat), N_BATCH, rows, report,
+              "single_drift", calib_binds=calib)
+
+
+def _join_row(env: BenchEnv, rows: list, report: dict) -> None:
+    from repro.opt import LoweringAdvisor
+
+    cat = _catalog(env, JOIN_ROWS, N_LEFT, 32)
+    probe = dataclasses.replace(env.cfg.probe, probe_batch=2, max_probes=32)
+    q = compile_query(SQL_JOIN, cat, EngineOptions(engine="chase",
+                                                   probe=probe,
+                                                   max_pairs=256))
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -40, axis=1)[:, -40]))
+    rng = np.random.default_rng(env.cfg.seed + 1)
+    sets = [{"r": np.float32(radius * f)}
+            for f in rng.uniform(0.9, 1.0, B_SETS)]
+    binds = q._stack_binds(sets, {})
+    _policies(q, binds, LoweringAdvisor(cat), B_SETS * N_LEFT, rows, report,
+              "join")
+
+
+def run(env: BenchEnv, rows: list) -> dict:
+    report: dict = {"dim": env.cfg.dim, "k": K, "single_rows": SINGLE_ROWS,
+                    "join_rows": JOIN_ROWS, "n_batch": N_BATCH,
+                    "n_left": N_LEFT, "b_sets": B_SETS, "rows": []}
+    _single_row(env, rows, report)
+    _join_row(env, rows, report)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=2)
+    return report
+
+
+if __name__ == "__main__":
+    import argparse
+    import sys
+
+    from .common import get_env
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full-scale catalog (default: smoke)")
+    args = ap.parse_args()
+    env = get_env(smoke=not args.full)
+    rows: list[Row] = []
+    report = run(env, rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(r.csv())
+    for e in report["rows"]:
+        print(f"\n{e['workload']}: adaptive {e['ms_adaptive']}ms vs static "
+              f"pilot {e['ms_static']}ms "
+              f"({e['ratio_adaptive_vs_static']}x, heavy "
+              f"{e['adaptive_heavy']} vs {e['static_heavy']})",
+              file=sys.stderr)

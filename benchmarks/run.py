@@ -15,7 +15,7 @@ import sys
 from . import (counters, q1_vknn, q2_range, q3_distjoin, q4_knnjoin,
                q5q6_category, q7_batch_qps, q8_sched_qps, q9_prepare_cache,
                q10_sharded_qps, q11_overload, q12_live_freshness,
-               q13_quant_qps, q34_join_qps)
+               q13_quant_qps, q14_adaptive, q34_join_qps)
 from .common import Row, get_env
 
 BENCHES = {
@@ -31,6 +31,7 @@ BENCHES = {
     "q11": q11_overload.run,
     "q12": q12_live_freshness.run,
     "q13": q13_quant_qps.run,
+    "q14": q14_adaptive.run,
     "q34": q34_join_qps.run,
     "t5": counters.run,
 }
@@ -43,8 +44,9 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke sweep: tiny corpus + fast subset "
                          "(q1, q7, q8 scheduler, q9 cache, q10 sharded, "
-                         "q12 live freshness, q13 quantized scan, q34 "
-                         "joins, t5) — what scripts/smoke.sh runs")
+                         "q12 live freshness, q13 quantized scan, q14 "
+                         "adaptive optimizer, q34 joins, t5) — what "
+                         "scripts/smoke.sh runs")
     ap.add_argument("--only", default=None,
                     help="comma list of bench keys: " + ",".join(BENCHES))
     ap.add_argument("--chaos", action="store_true",
@@ -60,8 +62,8 @@ def main(argv=None) -> None:
     if args.only:
         keys = args.only.split(",")
     elif args.quick:
-        keys = ["q1", "q7", "q8", "q9", "q10", "q11", "q12", "q13", "q34",
-                "t5"]
+        keys = ["q1", "q7", "q8", "q9", "q10", "q11", "q12", "q13", "q14",
+                "q34", "t5"]
     else:
         keys = list(BENCHES)
     rows: list[Row] = []

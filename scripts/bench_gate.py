@@ -37,6 +37,12 @@ Rows gated:
     queries reuse the batch lowering at Q=1 (``compiler._single_via_batch``)
     but the Q=1 + 1-D validity-lane fast path routes them through the
     single-query fused kernel, so b1 no longer pays the (Q, N) broadcast.
+  * BENCH_adaptive.json: q14 adaptive-vs-static rows (key: workload,
+    qps_adaptive) — fresh-vs-committed QPS per workload, AND the within-run
+    contract that the advisor's per-left profile budgets at least match the
+    static p75 pilot on the join row (ratio_adaptive_vs_static >= 1.0,
+    measured back-to-back in one run); the single-table drift row's
+    thinner margin is tracked, not gated.
   * BENCH_quant.json: flat quantized-scan rows (key: batch, qps) — the
     same interpret-mode fused-kernel stability argument as BENCH_batch,
     per mode (fp32 / bf16 / int8).  Two gates: fresh-vs-committed QPS per
@@ -235,6 +241,33 @@ def main() -> int:
             failures.append(
                 f"quant.speedup[batch=64]: int8 {i8:.1f} < 1.5x fp32 "
                 f"{f32:.1f} (same-run ratio {i8 / f32:.2f}x)")
+
+    base = _committed("BENCH_adaptive.json")
+    fresh = _fresh("BENCH_adaptive.json")
+    if base and fresh and _same_config("BENCH_adaptive.json", base, fresh,
+                                       ("single_rows", "join_rows", "dim",
+                                        "n_batch", "n_left", "b_sets")):
+        checked += _gate_rows("adaptive.rows", base.get("rows", []),
+                              fresh.get("rows", []), "workload",
+                              "qps_adaptive", failures)
+    # within-run adaptive-vs-static contract: on the JOIN row the advisor's
+    # per-left profile budgets must at least match the static p75 pilot
+    # (both timed back-to-back in one q14 run, so the ratio never rides
+    # cross-run machine noise); the single-table drift row's thinner margin
+    # is tracked in the JSON, not gated
+    for e in ((fresh or base) or {}).get("rows", []):
+        if e.get("workload") != "join":
+            continue
+        ratio = e.get("ratio_adaptive_vs_static")
+        if ratio is None:
+            continue
+        checked += 1
+        if ratio < 1.0:
+            failures.append(
+                f"adaptive.join: ratio_adaptive_vs_static {ratio:.3f} < "
+                f"1.0 — advisor per-left budgets lost to the static p75 "
+                f"pilot (same-run, ms_adaptive={e.get('ms_adaptive')}, "
+                f"ms_static={e.get('ms_static')})")
 
     if checked == 0:
         print("bench_gate: no committed baselines to compare against — skip")

@@ -35,7 +35,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 # packages (every .py in the dir) or single .py files
 DOC_PACKAGES = ("src/repro/api", "src/repro/dist", "src/repro/core",
                 "src/repro/kernels", "src/repro/serving", "src/repro/data",
-                "src/repro/index", "src/repro/launch/serve.py")
+                "src/repro/index", "src/repro/opt",
+                "src/repro/launch/serve.py")
 REF_SCAN_DIRS = ("src", "benchmarks", "scripts", "tests", "examples", "docs")
 REF_SCAN_ROOT_MD = True       # also scan *.md at the repo root
 

@@ -3,7 +3,8 @@
 # integration tests are deselected by pytest.ini) plus the quick benchmark
 # sweep (q1 latency/recall, q7 batched QPS, q8 scheduler smoke, q9 plan
 # cache, q10 sharded scan, q11 overload goodput, q12 live-corpus
-# freshness, q13 quantized-scan QPS with recall==1.0 hard-asserted, q34
+# freshness, q13 quantized-scan QPS with recall==1.0 hard-asserted, q14
+# adaptive optimizer vs static pilot (bit-parity hard-asserted), q34
 # batch-native joins, t5 counters) on the tiny catalog —
 # q34 exercises the join families
 # end-to-end on both lowerings, q8 the dynamic batch scheduler (Poisson
@@ -12,9 +13,10 @@
 # graceful degradation vs naive queueing under overload — then the seeded
 # chaos smoke of the resilient serving tier, the benchmark regression gate
 # (scripts/bench_gate.py: fresh flat-path QPS must stay within 20% of the
-# committed BENCH_* baselines, and live zero-delta QPS within 20% of its
-# same-run frozen twin) and the docs lint (scripts/docs_check.py:
-# public-symbol docstrings in api/dist/core/serving/data/index +
+# committed BENCH_* baselines, live zero-delta QPS within 20% of its
+# same-run frozen twin, and the q14 join advisor at least matching the
+# static p75 pilot within one run) and the docs lint (scripts/docs_check.py:
+# public-symbol docstrings in api/dist/core/serving/data/index/opt +
 # launch/serve.py, DESIGN.md §-reference validity).
 #
 # Finishes with examples/quickstart.py --smoke so the public session API

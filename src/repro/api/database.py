@@ -72,19 +72,24 @@ class _CacheEntry:
 
 
 def connect(catalog: Catalog, options: EngineOptions | None = None,
-            max_cached_plans: int | None = 128,
+            max_cached_plans: int | None = 128, adaptive: bool = False,
+            stats_path: str | None = None,
             **option_overrides) -> "Database":
     """Open a session over a catalog — the one front door to the engine.
 
     ``option_overrides`` are convenience kwargs onto :class:`EngineOptions`
     (``connect(cat, engine="chase", use_pallas=True)``);
     ``max_cached_plans`` bounds the normalized plan cache (LRU; None =
-    unbounded)."""
+    unbounded).  ``adaptive=True`` attaches a
+    :class:`~repro.opt.LoweringAdvisor` (DESIGN.md §14): batched executions
+    feed runtime stats back and get predicted probe budgets, hints always
+    winning; ``stats_path`` persists/restores the stats store there."""
     if option_overrides:
         options = dataclasses.replace(options or EngineOptions(),
                                       **option_overrides)
     return Database(catalog, options or EngineOptions(),
-                    max_cached_plans=max_cached_plans)
+                    max_cached_plans=max_cached_plans, adaptive=adaptive,
+                    stats_path=stats_path)
 
 
 class Database:
@@ -97,7 +102,8 @@ class Database:
     the cache transparently on its next execute."""
 
     def __init__(self, catalog: Catalog, options: EngineOptions | None = None,
-                 max_cached_plans: int | None = 128):
+                 max_cached_plans: int | None = 128, adaptive: bool = False,
+                 stats_path: str | None = None):
         if max_cached_plans is not None and max_cached_plans < 1:
             raise ValueError(
                 f"max_cached_plans must be >= 1 or None, "
@@ -105,6 +111,10 @@ class Database:
         self.catalog = catalog
         self.options = options or EngineOptions()
         self.max_cached_plans = max_cached_plans
+        self.advisor = None
+        if adaptive:
+            from ..opt import LoweringAdvisor
+            self.advisor = LoweringAdvisor(catalog, stats_path=stats_path)
         self._cache: "collections.OrderedDict[tuple, _CacheEntry]" = (
             collections.OrderedDict())
         self._hits = 0
@@ -197,7 +207,22 @@ class Database:
         if policy is not None or faults is not None:
             return ResilientScheduler(statement, config, policy=policy,
                                       faults=faults)
-        return BatchScheduler(statement, config)
+        return BatchScheduler(statement, config, advisor=self.advisor)
+
+    def advise(self, sql: str, selectivity: float = 1.0,
+               **static_binds) -> dict:
+        """Prepare-time lowering advice for ``sql``: cost-model scores of
+        the flat / IVF / quantized lanes for this plan's corpus under a
+        selectivity estimate, plus the recommended lane and the calibrated
+        constants (DESIGN.md §14).  Advisory — execute-time adaptive
+        decisions stay within bit-identical effort lanes; use the
+        recommendation to pick ``EngineOptions`` at prepare time."""
+        st = self.prepare(sql, **static_binds)
+        advisor = self.advisor
+        if advisor is None:
+            from ..opt import LoweringAdvisor
+            advisor = LoweringAdvisor(self.catalog)
+        return advisor.score_plan(st.compiled, selectivity=selectivity)
 
     def cache_info(self) -> CacheInfo:
         """Hits / misses / live entries / evictions of the plan cache."""
@@ -421,6 +446,8 @@ class Statement:
                     f"entries for a batch of {qn} queries")
             probe_budget = np.asarray(probe_budget, np.int32)
         effort = None
+        opt = None
+        advisor = self._db.advisor
         if hints.exact_shape:
             path = "batch"
             out = compiled._batch_jitted(compiled._arrays, binds)
@@ -429,13 +456,23 @@ class Statement:
             path = "effort"
             out, effort = run_effort_bucketed(compiled, binds,
                                               hints.pilot_budget)
+        elif (advisor is not None and advisor.enabled and not hints.no_opt
+                and probe_budget is None and compiled.batch_native):
+            # the adaptive path (DESIGN.md §14): hints always win — this
+            # branch is only reachable when the caller set NO execution
+            # knob, so the advisor never overrides an explicit choice
+            from ..serving.scheduler import run_effort_bucketed
+            path = "opt"
+            out, effort = run_effort_bucketed(compiled, binds, 0,
+                                              advisor=advisor)
+            opt = effort.pop("opt", None)
         else:
             path = "bucketed"
             out = compiled.executor(binds, probe_budget=probe_budget)
         bucket = (compiled.executor.bucket_for(qn)
-                  if path in ("bucketed", "effort") else None)
+                  if path in ("bucketed", "effort", "opt") else None)
         report = self._report_fn(path=path, bucket=bucket, num_queries=qn,
-                                 hints=hints, effort=effort)
+                                 hints=hints, effort=effort, opt=opt)
         return ResultBatch(out, report, qn)
 
     # -- explain ------------------------------------------------------------

@@ -43,6 +43,11 @@ class ExecutionHints:
       relative deadline (shed if still queued past it) and drain priority.
       Inert on direct ``Statement.execute`` calls — there is no queue to
       wait in, so a direct call can never expire while queued.
+    * ``no_opt`` — opt out of the adaptive optimizer for this call
+      (DESIGN.md §14): run the plain lock-step bucketed path even on an
+      adaptive session.  Redundant with any explicit execution knob — the
+      advisor already yields whenever ``probe_budget`` / ``pilot_budget`` /
+      ``exact_shape`` is set (hints always beat the advisor).
     """
     probe_budget: "int | tuple[int, ...] | None" = None
     pilot_budget: int = 0
@@ -51,6 +56,7 @@ class ExecutionHints:
     rescore_factor: int | None = None
     deadline_ms: float | None = None
     priority: int = 0
+    no_opt: bool = False
 
     def __post_init__(self):
         pb = self.probe_budget

@@ -45,6 +45,7 @@ class ExplainReport:
     num_queries: int | None = None
     hints: ExecutionHints | None = None
     effort: dict | None = None          # n_light / n_heavy split, if any
+    opt: dict | None = None             # advisor decision (DESIGN.md §14)
     shards: int | None = None           # corpus shard count (dist plans)
     merge_depth: int | None = None      # hierarchical-merge levels (dist)
     degraded: dict | None = None        # overload level/budget, if degraded
@@ -71,6 +72,8 @@ class ExplainReport:
             out.append(exec_line)
         if self.effort is not None:
             out.append(f"-- effort: {self.effort}")
+        if self.opt is not None:
+            out.append(f"-- opt:    {self.opt}")
         if self.degraded is not None:
             out.append(f"-- DEGRADED: overload level="
                        f"{self.degraded.get('level')} "

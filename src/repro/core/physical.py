@@ -94,6 +94,19 @@ class EngineOptions:
         return repr(self)
 
 
+def probe_ceiling(options: "EngineOptions") -> int:
+    """Effective probe-budget ceiling of plans compiled under ``options`` —
+    what the adaptive optimizer clamps predicted budgets to (DESIGN.md
+    §14).  0 means the lowering has no probe lane: flat/brute scans and the
+    sharded distributed scan execute in one pass, so a runtime
+    ``probe_budget`` is inert and effort bucketing is pure overhead."""
+    if options.engine not in ("chase", "vbase", "pase"):
+        return 0
+    if options.dist is not None:
+        return 0
+    return int(options.probe.max_probes)
+
+
 # ---------------------------------------------------------------------------
 # helpers
 # ---------------------------------------------------------------------------

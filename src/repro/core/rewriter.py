@@ -7,12 +7,48 @@ what tests assert against (plan-shape equivalence to the paper's Figures
 """
 from __future__ import annotations
 
-from .expr import Column
+from .expr import (Cmp, Column, Const, Distance, Param, split_conjuncts,
+                   walk)
 from .plan import (Filter, IndexScan, Join, KnnSubquery, Limit, Map, OrderBy,
                    PlanNode, Project, Scan, UpdateState, WindowRank)
 from .semantics import Analysis, QueryClass
 
 SIM_COL = "__sim"
+
+# comparison direction when an atom is flipped to column-on-the-left form
+_FLIP_OP = {"<": ">", "<=": ">=", ">": "<", ">=": "<=",
+            "=": "=", "<>": "<>", "!=": "!="}
+
+
+def selectivity_atoms(a: Analysis) -> list[dict]:
+    """Threshold atoms of the structured/join predicates, in a form the
+    adaptive optimizer can estimate selectivity for (DESIGN.md §14).
+
+    Each atom is ``{"table", "column", "op", "param", "value"}`` — a
+    column-vs-threshold comparison in column-on-the-left form, where the
+    threshold is either a bind parameter (``param`` set) or a literal
+    (``value`` set).  Conjuncts that are not simple threshold comparisons
+    (distance terms, OR trees, column-vs-column join residuals, arithmetic)
+    are skipped — the estimator stays conservative rather than guessing."""
+    atoms: list[dict] = []
+    for pred in (a.structured_predicate, a.join_predicate):
+        for conj in split_conjuncts(pred):
+            if not isinstance(conj, Cmp) or conj.op not in _FLIP_OP:
+                continue
+            if any(isinstance(node, Distance) for node in walk(conj)):
+                continue
+            for lhs, rhs, op in ((conj.lhs, conj.rhs, conj.op),
+                                 (conj.rhs, conj.lhs, _FLIP_OP[conj.op])):
+                if (isinstance(lhs, Column)
+                        and isinstance(rhs, (Param, Const))):
+                    atoms.append({
+                        "table": lhs.table, "column": lhs.name, "op": op,
+                        "param": rhs.name if isinstance(rhs, Param)
+                        else None,
+                        "value": rhs.value if isinstance(rhs, Const)
+                        else None})
+                    break
+    return atoms
 
 
 def rewrite(a: Analysis) -> PlanNode:

@@ -3,9 +3,11 @@
 The flat batched scan is memory-bandwidth-bound: QPS is set by corpus bytes
 streamed through the (BLOCK_N, D)·(D, BLOCK_Q) tiles, not by FLOPs.  These
 kernels stream an int8 (per-row symmetric scale) or bf16 twin of the corpus
-— 4×/2× fewer bytes — widen to fp32 in-register on the same MXU layout the
-fp32 query-tiled kernels use, and keep results EXACT by re-ranking a small
-candidate set against the fp32 originals.
+— 4×/2× fewer bytes — on the same MXU layout the fp32 query-tiled kernels
+use (int8 widens + rescales in-register; bf16 feeds the contraction
+MXU-NATIVE with fp32 accumulation, see :func:`_dequant_block`), and keep
+results EXACT by re-ranking a small candidate set against the fp32
+originals.
 
 Two ideas make the quantized path both fast and bit-identical:
 
@@ -62,17 +64,33 @@ SEG = 8
 # Stage 1 kernels: dequantize in-register, quantized keys on the MXU
 # ---------------------------------------------------------------------------
 
+def _dequant_block(c_ref, s_ref) -> jnp.ndarray:
+    """The corpus tile in the dtype the MXU contraction consumes.
+
+    int8 widens to fp32 and applies the per-row scales in-register (the
+    MXU has no int8 × fp32 contraction with per-row rescale).  bf16
+    streams MXU-NATIVE: its scales are ones by construction (DESIGN.md
+    §13), and :func:`_keys_from_block_batch` contracts bf16 × fp32 with
+    fp32 accumulation — bitwise identical to widening first (bf16 -> fp32
+    conversion is exact), while the tile stays half-width all the way into
+    the matmul."""
+    if c_ref.dtype == jnp.bfloat16:
+        return c_ref[...]
+    return c_ref[...].astype(jnp.float32) * s_ref[...]
+
+
 def _quant_topk_batch_kernel(q_ref, qv_ref, c_ref, s_ref, m_ref, keys_out,
                              ids_out, *, s_count: int, metric: Metric):
     """Grid (num_q_blocks, num_n_blocks): quantized keys + segment minima +
     top-``s_count`` SEGMENT extraction per query column.
 
     ``c_ref`` is the (BLOCK_N, D) int8/bf16 tile; ``s_ref`` the matching
-    (BLOCK_N, 1) fp32 per-row scales (ones in bf16 mode — ``1.0 * x`` is a
-    bitwise identity).  Emits (s_count, BLOCK_Q) blocks of LOCAL segment
-    indices; the wrapper rebases by n-block, merges globally, and expands
-    segments back to rows for the fp32 replay rescore."""
-    block = c_ref[...].astype(jnp.float32) * s_ref[...]  # dequantized (B, D)
+    (BLOCK_N, 1) fp32 per-row scales (unused in bf16 mode, where the tile
+    streams MXU-native through :func:`_dequant_block`).  Emits
+    (s_count, BLOCK_Q) blocks of LOCAL segment indices; the wrapper rebases
+    by n-block, merges globally, and expands segments back to rows for the
+    fp32 replay rescore."""
+    block = _dequant_block(c_ref, s_ref)                 # (B, D)
     qs = q_ref[...].astype(jnp.float32)                  # (BQ, D)
     keys = _keys_from_block_batch(block, qs, metric)     # (B, BQ)
     live = (m_ref[...] != 0) & (qv_ref[...] != 0)        # broadcasts (1, BQ)
@@ -139,7 +157,7 @@ def _quant_keys_batch_kernel(q_ref, qv_ref, c_ref, s_ref, m_ref, keys_out, *,
     """Grid (num_q_blocks, num_n_blocks): the quantized twin of the fp32
     range kernel's key materialization — masked quantized order keys, no
     radius test (the slack-band classification happens outside)."""
-    block = c_ref[...].astype(jnp.float32) * s_ref[...]
+    block = _dequant_block(c_ref, s_ref)
     keys = _keys_from_block_batch(block, q_ref[...].astype(jnp.float32),
                                   metric)
     live = (m_ref[...] != 0) & (qv_ref[...] != 0)

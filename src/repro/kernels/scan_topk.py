@@ -85,17 +85,24 @@ def _sq_rowvec(x: jnp.ndarray) -> jnp.ndarray:
 def _keys_from_block_batch(block: jnp.ndarray, qs: jnp.ndarray,
                            metric: Metric) -> jnp.ndarray:
     """(B,D),(BQ,D) -> (B,BQ) order keys. One MXU matmul per corpus tile
-    amortized over the whole query tile — the batched-execution hot loop."""
+    amortized over the whole query tile — the batched-execution hot loop.
+
+    ``block`` may arrive in bf16 (the quantized kernels stream the bf16
+    twin MXU-native — DESIGN.md §13): the contraction accumulates in fp32
+    via ``preferred_element_type``, and the norm epilogues widen first.
+    bf16 -> fp32 conversion is exact, so both are bitwise identical to a
+    pre-widened block (and a no-op for fp32 callers)."""
     ip = jax.lax.dot_general(block, qs, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)  # (B, BQ)
     if metric == Metric.INNER_PRODUCT:
         return -ip
+    blk = block.astype(jnp.float32)
     if metric == Metric.L2:
-        b2 = jnp.sum(block * block, axis=1, keepdims=True)   # (B, 1)
+        b2 = jnp.sum(blk * blk, axis=1, keepdims=True)       # (B, 1)
         q2 = _sq_rowvec(qs)                                  # (1, BQ)
         return b2 - 2.0 * ip + q2
     if metric == Metric.COSINE:
-        bn = jnp.sqrt(jnp.sum(block * block, axis=1, keepdims=True))
+        bn = jnp.sqrt(jnp.sum(blk * blk, axis=1, keepdims=True))
         qn = jnp.sqrt(_sq_rowvec(qs))
         return -(ip / (bn * qn + 1e-12))
     raise ValueError(metric)

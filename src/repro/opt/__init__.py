@@ -1,0 +1,24 @@
+"""Adaptive query optimizer: runtime-statistics feedback + cost-based
+lowering advice (DESIGN.md §14).
+
+The engine's execute surfaces already emit everything an optimizer needs —
+per-query probe counters, distance-eval counts, trace counts, a runtime
+probe-budget lane — this package closes the loop:
+
+* :class:`~repro.opt.stats.StatsStore` — deterministic, JSON-persistable
+  per-(plan-fingerprint, selectivity-bucket) EMA aggregates + per-left join
+  probe profiles, invalidated by the catalog version clock.
+* :class:`~repro.opt.cost.CostModel` — lane costs calibrated from the
+  committed BENCH_*.json rooflines; predicts pilot probe budgets.
+* :class:`~repro.opt.advisor.LoweringAdvisor` — the execute-time decision
+  maker, wired into ``Statement.execute`` (``connect(cat, adaptive=True)``)
+  and ``serving.scheduler.run_effort_bucketed``; chooses only among
+  bit-identical compiled lanes, is always overridden by ``ExecutionHints``,
+  and reports itself on the ``-- opt:`` explain line.
+"""
+from .advisor import LoweringAdvisor, OptDecision
+from .cost import CostModel
+from .stats import StatsStore, bucket_of
+
+__all__ = ["LoweringAdvisor", "OptDecision", "CostModel", "StatsStore",
+           "bucket_of"]

@@ -1,0 +1,186 @@
+"""Roofline-calibrated lane cost model for the adaptive optimizer
+(DESIGN.md §14).
+
+Costs are expressed in **flat-scan row units**: scanning one fp32 corpus
+row through the fused flat kernel costs 1.0, and every other lane is
+scored relative to that.  The constants come from the committed
+``BENCH_*.json`` rooflines (the benchmarks this repo gates on), read once
+at construction:
+
+* ``BENCH_batch.json``  — flat ms/row and the IVF gather penalty (an IVF
+  probe's rows cost more than streamed flat rows: gather + per-round
+  top-k merge overhead, measured as the ratio of per-row ms).
+* ``BENCH_quant.json``  — int8 / bf16 batch-64 speedups over the fp32
+  flat scan (``speedup_b64``) and the rescore candidate multiple.
+* ``BENCH_sched.json``  — the measured effort-bucketing speedup (sanity
+  reference recorded in ``sources``; the advisor re-derives effort wins
+  from live stats, not from this constant).
+
+Missing or unreadable files degrade to the ``DEFAULTS`` below (the model
+must work in a fresh checkout with no committed baselines), and the chosen
+constants are reported in :meth:`CostModel.describe` so ``explain()`` and
+``db.advise`` can show where a recommendation came from.  Everything here
+is pure float arithmetic — deterministic by construction.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+
+DEFAULTS = {
+    "int8_speedup": 1.67,     # quantized b64 QPS / fp32 b64 QPS
+    "bf16_speedup": 1.41,
+    "rescore_factor": 3,      # candidate multiple c of the fused rescore
+    "ivf_gather_penalty": 2.0,  # per-row cost of probed rows vs flat rows
+    "headroom": 1.25,         # predicted budget = EMA high quantile x this
+}
+
+_REPO = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+
+
+def _read_json(root: str, name: str) -> dict | None:
+    try:
+        with open(os.path.join(root, name)) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return None
+
+
+class CostModel:
+    """Score the compiled lanes of a plan and predict probe budgets.
+
+    The model answers two questions the advisor asks:
+
+    * :meth:`score` — relative cost of the flat / quantized / IVF lowerings
+      for a given corpus size and selectivity estimate (a prepare-time
+      advisory surface: execute-time lane picks are restricted to
+      bit-identical effort variants, see ``opt/advisor.py``).
+    * :meth:`probe_budget` — the per-query pilot budget to run phase 1 of
+      effort-bucketed execution with, given an observed probe statistic:
+      high-quantile EMA × ``headroom``, +1 so queries that historically
+      terminate AT the quantile still prove natural termination, clipped
+      to the plan's probe ceiling.
+    """
+
+    def __init__(self, *, int8_speedup: float | None = None,
+                 bf16_speedup: float | None = None,
+                 rescore_factor: int | None = None,
+                 ivf_gather_penalty: float | None = None,
+                 headroom: float | None = None,
+                 sources: tuple = ()):
+        d = DEFAULTS
+        self.int8_speedup = float(int8_speedup or d["int8_speedup"])
+        self.bf16_speedup = float(bf16_speedup or d["bf16_speedup"])
+        self.rescore_factor = int(rescore_factor or d["rescore_factor"])
+        self.ivf_gather_penalty = float(
+            ivf_gather_penalty or d["ivf_gather_penalty"])
+        self.headroom = float(headroom or d["headroom"])
+        self.sources = tuple(sources)
+
+    @classmethod
+    def from_bench(cls, root: str | None = None) -> "CostModel":
+        """Calibrate from the committed BENCH_*.json files under ``root``
+        (default: the repo root); absent files fall back to DEFAULTS."""
+        root = root or _REPO
+        sources = []
+        kw: dict = {}
+        quant = _read_json(root, "BENCH_quant.json")
+        if quant:
+            sp = quant.get("speedup_b64") or {}
+            if sp.get("int8"):
+                kw["int8_speedup"] = sp["int8"]
+            if sp.get("bf16"):
+                kw["bf16_speedup"] = sp["bf16"]
+            if quant.get("rescore_factor"):
+                kw["rescore_factor"] = quant["rescore_factor"]
+            sources.append("BENCH_quant.json")
+        batch = _read_json(root, "BENCH_batch.json")
+        if batch:
+            pen = _gather_penalty(batch)
+            if pen is not None:
+                kw["ivf_gather_penalty"] = pen
+            sources.append("BENCH_batch.json")
+        sched = _read_json(root, "BENCH_sched.json")
+        if sched and (sched.get("effort") or {}).get("speedup"):
+            sources.append("BENCH_sched.json")
+        return cls(sources=tuple(sources), **kw)
+
+    def describe(self) -> dict:
+        """The calibrated constants + where they came from (JSON-able)."""
+        return {"int8_speedup": self.int8_speedup,
+                "bf16_speedup": self.bf16_speedup,
+                "rescore_factor": self.rescore_factor,
+                "ivf_gather_penalty": round(self.ivf_gather_penalty, 3),
+                "headroom": self.headroom,
+                "sources": list(self.sources)}
+
+    # -- lane scoring --------------------------------------------------------
+
+    def expected_probes(self, selectivity: float, *, min_probes: int,
+                        max_probes: int) -> int:
+        """Cold-start probe estimate from a selectivity estimate alone:
+        every halving of selectivity costs ~2 extra probe rounds (matching
+        the log2 bucket policy of the stats store).  Replaced by the EMA
+        as soon as one execution has been observed."""
+        s = min(max(float(selectivity), 1e-9), 1.0)
+        est = min_probes + 2.0 * (-math.log2(s))
+        return int(min(max(est, min_probes), max_probes))
+
+    def score(self, *, n_rows: int, k: int = 10, selectivity: float = 1.0,
+              cluster_rows: float | None = None,
+              expected_probes: float | None = None,
+              quant_modes: tuple = (), min_probes: int = 4,
+              max_probes: int = 64) -> dict:
+        """Relative lane costs (flat-scan row units) for one plan shape.
+
+        ``cluster_rows`` is the mean IVF cluster size (n_rows / nlist);
+        None means no index is registered and the IVF lane is not scored.
+        ``expected_probes`` comes from the stats EMA when available."""
+        scores = {"flat": float(n_rows)}
+        for mode in quant_modes:
+            speed = (self.int8_speedup if mode == "int8"
+                     else self.bf16_speedup)
+            rescore = float(self.rescore_factor * k)
+            scores[f"quant:{mode}"] = n_rows / speed + rescore
+        if cluster_rows is not None and cluster_rows > 0:
+            probes = expected_probes
+            if probes is None:
+                probes = self.expected_probes(
+                    selectivity, min_probes=min_probes,
+                    max_probes=max_probes)
+            scores["ivf"] = (float(probes) * float(cluster_rows)
+                             * self.ivf_gather_penalty)
+        return scores
+
+    def choose(self, scores: dict) -> str:
+        """The cheapest scored lane (ties break lexicographically —
+        deterministic)."""
+        return min(sorted(scores), key=lambda lane: scores[lane])
+
+    # -- probe-budget prediction ---------------------------------------------
+
+    def probe_budget(self, probes_hi: float, *, floor: int,
+                     ceiling: int) -> int:
+        """Pilot budget from an observed high-quantile probe EMA."""
+        want = int(math.ceil(float(probes_hi) * self.headroom)) + 1
+        return int(min(max(want, floor), ceiling))
+
+
+def _gather_penalty(batch: dict) -> float | None:
+    """Per-row ms of probed IVF rows over per-row ms of flat rows, from the
+    largest-batch rows of BENCH_batch.json (None if counters are absent)."""
+    def per_row_ms(rows):
+        best = None
+        for r in rows or ():
+            evals = r.get("distance_evals_per_query") or 0
+            if evals and r.get("ms") and r.get("batch"):
+                best = (r["ms"] / r["batch"]) / evals
+        return best
+
+    w = batch.get("workloads") or {}
+    flat, ivf = per_row_ms(w.get("flat")), per_row_ms(w.get("ivf"))
+    if not flat or not ivf:
+        return None
+    return max(1.0, ivf / flat)

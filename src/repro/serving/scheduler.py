@@ -108,33 +108,82 @@ def _leading_probes(stats: dict) -> np.ndarray:
     return probes
 
 
-def run_effort_bucketed(compiled, binds: dict, pilot_budget: int):
+def _pilot_info(pilot) -> "int | dict":
+    """JSON-able form of a pilot budget (scalar int or array summary)."""
+    if np.ndim(pilot) == 0:
+        return int(pilot)
+    arr = np.asarray(pilot)
+    return {"min": int(arr.min()), "max": int(arr.max()),
+            "shape": list(arr.shape)}
+
+
+def run_effort_bucketed(compiled, binds: dict, pilot_budget=0, *,
+                        advisor=None):
     """Two-phase effort-bucketed execution of a stacked bind batch.
 
     Returns ``(out, info)`` where ``out`` is bit-identical to
     ``compiled.execute_bucketed`` on the same binds (lock-step) and ``info``
     reports the phase split: ``n_light`` queries finished in the pilot,
-    ``n_heavy`` re-ran in the (smaller) phase-2 batch."""
-    if pilot_budget <= 0:
-        raise ValueError("pilot_budget must be positive")
+    ``n_heavy`` re-ran in the (smaller) phase-2 batch.
+
+    ``pilot_budget`` may be a scalar (the classic static pilot), a (Q,)
+    per-bind-set array, or — for join plans — a (Q, L) per-left array (the
+    runtime ``probe_budget`` lane of the compiled bucket executables, so no
+    shape retraces beyond the first).  A bind set is heavy if ANY of its
+    queries/left rows hit its own budget; phase 2 re-runs those sets
+    unbudgeted, preserving bit-exactness unconditionally.
+
+    With ``advisor`` (a :class:`~repro.opt.advisor.LoweringAdvisor`), the
+    pilot comes from the stats-driven predictor instead (DESIGN.md §14): a
+    cold or probe-less plan runs single-phase lock-step, a warmed plan gets
+    a predicted scalar pilot or per-left budgets, and the merged counters
+    are folded back into the advisor's stats store either way.  ``compiled``
+    may be a core ``CompiledQuery`` or a session-API ``Statement``."""
+    inner = getattr(compiled, "compiled", compiled)
     executor = compiled.executor
+    decision = None
+    if advisor is not None and getattr(advisor, "enabled", True):
+        decision = advisor.advise_batch(inner, binds)
+        pilot_budget = (decision.pilot if decision.pilot is not None else 0)
+    scalar_pilot = np.ndim(pilot_budget) == 0
+    if scalar_pilot and pilot_budget <= 0 and advisor is None:
+        raise ValueError("pilot_budget must be positive")
+    t0 = time.perf_counter()
     if not compiled.batch_native:
         # the vmap-of-scalar fallback has no probe_budget lane: a pilot run
         # would execute the FULL unbudgeted batch and classify every query
         # heavy — strictly more work than lock-step.  Run single-phase.
         out = executor(binds)
         qn = _leading_probes(out["stats"]).shape[0]
-        return out, {"n_light": qn, "n_heavy": 0,
-                     "pilot_budget": pilot_budget,
-                     "skipped": "plan has no native batched lowering"}
-    out1 = executor(binds, probe_budget=pilot_budget)
-    probes = _leading_probes(out1["stats"])
-    heavy = np.nonzero(probes >= pilot_budget)[0]
+        info = {"n_light": qn, "n_heavy": 0,
+                "pilot_budget": _pilot_info(pilot_budget),
+                "skipped": "plan has no native batched lowering"}
+        return _observed(advisor, inner, decision, out, t0, info)
+    if scalar_pilot and pilot_budget <= 0:
+        # advisor-driven lock-step (cold plan, or no probe lane): one
+        # phase, but the counters still feed the stats store
+        out = executor(binds)
+        qn = _leading_probes(out["stats"]).shape[0]
+        info = {"n_light": qn, "n_heavy": 0, "pilot_budget": 0}
+        return _observed(advisor, inner, decision, out, t0, info)
+    if scalar_pilot:
+        budget = int(pilot_budget)
+    else:
+        budget = np.asarray(pilot_budget, np.int32)
+    out1 = executor(binds, probe_budget=budget)
+    probes = np.asarray(out1["stats"]["probes"])
+    limit = budget
+    if not scalar_pilot and probes.ndim == 2 and np.ndim(budget) == 1:
+        limit = np.asarray(budget)[:, None]   # per-bind-set vs (Q, L) stats
+    hit = probes >= limit
+    if hit.ndim > 1:
+        hit = hit.any(axis=tuple(range(1, hit.ndim)))
+    heavy = np.nonzero(hit)[0]
     qn = probes.shape[0]
     info = {"n_light": int(qn - heavy.size), "n_heavy": int(heavy.size),
-            "pilot_budget": pilot_budget}
+            "pilot_budget": _pilot_info(budget)}
     if heavy.size == 0:
-        return out1, info
+        return _observed(advisor, inner, decision, out1, t0, info)
     # host-side gather: a jnp fancy-index would compile per heavy-set shape
     sub = {k: np.asarray(v)[heavy] for k, v in binds.items()}
     out2 = executor(sub)
@@ -146,7 +195,18 @@ def run_effort_bucketed(compiled, binds: dict, pilot_budget: int):
         merged[heavy] = b
         return merged
 
-    return jax.tree.map(scatter, out1, out2), info
+    merged = jax.tree.map(scatter, out1, out2)
+    return _observed(advisor, inner, decision, merged, t0, info)
+
+
+def _observed(advisor, inner, decision, out, t0: float, info: dict):
+    """Fold the finished execution into the advisor (if any) and attach the
+    decision summary to ``info`` under ``"opt"``."""
+    if advisor is not None and decision is not None:
+        latency_ms = (time.perf_counter() - t0) * 1e3
+        advisor.observe(inner, decision, out, latency_ms)
+        info["opt"] = decision.summary()
+    return out, info
 
 
 class BatchScheduler:
@@ -166,13 +226,17 @@ class BatchScheduler:
     cached plan before stacking)."""
 
     def __init__(self, compiled, config: SchedulerConfig | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 advisor=None):
         self.compiled = compiled
         # None-sentinel, NOT a `config=SchedulerConfig()` default: a
         # class-level default dataclass would be one shared instance across
         # every scheduler ever constructed.
         self.config = config if config is not None else SchedulerConfig()
         self.clock = clock
+        # optional repro.opt.LoweringAdvisor: replaces the static
+        # pilot_budget with the stats-driven predictor (DESIGN.md §14)
+        self.advisor = advisor
         self._queue: collections.deque[_Request] = collections.deque()
         self._results: dict[int, Any] = {}
         self._next_rid = 0
@@ -324,8 +388,14 @@ class BatchScheduler:
 
     def execute(self, binds_list: list[dict]):
         """Execute one coalesced batch through the bucketed executor
-        (effort-bucketed when ``pilot_budget`` > 0)."""
+        (effort-bucketed when ``pilot_budget`` > 0; advisor-predicted
+        budgets replace the static pilot when an ``advisor`` is attached)."""
         binds = self.compiled._stack_binds(binds_list, {})
+        if self.advisor is not None:
+            out, _info = run_effort_bucketed(self.compiled, binds,
+                                             self.config.pilot_budget,
+                                             advisor=self.advisor)
+            return out
         if self.config.pilot_budget > 0:
             out, _info = run_effort_bucketed(self.compiled, binds,
                                              self.config.pilot_budget)

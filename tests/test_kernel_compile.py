@@ -13,7 +13,11 @@ through ``jax.jit(...).lower(...).compile()`` on an attached TPU backend:
   quantized outputs stay BIT-identical to the compiled fp32 outputs —
   the same-shape-replay invariant must survive real MXU accumulation;
 * the fp32 and quantized range kernels compile and agree the same way
-  (ids / sims / valid / count).
+  (ids / sims / valid / count);
+* the SINGLE-query fused kernels (matvec-shaped pipelines with their own
+  output layout) compile and match NumPy;
+* the column-parallel extract-min compiles across a k sweep (every k is a
+  distinct (k, BLOCK_Q) layout Mosaic must accept).
 
 Without a TPU backend every test skips cleanly (interpret-mode coverage
 already runs in the tier-1 suite — tests/test_quant.py and the kernel
@@ -26,7 +30,8 @@ import pytest
 
 from repro.core import Metric
 from repro.data.quantized import quantize_corpus
-from repro.kernels.ops import fused_range_topk_batch, fused_scan_topk_batch
+from repro.kernels.ops import (fused_range_scan, fused_range_topk_batch,
+                               fused_scan_topk, fused_scan_topk_batch)
 from repro.kernels.quant import (fused_range_topk_batch_q,
                                  fused_scan_topk_batch_q)
 
@@ -104,3 +109,57 @@ def test_range_kernels_compile_and_agree(mode):
             jnp.asarray(qc.row_l2), queries)
     got = qk.lower(*args).compile()(*args)
     _tree_equal(ref, got, ctx=f"range/{mode}")
+
+
+def test_single_query_kernels_compile_and_agree():
+    """The single-query fused kernels — a matvec-shaped (BLOCK_N, D)·(D,)
+    pipeline with a different output layout from the batch kernels — must
+    also pass Mosaic (the ROADMAP item called them out as interpret-only)."""
+    _require_tpu()
+    corpus, queries = _data()
+    metric = Metric.INNER_PRODUCT
+    query = queries[0]
+
+    topk = jax.jit(lambda c, q: fused_scan_topk(
+        c, q, K, None, metric, interpret=False))
+    ids, sims, valid = (np.asarray(x)
+                        for x in topk.lower(corpus, query).compile()(
+                            corpus, query))
+    assert ids.shape == sims.shape == valid.shape == (K,)
+    assert valid.all()
+    want_ids = np.argsort(corpus @ query)[-K:][::-1]
+    assert set(ids) == set(want_ids)
+    np.testing.assert_allclose(np.sort(sims), np.sort(corpus @ query)[-K:],
+                               rtol=1e-5, atol=1e-5)
+
+    radius = np.float32(0.2)
+    rng_scan = jax.jit(lambda c, q: fused_range_scan(
+        c, q, radius, None, metric, interpret=False))
+    hit, raw, count = (np.asarray(x)
+                       for x in rng_scan.lower(corpus, query).compile()(
+                           corpus, query))
+    want_hit = (corpus @ query) >= radius
+    assert np.array_equal(hit, want_hit)
+    assert int(count) == int(want_hit.sum())
+    np.testing.assert_allclose(raw[hit], (corpus @ query)[hit],
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("k", [1, 4, 16, 64])
+def test_extract_min_sweep_compiles(k):
+    """Sweep the column-parallel extract-min over k: every k changes the
+    (k, BLOCK_Q) output layout and the in-register k-step loop Mosaic must
+    accept — the batch tests above only exercise k=8."""
+    _require_tpu()
+    corpus, queries = _data()
+    metric = Metric.INNER_PRODUCT
+    fn = jax.jit(lambda c, q: fused_scan_topk_batch(
+        c, q, k, None, metric, interpret=False))
+    ids, sims, valid = (np.asarray(x)
+                        for x in fn.lower(corpus, queries).compile()(
+                            corpus, queries))
+    assert ids.shape == sims.shape == valid.shape == (QN, k)
+    assert valid.all()
+    want = np.sort(corpus @ queries.T, axis=0)[-k:][::-1].T
+    np.testing.assert_allclose(np.sort(sims, axis=1)[:, ::-1], want,
+                               rtol=1e-5, atol=1e-5)

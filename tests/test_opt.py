@@ -1,0 +1,346 @@
+"""The adaptive optimizer's contracts (DESIGN.md §14).
+
+Four promises, each asserted here:
+
+* **Stats survive and invalidate.**  StatsStore round-trips through JSON
+  byte-identically, and every aggregate is stamped with the catalog version
+  token — a catalog bump makes lookups miss (stale stats never advise).
+* **Decisions are deterministic.**  Two advisors fed the same executed
+  sequence under a fixed seed emit identical decision streams.
+* **Decisions never change results.**  Adaptive executions are bit-identical
+  to the plain bucketed path across Q1–Q6, and ``ExecutionHints`` always
+  win over the advisor.
+* **Zero new retraces on the hot path.**  Once the (lock-step + budgeted)
+  bucket variants are traced, adaptive executions with *changing* predicted
+  budgets add no trace counts — budgets ride the runtime lane.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import ExecutionHints, connect
+from repro.core import Metric
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+from repro.opt import CostModel, LoweringAdvisor, StatsStore, bucket_of
+from repro.opt.stats import N_BUCKETS
+
+PROBE = ProbeConfig(max_probes=16, capacity=128, termination="bound",
+                    probe_batch=2)
+
+Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+      "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2 = ("SELECT sample_id FROM images "
+      "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}")
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year >= ${y}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 3
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+
+CASES = {"q1": Q1, "q2": Q2, "q3": Q3, "q4": Q4, "q5": Q5, "q6": Q6}
+
+
+@pytest.fixture(scope="module")
+def env():
+    from repro.data import make_laion_catalog
+
+    cat = make_laion_catalog(n_rows=1200, n_queries=4, dim=16, n_modes=8,
+                             num_categories=4, seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=16,
+                    metric=Metric.INNER_PRODUCT, iters=3)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -30, axis=1)[:, -30]))
+    return cat, radius
+
+
+def _qvecs(cat, qn: int) -> np.ndarray:
+    base = np.asarray(cat.table("queries")["embedding"])
+    rng = np.random.default_rng(3)
+    reps = -(-qn // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:qn]
+    return (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+
+
+def _binds_for(case: str, cat, radius: float, qn: int, seed: int = 7) -> dict:
+    rng = np.random.default_rng(seed)
+    price = np.asarray(cat.table("laion")["price"])
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    if case == "q1":
+        return {"qv": _qvecs(cat, qn),
+                "p": np.quantile(price, rng.uniform(0.3, 1.0, qn)).astype(
+                    np.float32)}
+    if case == "q2":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(
+                    np.float32),
+                "d": np.quantile(dates, rng.uniform(0.2, 0.8, qn)).astype(
+                    np.int32)}
+    if case in ("q3", "q6"):
+        return {"r": (radius * rng.uniform(0.95, 1.0, qn)).astype(
+            np.float32)}
+    if case == "q4":
+        years = np.asarray(cat.table("movies")["release_year"])
+        return {"y": np.quantile(years, rng.uniform(0.1, 0.6, qn)).astype(
+            np.int32)}
+    if case == "q5":
+        return {"qv": _qvecs(cat, qn),
+                "r": (radius * rng.uniform(0.95, 1.0, qn)).astype(
+                    np.float32)}
+    raise ValueError(case)
+
+
+def _assert_tree_equal(a: dict, b: dict, ctx: str = ""):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb), ctx
+    for i, (x, y) in enumerate(zip(la, lb)):
+        assert np.array_equal(np.asarray(x), np.asarray(y)), f"{ctx}[{i}]"
+
+
+# ---------------------------------------------------------------------------
+# StatsStore
+# ---------------------------------------------------------------------------
+
+def test_bucket_policy_edges():
+    assert bucket_of(1.0) == 0
+    assert bucket_of(0.6) == 0
+    assert bucket_of(0.5) == 1          # (0.25, 0.5]
+    assert bucket_of(0.25) == 2
+    assert bucket_of(1e-6) == N_BUCKETS - 1
+    assert bucket_of(0.0) == N_BUCKETS - 1
+    # monotone: tighter never lands in a looser bucket
+    sels = np.linspace(1e-6, 1.0, 200)
+    buckets = [bucket_of(s) for s in sels]
+    assert all(b1 >= b2 for b1, b2 in zip(buckets, buckets[1:]))
+
+
+def test_stats_persistence_roundtrip(tmp_path):
+    store = StatsStore()
+    v = ((("table", "laion"), 3),)
+    store.observe("plan-a", 2, v, selectivity=0.1,
+                  probes=np.array([3, 5, 9]), rows=120.0, latency_ms=1.5)
+    store.observe("plan-a", 2, v, selectivity=0.12,
+                  probes=np.array([4, 4, 4]), rows=100.0, latency_ms=1.1)
+    store.observe_left("plan-b", v, np.array([[2, 8], [3, 5]]))
+    path = tmp_path / "stats.json"
+    store.save(str(path))
+    back = StatsStore.load(str(path))
+    assert back.to_json() == store.to_json()        # byte-identical
+    assert back.lookup("plan-a", 2, v) == store.lookup("plan-a", 2, v)
+    np.testing.assert_array_equal(back.left_profile("plan-b", v),
+                                  store.left_profile("plan-b", v))
+
+
+def test_stats_version_invalidation():
+    store = StatsStore()
+    v1, v2 = (1,), (2,)
+    store.observe("p", 0, v1, selectivity=1.0, probes=np.array([5]))
+    assert store.lookup("p", 0, v1) is not None
+    # a different catalog version token misses AND drops the stale entry
+    assert store.lookup("p", 0, v2) is None
+    assert store.lookup("p", 0, v1) is None
+    store.observe_left("p", v1, np.array([[4, 6]]))
+    assert store.left_profile("p", v1) is not None
+    assert store.left_profile("p", v2) is None
+
+
+def test_advisor_invalidates_on_catalog_bump(env):
+    cat, radius = env
+    db = connect(cat, adaptive=True, engine="chase", probe=PROBE)
+    st = db.prepare(Q1)
+    binds = _binds_for("q1", cat, radius, 4)
+    st.execute(binds)                                   # cold: observes
+    rep = st.execute(binds).explain()
+    assert rep.opt["source"] in ("stats", "profile")    # warmed
+    # re-register the index: the version token moves, stats must not advise
+    idx = build_ivf(jax.random.key(1), cat.table("laion")["vec"], nlist=16,
+                    metric=Metric.INNER_PRODUCT, iters=2)
+    cat.register_index("products", "embedding", idx)
+    rep = st.execute(binds).explain()
+    assert rep.opt["source"] == "cold"
+
+
+# ---------------------------------------------------------------------------
+# CostModel
+# ---------------------------------------------------------------------------
+
+def test_cost_model_calibration_and_prediction():
+    m1, m2 = CostModel.from_bench(), CostModel.from_bench()
+    assert m1.describe() == m2.describe()               # deterministic
+    scores = m1.score(n_rows=10_000, k=10, selectivity=0.05,
+                      cluster_rows=100.0, quant_modes=("int8", "bf16"))
+    assert set(scores) == {"flat", "ivf", "quant:int8", "quant:bf16"}
+    assert scores["quant:int8"] < scores["flat"]
+    assert m1.choose(scores) == min(scores, key=scores.get)
+    # budget prediction: headroom above the EMA, clipped to the ceiling
+    assert m1.probe_budget(8.0, floor=3, ceiling=16) == 11
+    assert m1.probe_budget(100.0, floor=3, ceiling=16) == 16
+    assert m1.probe_budget(0.5, floor=3, ceiling=16) == 3
+    # tighter selectivity never predicts fewer cold-start probes
+    e = [m1.expected_probes(s, min_probes=4, max_probes=64)
+         for s in (1.0, 0.5, 0.1, 0.01)]
+    assert e == sorted(e)
+
+
+# ---------------------------------------------------------------------------
+# Advisor decisions
+# ---------------------------------------------------------------------------
+
+def test_advisor_decisions_deterministic(env):
+    cat, radius = env
+
+    def run():
+        db = connect(cat, adaptive=True, engine="chase", probe=PROBE)
+        st = db.prepare(Q1)
+        decisions = []
+        for i in range(4):
+            rep = st.execute(_binds_for("q1", cat, radius, 4,
+                                        seed=i)).explain()
+            decisions.append(rep.opt)
+        return decisions
+
+    assert run() == run()
+
+
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_adaptive_bit_parity(env, case):
+    """Advisor-chosen executions (cold AND warmed) must be bit-identical to
+    the plain bucketed path and the hint-forced exact-shape path."""
+    cat, radius = env
+    opts = dict(engine="chase", probe=PROBE)
+    if case in ("q3", "q6"):
+        opts["max_pairs"] = 64
+    adb = connect(cat, adaptive=True, **opts)
+    pdb = connect(cat, **opts)
+    ast, pst = adb.prepare(CASES[case]), pdb.prepare(CASES[case])
+    binds = _binds_for(case, cat, radius, 4)
+    for i in range(3):                  # cold -> stats/profile-warmed
+        got = ast.execute(binds)
+        want = pst.execute(binds)
+        _assert_tree_equal(got.data, want.data, ctx=f"{case}/iter{i}")
+    exact = pst.execute(binds, hints=ExecutionHints(exact_shape=True))
+    _assert_tree_equal(got.data, exact.data, ctx=f"{case}/exact")
+
+
+def test_hints_always_beat_advisor(env):
+    cat, radius = env
+    db = connect(cat, adaptive=True, engine="chase", probe=PROBE)
+    st = db.prepare(Q1)
+    binds = _binds_for("q1", cat, radius, 4)
+    st.execute(binds)                                   # warm the stats
+    for hints in (ExecutionHints(exact_shape=True),
+                  ExecutionHints(pilot_budget=5),
+                  ExecutionHints(probe_budget=6),
+                  ExecutionHints(no_opt=True)):
+        rep = st.execute(binds, hints=hints).explain()
+        assert rep.path != "opt", hints
+        assert rep.opt is None, hints
+
+
+def test_zero_retraces_on_hot_path(env):
+    """Changing predicted budgets ride the runtime probe_budget lane: after
+    the first adaptive round has traced the (lock-step, budgeted) bucket
+    variants, further adaptive executions add NO trace counts."""
+    cat, radius = env
+    db = connect(cat, adaptive=True, engine="chase", probe=PROBE)
+    st = db.prepare(Q1)
+    binds = _binds_for("q1", cat, radius, 4, seed=0)
+    for _ in range(2):                  # cold lock-step + first budgeted run
+        st.execute(binds)               # (same binds => same bucket warms)
+    warm = dict(st.explain().trace_counts)
+    for i in range(1, 5):               # new bind values => new predictions
+        rep = st.execute(_binds_for("q1", cat, radius, 4, seed=i)).explain()
+        assert rep.path == "opt"
+    assert dict(st.explain().trace_counts) == warm
+
+
+def test_effort_array_pilot_bit_parity(env):
+    """run_effort_bucketed with per-query and per-left ARRAY pilots stays
+    bit-identical to lock-step (the phase-2 safety net is unconditional)."""
+    from repro.core import EngineOptions, compile_query
+    from repro.serving.scheduler import run_effort_bucketed
+
+    cat, radius = env
+
+    def _sets(case, qn):
+        batch = _binds_for(case, cat, radius, qn)
+        return [{k: v[i] for k, v in batch.items()} for i in range(qn)]
+
+    q = compile_query(Q2, cat, EngineOptions(engine="chase", probe=PROBE))
+    binds = q._stack_binds(_sets("q2", 4), {})
+    ref = q.executor(binds)
+    for pilot in (np.array([2, 9, 3, 16], np.int32),
+                  np.array([1, 1, 1, 1], np.int32)):
+        out, info = run_effort_bucketed(q, binds, pilot)
+        _assert_tree_equal(jax.tree.map(np.asarray, ref), out,
+                           ctx=f"pilot={pilot}")
+        assert info["n_light"] + info["n_heavy"] == 4
+    j = compile_query(Q3, cat, EngineOptions(engine="chase", probe=PROBE,
+                                             max_pairs=64))
+    jbinds = j._stack_binds(_sets("q3", 2), {})
+    jref = jax.tree.map(np.asarray, j.executor(jbinds))
+    nleft = np.asarray(jref["stats"]["probes"]).shape[1]
+    per_left = np.tile(np.arange(1, nleft + 1, dtype=np.int32) % 7 + 1,
+                       (2, 1))
+    out, info = run_effort_bucketed(j, jbinds, per_left)
+    _assert_tree_equal(jref, out, ctx="per-left")
+
+
+def test_advisor_stats_path_persists_through_db(env, tmp_path):
+    cat, radius = env
+    path = str(tmp_path / "opt_stats.json")
+    db = connect(cat, adaptive=True, stats_path=path, engine="chase",
+                 probe=PROBE)
+    st = db.prepare(Q1)
+    binds = _binds_for("q1", cat, radius, 4)
+    st.execute(binds)
+    db.advisor.save()
+    db2 = connect(cat, adaptive=True, stats_path=path, engine="chase",
+                  probe=PROBE)
+    # restart skips the cold phase: first execution already advises effort
+    rep = db2.prepare(Q1).execute(binds).explain()
+    assert rep.opt["source"] in ("stats", "profile")
+
+
+def test_advise_surface(env):
+    cat, _radius = env
+    db = connect(cat, engine="chase", probe=PROBE)
+    advice = db.advise(Q1, selectivity=0.1)
+    assert {"scores", "recommended", "n_rows", "cost_model"} <= set(advice)
+    assert advice["recommended"] in advice["scores"]
+    assert advice["n_rows"] == 1200
