@@ -15,7 +15,13 @@ variants:
   asserted via ``trace_counts``),
 * ``execute_hit``    — a bucketed batch execute through a variant statement
   (rename translation on the hot path, reusing the original's bucket
-  executable).
+  executable),
+* ``restart_cold`` / ``restart_warm`` — SUBPROCESS prepare + first batch
+  execute latency, without vs with a populated persistent AOT plan cache
+  (DESIGN.md §15): three children run back-to-back (cold, untimed
+  populate, warm), so the ``restart.speedup`` ratio never rides cross-run
+  machine noise.  The warm child hard-asserts zero retraces.
+  ``scripts/bench_gate.py`` gates ``speedup >= 10``.
 
 Writes ``BENCH_api.json``.
 
@@ -25,6 +31,9 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import tempfile
 import time
 
 import numpy as np
@@ -50,6 +59,78 @@ WHERE nsfw <> ${m} AND price < ${cap}
 ORDER BY DISTANCE(embedding, ${vec})
 LIMIT 10
 """
+
+
+CHILD_MARK = "Q9_CHILD_JSON:"
+
+
+def _child_binds(env: BenchEnv) -> list:
+    return [{"qv": env.qvecs[i % len(env.qvecs)],
+             "max_price": env.price_thresholds[0.5], "mid": 0}
+            for i in range(N_BATCH)]
+
+
+def child_main(role: str, aot_dir: str, full: bool) -> None:
+    """Subprocess body: build the seeded env (untimed), then time ONE
+    prepare + first batch execute — the restart cost a serving process
+    actually pays.  ``cold`` runs without a cache; ``populate`` / ``warm``
+    attach ``aot_dir`` (DESIGN.md §15).  The warm child hard-asserts zero
+    retraces: if the persistent cache misses, the bench fails loud."""
+    import jax
+
+    from .common import get_env
+    env = get_env(smoke=not full)
+    db = connect(env.catalog,
+                 EngineOptions(engine="chase", probe=env.cfg.probe),
+                 aot_cache_path=(None if role == "cold" else aot_dir))
+    binds = _child_binds(env)
+    t0 = time.perf_counter()
+    stmt = db.prepare(SQL)
+    out = stmt.execute(binds)
+    jax.block_until_ready(out["ids"])
+    ms = 1e3 * (time.perf_counter() - t0)
+    traces = sum(stmt.executor.trace_counts.values())
+    if role == "warm" and traces:
+        raise SystemExit(f"warm restart retraced ({traces} traces) — the "
+                         f"persistent AOT cache missed")
+    print(CHILD_MARK + json.dumps({"role": role, "ms": round(ms, 3),
+                                   "traces": traces}))
+
+
+def _spawn(role: str, aot_dir: str, full: bool) -> dict:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    child_env = dict(os.environ)
+    child_env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                               + child_env.get("PYTHONPATH", ""))
+    cmd = [sys.executable, "-m", "benchmarks.q9_prepare_cache",
+           "--child", role, "--aot", aot_dir] + (["--full"] if full else [])
+    proc = subprocess.run(cmd, cwd=repo, env=child_env,
+                          capture_output=True, text=True, timeout=1200)
+    if proc.returncode != 0:
+        raise RuntimeError(f"q9 restart child {role!r} failed:\n"
+                           f"{proc.stdout}\n{proc.stderr}")
+    for line in proc.stdout.splitlines():
+        if line.startswith(CHILD_MARK):
+            return json.loads(line[len(CHILD_MARK):])
+    raise RuntimeError(f"q9 restart child {role!r} printed no result line")
+
+
+def restart_bench(env: BenchEnv, rows: list) -> dict:
+    """Cold vs AOT-warm restart latency: three subprocesses back-to-back
+    (cold, untimed populate, warm) over one temporary cache dir."""
+    from repro.configs.chase_laion import smoke_bench_config
+    full = env.cfg.n_rows != smoke_bench_config().n_rows
+    with tempfile.TemporaryDirectory(prefix="q9aot-") as aot_dir:
+        cold = _spawn("cold", aot_dir, full)
+        _spawn("populate", aot_dir, full)      # untimed: persists entries
+        warm = _spawn("warm", aot_dir, full)
+    speedup = cold["ms"] / max(warm["ms"], 1e-6)
+    rows.append(Row("q9_restart_cold", cold["ms"]))
+    rows.append(Row("q9_restart_warm", warm["ms"],
+                    speedup=round(speedup, 1)))
+    return {"cold_ms": cold["ms"], "warm_ms": warm["ms"],
+            "cold_traces": cold["traces"], "warm_traces": warm["traces"],
+            "speedup": round(speedup, 2)}
 
 
 def _timed_ms(fn, repeats: int = REPEATS) -> float:
@@ -104,6 +185,7 @@ def run(env: BenchEnv, rows: list) -> dict:
         "cache": {"hits": info.hits, "misses": info.misses,
                   "entries": info.entries},
     }
+    report["restart"] = restart_bench(env, rows)
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=2)
     rows.append(Row("q9_prepare_cold", cold_ms))
@@ -123,7 +205,14 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="full-scale catalog (default: smoke)")
+    ap.add_argument("--child", choices=("cold", "populate", "warm"),
+                    help="restart-bench subprocess role (internal)")
+    ap.add_argument("--aot", default="",
+                    help="AOT cache dir for --child populate/warm")
     args = ap.parse_args()
+    if args.child:
+        child_main(args.child, args.aot, args.full)
+        raise SystemExit(0)
     env = get_env(smoke=not args.full)
     rows: list[Row] = []
     report = run(env, rows)
@@ -133,4 +222,7 @@ if __name__ == "__main__":
     print(f"\ncold prepare {report['prepare_cold_ms']:.1f} ms vs warm "
           f"{report['prepare_warm_ms']:.3f} ms "
           f"({report['cold_over_warm']}x); variant hit "
-          f"{report['prepare_variant_ms']:.3f} ms")
+          f"{report['prepare_variant_ms']:.3f} ms; restart cold "
+          f"{report['restart']['cold_ms']:.1f} ms vs AOT-warm "
+          f"{report['restart']['warm_ms']:.1f} ms "
+          f"({report['restart']['speedup']}x)")

@@ -43,6 +43,10 @@ Rows gated:
     static p75 pilot on the join row (ratio_adaptive_vs_static >= 1.0,
     measured back-to-back in one run); the single-table drift row's
     thinner margin is tracked, not gated.
+  * BENCH_api.json:   q9 restart row — within-run contract only: the
+    AOT-warm subprocess (prepare + first batch execute against a populated
+    persistent plan cache, DESIGN.md §15) must be >= 10x faster than the
+    cold subprocess compile, both spawned back-to-back by one q9 run.
   * BENCH_quant.json: flat quantized-scan rows (key: batch, qps) — the
     same interpret-mode fused-kernel stability argument as BENCH_batch,
     per mode (fp32 / bf16 / int8).  Two gates: fresh-vs-committed QPS per
@@ -241,6 +245,21 @@ def main() -> int:
             failures.append(
                 f"quant.speedup[batch=64]: int8 {i8:.1f} < 1.5x fp32 "
                 f"{f32:.1f} (same-run ratio {i8 / f32:.2f}x)")
+
+    # within-run restart contract (BENCH_api.json): preparing a persisted
+    # statement in a FRESH process must be >= 10x faster than the cold
+    # subprocess compile — cold and AOT-warm children run back-to-back in
+    # one q9 invocation, so the ratio never rides cross-run machine noise
+    restart = ((_fresh("BENCH_api.json") or _committed("BENCH_api.json"))
+               or {}).get("restart")
+    if restart and restart.get("speedup") is not None:
+        checked += 1
+        if restart["speedup"] < 10.0:
+            failures.append(
+                f"api.restart: AOT-warm speedup {restart['speedup']:.1f}x "
+                f"< 10x (cold {restart.get('cold_ms')}ms, warm "
+                f"{restart.get('warm_ms')}ms, warm_traces="
+                f"{restart.get('warm_traces')})")
 
     base = _committed("BENCH_adaptive.json")
     fresh = _fresh("BENCH_adaptive.json")

@@ -28,7 +28,11 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+JUNIT_XML="$(mktemp -t pytest-junit-XXXXXX.xml)"
+python -m pytest -x -q --junit-xml="$JUNIT_XML"
+# silent-skip audit: every skip must carry a registered reason
+python scripts/check_skips.py "$JUNIT_XML"
+rm -f "$JUNIT_XML"
 if [[ "${SMOKE_SLOW:-0}" == "1" ]]; then
     python -m pytest -x -q -m slow
 fi

@@ -20,10 +20,12 @@ Legacy shim: :func:`repro.core.compile_query` still works and returns the
 same bit-identical results — but compiles fresh on every call instead of
 hitting the plan cache.
 """
+from ..core.aot import AOTCacheWarning
 from ..dist.sharding import DistSpec
 from .database import CacheInfo, Database, Statement, connect
 from .hints import ExecutionHints
 from .result import ExplainReport, Result, ResultBatch
 
 __all__ = ["connect", "Database", "Statement", "CacheInfo", "DistSpec",
-           "ExecutionHints", "ExplainReport", "Result", "ResultBatch"]
+           "ExecutionHints", "ExplainReport", "Result", "ResultBatch",
+           "AOTCacheWarning"]

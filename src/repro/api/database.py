@@ -48,12 +48,17 @@ NO_HINTS = ExecutionHints()
 
 @dataclasses.dataclass(frozen=True)
 class CacheInfo:
-    """Plan-cache statistics snapshot (functools-style)."""
+    """Plan-cache statistics snapshot (functools-style).
+
+    ``aot`` is the persistent disk cache's counter snapshot
+    (hits / misses / corrupt / stale / errors / saves — DESIGN.md §15)
+    when the session connected with ``aot_cache_path``, else None."""
     hits: int
     misses: int
     entries: int
     evictions: int = 0
     max_entries: "int | None" = None
+    aot: "dict | None" = None
 
 
 @dataclasses.dataclass
@@ -74,6 +79,7 @@ class _CacheEntry:
 def connect(catalog: Catalog, options: EngineOptions | None = None,
             max_cached_plans: int | None = 128, adaptive: bool = False,
             stats_path: str | None = None,
+            aot_cache_path: str | None = None,
             **option_overrides) -> "Database":
     """Open a session over a catalog — the one front door to the engine.
 
@@ -83,13 +89,17 @@ def connect(catalog: Catalog, options: EngineOptions | None = None,
     unbounded).  ``adaptive=True`` attaches a
     :class:`~repro.opt.LoweringAdvisor` (DESIGN.md §14): batched executions
     feed runtime stats back and get predicted probe budgets, hints always
-    winning; ``stats_path`` persists/restores the stats store there."""
+    winning; ``stats_path`` persists/restores the stats store there.
+    ``aot_cache_path`` names a directory for the persistent AOT plan cache
+    (DESIGN.md §15): compiled bucket executables are persisted
+    write-through and restored on restart with zero retraces, so a fresh
+    process preparing a previously-seen statement is warm."""
     if option_overrides:
         options = dataclasses.replace(options or EngineOptions(),
                                       **option_overrides)
     return Database(catalog, options or EngineOptions(),
                     max_cached_plans=max_cached_plans, adaptive=adaptive,
-                    stats_path=stats_path)
+                    stats_path=stats_path, aot_cache_path=aot_cache_path)
 
 
 class Database:
@@ -103,7 +113,8 @@ class Database:
 
     def __init__(self, catalog: Catalog, options: EngineOptions | None = None,
                  max_cached_plans: int | None = 128, adaptive: bool = False,
-                 stats_path: str | None = None):
+                 stats_path: str | None = None,
+                 aot_cache_path: str | None = None):
         if max_cached_plans is not None and max_cached_plans < 1:
             raise ValueError(
                 f"max_cached_plans must be >= 1 or None, "
@@ -115,6 +126,10 @@ class Database:
         if adaptive:
             from ..opt import LoweringAdvisor
             self.advisor = LoweringAdvisor(catalog, stats_path=stats_path)
+        self.aot_cache = None
+        if aot_cache_path is not None:
+            from ..core.aot import AOTPlanCache
+            self.aot_cache = AOTPlanCache(aot_cache_path)
         self._cache: "collections.OrderedDict[tuple, _CacheEntry]" = (
             collections.OrderedDict())
         self._hits = 0
@@ -161,6 +176,14 @@ class Database:
             self._misses += 1
             compiled = compile_plan(sql, plan, self.catalog, eff_options,
                                     dict(static_binds))
+            if self.aot_cache is not None:
+                # route the fresh executor through the persistent cache:
+                # previously-persisted buckets load with zero traces, cold
+                # buckets export + persist write-through — which is what
+                # makes LRU eviction evict to disk, not to nothing
+                from ..core.aot import AOTBinding
+                compiled.executor.attach_aot(AOTBinding(
+                    self.aot_cache, key, self.catalog, compiled._dep_keys))
             entry = _CacheEntry(compiled, param_order, fp)
             self._cache[key] = entry
             self._trim()
@@ -225,9 +248,12 @@ class Database:
         return advisor.score_plan(st.compiled, selectivity=selectivity)
 
     def cache_info(self) -> CacheInfo:
-        """Hits / misses / live entries / evictions of the plan cache."""
+        """Hits / misses / live entries / evictions of the plan cache, plus
+        the disk-cache counter snapshot when ``aot_cache_path`` is set."""
         return CacheInfo(self._hits, self._misses, len(self._cache),
-                         self._evictions, self.max_cached_plans)
+                         self._evictions, self.max_cached_plans,
+                         aot=(None if self.aot_cache is None
+                              else self.aot_cache.stats()))
 
     # -- live corpus mutations (DESIGN.md §12) ------------------------------
 
@@ -506,6 +532,9 @@ class Statement:
                 shards=None if dist is None else dist.num_shards,
                 merge_depth=None if dist is None else dist.merge_depth,
                 freshness=None if live is None else live.freshness(),
+                aot=(None if self._db.aot_cache is None else
+                     {**self._db.aot_cache.stats(),
+                      "loaded": dict(ex.aot_loaded)}),
                 **exec_fields)
 
         return build

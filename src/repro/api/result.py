@@ -50,6 +50,8 @@ class ExplainReport:
     merge_depth: int | None = None      # hierarchical-merge levels (dist)
     degraded: dict | None = None        # overload level/budget, if degraded
     freshness: dict | None = None       # live-corpus state, if one attached
+    aot: dict | None = None             # persistent-plan-cache counters +
+                                        # per-bucket disk loads (§15)
 
     def render(self) -> str:
         """Multi-line text form (what ``print(explain())`` shows)."""
@@ -74,6 +76,13 @@ class ExplainReport:
             out.append(f"-- effort: {self.effort}")
         if self.opt is not None:
             out.append(f"-- opt:    {self.opt}")
+        if self.aot is not None:
+            out.append(f"-- aot:    hits={self.aot.get('hits')} "
+                       f"misses={self.aot.get('misses')} "
+                       f"corrupt={self.aot.get('corrupt')} "
+                       f"stale={self.aot.get('stale')} "
+                       f"saves={self.aot.get('saves')} "
+                       f"loaded={self.aot.get('loaded')}")
         if self.degraded is not None:
             out.append(f"-- DEGRADED: overload level="
                        f"{self.degraded.get('level')} "

@@ -1,0 +1,410 @@
+"""Persistent AOT plan cache — killing the cold start (DESIGN.md §15).
+
+CHASE's compilation-based processing pays its cost up front: q9 measures
+~400ms cold ``prepare`` + first execute vs ~0.3ms warm, and every process
+restart re-pays the full trace + XLA compile for every plan.  This module
+makes restarts warm by persisting compiled bucket executables to disk, in
+the JaCe wrapped→lowered→compiled staging idiom: each stage is an explicit,
+serializable object.
+
+**Entry payload.**  Every entry carries two serializations of one bucket
+executable:
+
+* the **portable artifact** — :mod:`jax.export` StableHLO bytes, the
+  authoritative format (versioned, backend-checked by jax itself).  Loading
+  it skips the Python re-trace of the physical builders but still pays the
+  XLA compile of the deserialized module;
+* the **native annex** — the XLA *compiled executable* serialized via
+  :mod:`jax.experimental.serialize_executable`.  Loading it skips the XLA
+  compile too (true AOT: milliseconds instead of hundreds).  It is only
+  valid for the exact (backend, jaxlib) pair that produced it — which the
+  entry key already pins — and the loader falls back to the portable
+  artifact whenever the annex fails to restore.
+
+**Key contract.**  An entry's filename is a digest over everything that
+shapes the compiled computation: the normalized plan fingerprint
+(DESIGN.md §9), the ``EngineOptions`` fingerprint, the canonical static
+binds, the bucket Q, the full argument signature (pytree structure +
+shapes + dtypes of ``(arrays, binds, qvalid, probe_budget)``), the jax /
+jaxlib versions, the backend, and the entry-format version.  The same
+fields are echoed in the entry header and re-validated on load, so a
+renamed or hand-edited file can never serve the wrong executable.
+
+**Invalidation.**  Entries additionally carry a cross-process **catalog
+token**: a content hash of the structural state a compiled plan bakes into
+its closures (table schemas, scalar predicate columns, validity masks,
+index presence — NOT the corpus/index payload arrays, which ride the
+``arrays`` argument and re-bind on load exactly like in-memory cache hits
+do, see ``CompiledQuery.ensure_fresh``).  A token mismatch invalidates the
+disk entry itself (it is deleted and re-saved on the next cold compile),
+not just the in-memory plan.
+
+**Corruption semantics.**  Truncation, garbage bytes, header/key skew, a
+stale catalog token, or an unserializable plan all degrade to a clean cold
+miss: a :class:`AOTCacheWarning` is emitted, the matching
+``corrupt`` / ``stale`` / ``errors`` counter bumps, the bad file is
+removed, and compilation proceeds exactly as if no cache existed.  No
+exception ever escapes into ``prepare`` or ``execute``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import pickle
+import struct
+import tempfile
+import threading
+import time
+import warnings
+from typing import Any, Callable
+
+import jax
+import jaxlib
+import numpy as np
+
+from .schema import ColumnKind
+
+MAGIC = b"CHASEAOT1\n"
+FORMAT_VERSION = 1
+
+
+class AOTCacheWarning(UserWarning):
+    """A persistent-plan-cache entry could not be used (corrupt bytes,
+    version/key skew, catalog drift, or an unserializable plan).  Always a
+    degradation signal, never an error: the engine falls back to a cold
+    compile and keeps serving."""
+
+
+def _sha(*parts: bytes) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(p)
+    return h.hexdigest()
+
+
+def args_signature(args: Any) -> str:
+    """Digest of an argument tuple's pytree structure + leaf avals.
+
+    Two argument tuples share a signature iff a single exported executable
+    can serve both: same tree structure (bind names, index presence,
+    probe-budget lane presence) and same leaf shapes/dtypes (bucket Q,
+    corpus capacity, vector dim)."""
+    leaves, treedef = jax.tree.flatten(args)
+    parts = [repr(treedef)]
+    for leaf in leaves:
+        dtype = getattr(leaf, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(leaf).dtype
+        parts.append(f"{dtype}:{tuple(np.shape(leaf))}")
+    return _sha("\x1f".join(parts).encode())[:32]
+
+
+def catalog_token(catalog: Any, dep_keys: tuple) -> str:
+    """Cross-process content token of the catalog state a plan bakes in.
+
+    The in-memory version clock (DESIGN.md §11) is process-local, so
+    persisted entries cannot carry it.  Instead the token hashes exactly
+    the state that ends up *inside* the traced computation — what a
+    re-registration would silently freeze:
+
+    * ``("table", name)`` — schema layout, every non-vector column's raw
+      bytes (predicate columns become XLA constants in the trace), the
+      validity mask, and vector columns' shape/dtype (their *content*
+      rides the ``arrays`` argument and re-binds in place on load);
+    * ``("index", t, c)`` — presence and type only (index arrays ride
+      ``arrays``; presence/shape changes already miss via the signature);
+    * ``("live" | "sharded" | "quantized", t, c)`` — presence only
+      (mutations and twin re-registrations re-bind through ``arrays`` with
+      zero retraces, exactly as in-memory hits do).
+    """
+    h = hashlib.sha256()
+    for key in dep_keys:
+        h.update(repr(key).encode())
+        kind = key[0]
+        if kind == "table":
+            name = key[1]
+            if not catalog.has_table(name):
+                h.update(b"<absent>")
+                continue
+            tab = catalog.table(name)
+            for cname in tab.schema.names():
+                ctype = tab.schema[cname]
+                col = tab[cname]
+                h.update(f"{cname}:{ctype.kind.value}:"
+                         f"{np.asarray(col).dtype}:{np.shape(col)}".encode())
+                if ctype.kind != ColumnKind.VECTOR:
+                    h.update(np.ascontiguousarray(np.asarray(col)).tobytes())
+            h.update(np.ascontiguousarray(np.asarray(tab.valid)).tobytes())
+        elif kind == "index":
+            idx = catalog.index_for(key[1], key[2])
+            h.update(b"<none>" if idx is None
+                     else type(idx).__name__.encode())
+        elif kind == "live":
+            h.update(b"live" if catalog.live_for(key[1], key[2]) is not None
+                     else b"<none>")
+        # "sharded" / "quantized": handle content rides `arrays`; presence
+        # and layout changes already miss via the argument signature
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class AOTBinding:
+    """One compiled plan's hook into the persistent cache: the cache, the
+    plan-level key components, and the catalog it must watch for
+    structural drift.  Attached to a :class:`BucketedExecutor` by
+    ``Database.prepare`` when the session has ``aot_cache_path`` set."""
+    cache: "AOTPlanCache"
+    plan_key: tuple           # (plan fingerprint, options fp, static key)
+    catalog: Any
+    dep_keys: tuple
+    _token: tuple | None = None
+
+    def token(self) -> str:
+        """The catalog content token, cached per version snapshot (the
+        snapshot is a few dict lookups; the hash walks column bytes)."""
+        snap = self.catalog.version_snapshot(self.dep_keys)
+        if self._token is None or self._token[0] != snap:
+            self._token = (snap, catalog_token(self.catalog, self.dep_keys))
+        return self._token[1]
+
+
+# ---------------------------------------------------------------------------
+# export / load helpers (the wrapped -> lowered -> compiled staging chain)
+# ---------------------------------------------------------------------------
+
+def export_flat(flat_fn: Callable, leaves: list):
+    """Stage 1+2: trace ``flat_fn`` (a function of the flat leaf list) and
+    lower it to a serializable :class:`jax.export.Exported`.
+
+    Flattening the arguments to leaves *before* export sidesteps
+    ``jax.export``'s pytree-serialization registry: custom container types
+    (``IVFIndex``, live-segment handles) stay host-side in the caller's
+    treedef closure, and the exported module sees only arrays."""
+    from jax import export
+    return export.export(jax.jit(flat_fn))(leaves)
+
+
+def native_annex(exported, leaves: list):
+    """Stage 3: XLA-compile the exported module and serialize the compiled
+    executable.  Returns ``(compiled, annex_bytes)`` — ``(None, b"")``
+    when the backend cannot serialize executables (the portable artifact
+    still persists; loads then recompile the StableHLO)."""
+    try:
+        from jax.experimental import serialize_executable
+        compiled = jax.jit(exported.call).lower(leaves).compile()
+        payload, in_tree, out_tree = serialize_executable.serialize(compiled)
+        return compiled, pickle.dumps((payload, in_tree, out_tree))
+    except Exception:                                  # noqa: BLE001
+        return None, b""
+
+
+def load_native(annex: bytes) -> Callable:
+    """Restore a native-annex payload to a callable over the original
+    argument tuple (flattened to leaves at call time).  Near-zero cost: the
+    XLA executable deserializes directly, no trace and no compile."""
+    from jax.experimental import serialize_executable
+    payload, in_tree, out_tree = pickle.loads(annex)
+    loaded = serialize_executable.deserialize_and_load(payload, in_tree,
+                                                       out_tree)
+    return lambda args: loaded(jax.tree.leaves(args))
+
+
+def load_portable(portable: bytes) -> Callable:
+    """Restore a portable ``jax.export`` payload to a callable over the
+    original argument tuple.  Skips the Python trace but re-pays the XLA
+    compile of the StableHLO module on first call."""
+    from jax import export
+    jitted = jax.jit(export.deserialize(portable).call)
+    return lambda args: jitted(jax.tree.leaves(args))
+
+
+class AOTPlanCache:
+    """Disk-backed AOT plan cache: one file per (plan, bucket, signature).
+
+    Thread-safe (one process-wide lock around counters and file moves) and
+    crash-safe (entries are written to a temp file and atomically
+    renamed).  Shared by every ``Database`` connected with the same
+    ``aot_cache_path``; safe to share across processes — the filename
+    digest pins the full key, and a half-written or hand-edited file
+    degrades to a clean cold miss (corruption semantics above)."""
+
+    def __init__(self, path: str):
+        self.path = os.path.abspath(os.fspath(path))
+        os.makedirs(self.path, exist_ok=True)
+        self._lock = threading.Lock()
+        self.counters = {"hits": 0, "misses": 0, "corrupt": 0, "stale": 0,
+                         "errors": 0, "saves": 0}
+
+    # -- key / identity -----------------------------------------------------
+
+    def _identity(self, plan_key: tuple, bucket: int,
+                  sig: str) -> tuple[str, dict]:
+        """(filename stem, header echo dict) for one entry."""
+        expect = {
+            "format": FORMAT_VERSION,
+            "plan_fp": _sha(str(plan_key[0]).encode())[:32],
+            "options_fp": _sha(str(plan_key[1]).encode())[:32],
+            "static_key": _sha(str(plan_key[2]).encode())[:32],
+            "bucket": int(bucket),
+            "sig": sig,
+            "backend": jax.default_backend(),
+            "jax_version": jax.__version__,
+            "jaxlib_version": jaxlib.__version__,
+        }
+        name = _sha(json.dumps(expect, sort_keys=True).encode())[:40]
+        return name, expect
+
+    def entry_path(self, plan_key: tuple, bucket: int, sig: str) -> str:
+        """Absolute path of the entry file for one key (exists or not)."""
+        name, _ = self._identity(plan_key, bucket, sig)
+        return os.path.join(self.path, name + ".aot")
+
+    # -- counters / reporting -----------------------------------------------
+
+    def stats(self) -> dict:
+        """Snapshot of the disk-cache counters (hit/miss/corrupt/stale/
+        errors/saves)."""
+        with self._lock:
+            return dict(self.counters)
+
+    def _bump(self, counter: str) -> None:
+        with self._lock:
+            self.counters[counter] += 1
+
+    def _reject(self, path: str, counter: str, detail: str) -> None:
+        """Count + warn + remove an unusable entry (clean cold miss)."""
+        self._bump(counter)
+        try:
+            os.remove(path)
+        except OSError:
+            pass
+        warnings.warn(AOTCacheWarning(
+            f"AOT plan cache: {counter} entry {os.path.basename(path)} "
+            f"({detail}); falling back to cold compile"), stacklevel=3)
+
+    def note_unserializable(self, plan_key: tuple, exc: Exception) -> None:
+        """An export attempt failed: typed warning + ``errors`` bump, then
+        the caller proceeds with the plain in-memory jit path."""
+        self._bump("errors")
+        warnings.warn(AOTCacheWarning(
+            f"AOT plan cache: plan is not serializable via jax.export "
+            f"({type(exc).__name__}: {exc}); executing without "
+            f"persistence"), stacklevel=3)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, binding: AOTBinding, bucket: int, sig: str,
+             portable: bytes, annex: bytes) -> bool:
+        """Atomically persist one bucket executable (write-through: called
+        right after the cold trace, so LRU eviction later drops only the
+        in-memory copy — the disk entry IS the eviction target)."""
+        name, expect = self._identity(binding.plan_key, bucket, sig)
+        path = os.path.join(self.path, name + ".aot")
+        header = dict(expect)
+        header.update({
+            "catalog_token": binding.token(),
+            "portable_len": len(portable),
+            "annex_len": len(annex),
+            "portable_sha": _sha(portable),
+            "annex_sha": _sha(annex),
+            "created_at": time.time(),
+        })
+        try:
+            hj = json.dumps(header, sort_keys=True).encode()
+            blob = MAGIC + struct.pack(">I", len(hj)) + hj + portable + annex
+            fd, tmp = tempfile.mkstemp(dir=self.path, suffix=".tmp")
+            try:
+                with os.fdopen(fd, "wb") as f:
+                    f.write(blob)
+                os.replace(tmp, path)
+            finally:
+                if os.path.exists(tmp):
+                    os.remove(tmp)
+            self._bump("saves")
+            return True
+        except Exception as exc:                       # noqa: BLE001
+            self._bump("errors")
+            warnings.warn(AOTCacheWarning(
+                f"AOT plan cache: failed to persist entry {name} "
+                f"({type(exc).__name__}: {exc})"), stacklevel=2)
+            return False
+
+    # -- load ---------------------------------------------------------------
+
+    def _parse(self, blob: bytes, path: str):
+        """Validate framing + checksums; None (counted corrupt) on any
+        mismatch."""
+        if not blob.startswith(MAGIC) or len(blob) < len(MAGIC) + 4:
+            self._reject(path, "corrupt", "bad magic / truncated preamble")
+            return None
+        off = len(MAGIC)
+        (hlen,) = struct.unpack(">I", blob[off:off + 4])
+        off += 4
+        try:
+            header = json.loads(blob[off:off + hlen].decode())
+        except (UnicodeDecodeError, json.JSONDecodeError):
+            self._reject(path, "corrupt", "unparseable header")
+            return None
+        off += hlen
+        plen = header.get("portable_len", -1)
+        alen = header.get("annex_len", -1)
+        if plen < 0 or alen < 0 or len(blob) != off + plen + alen:
+            self._reject(path, "corrupt",
+                         f"payload length mismatch ({len(blob) - off} bytes "
+                         f"on disk, header claims {plen}+{alen})")
+            return None
+        portable = blob[off:off + plen]
+        annex = blob[off + plen:]
+        if (_sha(portable) != header.get("portable_sha")
+                or _sha(annex) != header.get("annex_sha")):
+            self._reject(path, "corrupt", "payload checksum mismatch")
+            return None
+        return header, portable, annex
+
+    def load(self, binding: AOTBinding, bucket: int,
+             sig: str) -> Callable | None:
+        """Load one bucket executable, or None (counted) when the entry is
+        absent / corrupt / stale.  The returned callable takes the same
+        ``(arrays, binds, qvalid, probe_budget)`` tuple the in-memory
+        executable takes, so current catalog arrays re-bind on every call
+        exactly as in-memory hits do."""
+        name, expect = self._identity(binding.plan_key, bucket, sig)
+        path = os.path.join(self.path, name + ".aot")
+        try:
+            with open(path, "rb") as f:
+                blob = f.read()
+        except OSError:
+            self._bump("misses")
+            return None
+        parsed = self._parse(blob, path)
+        if parsed is None:
+            return None
+        header, portable, annex = parsed
+        for field, want in expect.items():
+            if header.get(field) != want:
+                self._reject(path, "stale",
+                             f"key field {field!r} mismatch "
+                             f"({header.get(field)!r} != {want!r})")
+                return None
+        if header.get("catalog_token") != binding.token():
+            self._reject(path, "stale",
+                         "catalog structural drift since persist")
+            return None
+        fn = None
+        if annex:
+            try:
+                fn = load_native(annex)
+            except Exception:                          # noqa: BLE001
+                fn = None                  # portable artifact still valid
+        if fn is None:
+            try:
+                fn = load_portable(portable)
+            except Exception as exc:                   # noqa: BLE001
+                self._reject(path, "corrupt",
+                             f"deserialization failed "
+                             f"({type(exc).__name__}: {exc})")
+                return None
+        self._bump("hits")
+        return fn

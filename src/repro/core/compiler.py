@@ -224,6 +224,22 @@ class BucketedExecutor:
         self.arrays = arrays
         self._cache: dict[int, Any] = {}
         self.trace_counts: dict[int, int] = {}
+        # persistent AOT plan cache (DESIGN.md §15): binding + loaded/
+        # exported executables keyed (bucket, argument signature)
+        self._aot = None
+        self._aot_exec: dict[tuple[int, str], Any] = {}
+        self.aot_loaded: dict[int, int] = {}
+
+    def attach_aot(self, binding) -> None:
+        """Route this executor through a persistent AOT plan cache
+        (:class:`repro.core.aot.AOTPlanCache`, DESIGN.md §15).
+
+        Once attached, every bucket executable is loaded from disk when a
+        valid entry exists (zero traces — ``trace_counts`` stays honest)
+        and exported + persisted write-through when it does not.  Failure
+        anywhere in the persistence path degrades to the plain in-memory
+        jit path with a typed :class:`~repro.core.aot.AOTCacheWarning`."""
+        self._aot = binding
 
     def bucket_for(self, qn: int) -> int:
         """Enclosing power-of-two bucket a batch of ``qn`` queries runs in."""
@@ -261,9 +277,68 @@ class BucketedExecutor:
             if budget.ndim >= 1 and budget.shape[0] == qn:
                 budget = _pad_leading(budget, bucket)
             probe_budget = budget
-        out = self.executable(bucket)(self.arrays, padded, valid,
-                                      probe_budget)
+        args = (self.arrays, padded, valid, probe_budget)
+        if self._aot is not None:
+            out = self._aot_call(bucket, args)
+        else:
+            out = self.executable(bucket)(*args)
         return out, bucket, valid
+
+    # -- persistent AOT plan cache (DESIGN.md §15) --------------------------
+
+    def _aot_call(self, bucket: int, args: tuple):
+        """Dispatch one bucket execution through the persistent cache.
+
+        Keyed by (bucket, argument signature): a live-corpus delta growth
+        or index replacement that changes leaf shapes gets a new entry,
+        exactly as the plain jit path would retrace."""
+        from . import aot as _aot
+        sig = _aot.args_signature(args)
+        key = (bucket, sig)
+        fn = self._aot_exec.get(key)
+        if fn is None:
+            fn = self._aot.cache.load(self._aot, bucket, sig)
+            if fn is not None:
+                # disk hit: executable restored without tracing anything
+                self.trace_counts.setdefault(bucket, 0)
+                self.aot_loaded[bucket] = self.aot_loaded.get(bucket, 0) + 1
+            else:
+                fn = self._aot_compile(bucket, sig, args)
+            self._aot_exec[key] = fn
+        return fn(args)
+
+    def _aot_compile(self, bucket: int, sig: str, args: tuple):
+        """Cold path under an attached cache: trace once via ``jax.export``,
+        persist (portable StableHLO + native annex), return the compiled
+        callable.  An unserializable plan restores the trace-count snapshot
+        and falls back to the plain in-memory jit executable."""
+        from . import aot as _aot
+        binding = self._aot
+        self.trace_counts.setdefault(bucket, 0)
+        snapshot = self.trace_counts[bucket]
+        leaves, treedef = jax.tree.flatten(args)
+
+        def flat_run(lvs, _b=bucket, _td=treedef):
+            self.trace_counts[_b] += 1      # advances only on (re)trace
+            arrays, binds, qvalid, probe_budget = jax.tree.unflatten(_td, lvs)
+            return self.plan.batch_fn(arrays, binds, qvalid=qvalid,
+                                      probe_budget=probe_budget)
+
+        try:
+            exported = _aot.export_flat(flat_run, leaves)
+            portable = exported.serialize()
+        except Exception as exc:                       # noqa: BLE001
+            # the failed export may have traced already: keep the count
+            # honest before the plain path's own first-call trace
+            self.trace_counts[bucket] = snapshot
+            binding.cache.note_unserializable(binding.plan_key, exc)
+            return lambda a, _b=bucket: self.executable(_b)(*a)
+        compiled, annex = _aot.native_annex(exported, leaves)
+        binding.cache.save(binding, bucket, sig, portable, annex)
+        if compiled is not None:
+            return lambda a: compiled(jax.tree.leaves(a))
+        jitted = jax.jit(exported.call)
+        return lambda a: jitted(jax.tree.leaves(a))
 
     def __call__(self, binds: dict, probe_budget=None):
         """Bucketed execution: pad -> run bucket executable -> slice to Q.
@@ -476,6 +551,37 @@ class CompiledQuery:
         self.ensure_fresh()
         binds = self._stack_binds(binds_list, stacked)
         return self._batch_jitted.lower(self._arrays, binds)
+
+    def export_batch(self, binds_list: list[dict] | None = None,
+                     **stacked) -> bytes:
+        """Serialize the batched executable at this Q to portable
+        ``jax.export`` StableHLO bytes (DESIGN.md §15).
+
+        The round-trip partner is :meth:`deserialize_batch`: the returned
+        bytes restore — in this or any later process on the same backend —
+        a callable taking the same ``(arrays, binds)`` the batched
+        executable takes, bit-identical to :meth:`execute_batch`.  The
+        full persistent cache (:mod:`repro.core.aot`) layers keying,
+        validation, and the native annex on top of this primitive."""
+        from . import aot as _aot
+        self.ensure_fresh()
+        binds = self._stack_binds(binds_list, stacked)
+        args = (self._arrays, binds)
+        leaves, treedef = jax.tree.flatten(args)
+
+        def flat(lvs, _td=treedef):
+            arrays, b = jax.tree.unflatten(_td, lvs)
+            return self.plan.batch_fn(arrays, b)
+
+        return _aot.export_flat(flat, leaves).serialize()
+
+    @staticmethod
+    def deserialize_batch(data: bytes):
+        """Restore an :meth:`export_batch` payload to a callable taking
+        ``(arrays, binds)`` (re-pays the XLA compile, not the trace)."""
+        from . import aot as _aot
+        fn = _aot.load_portable(data)
+        return lambda arrays, binds: fn((arrays, binds))
 
     def explain(self) -> str:
         """Engine/class/lowering summary plus both plan trees, as text."""

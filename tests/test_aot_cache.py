@@ -1,0 +1,441 @@
+"""Persistent AOT plan cache (DESIGN.md §15): warm restarts, hardened.
+
+The contracts under test:
+
+* **cross-process warm restart** — subprocess A prepares Q1-Q6 under
+  ``aot_cache_path`` and persists; a FRESH subprocess B prepares the same
+  statements and executes with ZERO retraces (``trace_counts`` asserted),
+  returning results bit-identical to an in-process cold compile with no
+  cache attached;
+* **eviction to disk** — an LRU-evicted plan re-prepared later restores
+  its bucket executable from disk instead of re-tracing;
+* **invalidation** — a table re-registration (catalog structural drift)
+  invalidates the PERSISTED entry, not just the memory entry: the stale
+  counter bumps, the entry recompiles, and results reflect the new data;
+* **poisoning** — a truncated entry, garbage bytes, a flipped jax-version
+  header, and a stale catalog token each degrade to a clean cold miss
+  with a typed :class:`~repro.api.AOTCacheWarning` and the matching
+  ``corrupt`` / ``stale`` counter bump in ``cache_info()``; no exception
+  escapes prepare/execute and results stay bit-identical;
+* **unserializable plans** — an export failure restores the trace-count
+  snapshot, warns, bumps ``errors``, and falls back to the plain jit path.
+
+This file doubles as the subprocess child script (``__main__`` guard at
+the bottom): children rebuild the SAME deterministic env (seeded catalog +
+seeded IVF build + seeded binds), so bitwise comparison across processes
+is meaningful.
+"""
+import json
+import os
+import struct
+import subprocess
+import sys
+
+import jax
+import jax.tree_util as jtu
+import numpy as np
+import pytest
+
+from repro.api import AOTCacheWarning, ExecutionHints, connect
+from repro.core import EngineOptions, Metric
+from repro.core.aot import MAGIC, AOTPlanCache
+from repro.data import make_laion_catalog
+from repro.index import build_ivf
+from repro.index.ivf import ProbeConfig
+
+PROBE = ProbeConfig(max_probes=8, capacity=64, termination="bound",
+                    probe_batch=2)
+DIM = 16
+QN = 5                                       # bucketed: pads 5 -> 8
+
+Q1 = ("SELECT sample_id FROM products WHERE price < ${p} "
+      "ORDER BY DISTANCE(embedding, ${qv}) LIMIT 4")
+Q2 = ("SELECT sample_id FROM images "
+      "WHERE DISTANCE(embedding, ${qv}) <= ${r} AND capture_date > ${d}")
+Q3 = """
+SELECT queries.id AS qid, images.sample_id AS tid
+FROM queries JOIN images
+ON DISTANCE(queries.embedding, images.embedding) <= ${r}
+AND images.capture_date > queries.capture_date
+"""
+Q4 = """
+SELECT qid, tid FROM (
+ SELECT users.id AS qid, movies.sample_id AS tid,
+ RANK() OVER (PARTITION BY users.id
+   ORDER BY DISTANCE(users.embedding, movies.embedding)) AS rank
+ FROM users JOIN movies ON users.preferred_rating = movies.rating
+ AND movies.release_year >= ${y}
+) AS ranked WHERE ranked.rank <= 4
+"""
+Q5 = """
+SELECT qid, category FROM (
+ SELECT sample_id AS qid, calorie_level AS category,
+ RANK() OVER (PARTITION BY calorie_level
+   ORDER BY DISTANCE(embedding, ${qv})) AS rank
+ FROM recipes WHERE DISTANCE(embedding, ${qv}) <= ${r}
+) AS ranked WHERE ranked.rank <= 3
+"""
+Q6 = """
+SELECT qid, category, tid FROM (
+ SELECT queries.id AS qid, recipes.sample_id AS tid,
+ recipes.calorie_level AS category,
+ RANK() OVER (PARTITION BY queries.id, recipes.calorie_level
+   ORDER BY DISTANCE(queries.embedding, recipes.embedding)) AS rank
+ FROM queries JOIN recipes
+ ON DISTANCE(queries.embedding, recipes.embedding) <= ${r}
+ AND queries.cuisine <> recipes.cuisine
+) AS ranked WHERE ranked.rank <= 3
+"""
+ALL_SQL = {"q1": Q1, "q2": Q2, "q3": Q3, "q4": Q4, "q5": Q5, "q6": Q6}
+
+
+# ---------------------------------------------------------------------------
+# deterministic env + binds (identical in every process)
+# ---------------------------------------------------------------------------
+
+def build_env():
+    """The cross-process-deterministic test env: seeded catalog, seeded IVF
+    build, and the radius children and parent agree on bit-for-bit."""
+    cat = make_laion_catalog(n_rows=500, n_queries=4, dim=DIM, n_modes=8,
+                             num_categories=4, seed=0)
+    idx = build_ivf(jax.random.key(0), cat.table("laion")["vec"], nlist=8,
+                    metric=Metric.INNER_PRODUCT, iters=3)
+    for name in ("laion", "products", "images", "recipes", "movies"):
+        cat.register_index(name, "vec", idx)
+        cat.register_index(name, "embedding", idx)
+    sims = (np.asarray(cat.table("queries")["embedding"])
+            @ np.asarray(cat.table("laion")["vec"]).T)
+    radius = float(np.median(np.partition(sims, -30, axis=1)[:, -30]))
+    return cat, radius
+
+
+def _qvecs(cat, qn):
+    base = np.asarray(cat.table("queries")["embedding"])
+    rng = np.random.default_rng(3)
+    reps = -(-qn // base.shape[0])
+    qs = np.tile(base, (reps, 1))[:qn]
+    return (qs + 0.01 * rng.standard_normal(qs.shape)).astype(np.float32)
+
+
+def binds_for(case, cat, radius, qn=QN):
+    """Deterministic per-case bind sets (same in every process)."""
+    rng = np.random.default_rng(7)
+    price = np.asarray(cat.table("laion")["price"])
+    dates = np.asarray(cat.table("laion")["capture_date"])
+    years = np.asarray(cat.table("movies")["release_year"])
+    qs = _qvecs(cat, qn)
+    out = []
+    for i in range(qn):
+        if case == "q1":
+            out.append({"qv": qs[i], "p": np.float32(np.quantile(
+                price, rng.uniform(0.3, 1.0)))})
+        elif case == "q2":
+            out.append({"qv": qs[i],
+                        "r": np.float32(radius * rng.uniform(0.95, 1.0)),
+                        "d": np.int32(np.quantile(
+                            dates, rng.uniform(0.2, 0.8)))})
+        elif case in ("q3", "q6"):
+            out.append({"r": np.float32(radius * rng.uniform(0.95, 1.0))})
+        elif case == "q4":
+            out.append({"y": np.int32(np.quantile(
+                years, rng.uniform(0.1, 0.6)))})
+        elif case == "q5":
+            out.append({"qv": qs[i],
+                        "r": np.float32(radius * rng.uniform(0.95, 1.0))})
+    return out
+
+
+def _options():
+    return EngineOptions(engine="chase", probe=PROBE)
+
+
+def ser_tree(data) -> dict:
+    """Bit-exact, JSON-safe serialization of an output tree (dtype + shape
+    + raw bytes hex per leaf) — equality of these dicts IS bit-parity."""
+    out = {}
+    for path, leaf in jtu.tree_leaves_with_path(dict(data)):
+        arr = np.asarray(leaf)
+        out[jtu.keystr(path)] = {"dtype": str(arr.dtype),
+                                 "shape": list(arr.shape),
+                                 "hex": np.ascontiguousarray(arr)
+                                 .tobytes().hex()}
+    return out
+
+
+def _run_all(db, cat, radius, cases=None) -> dict:
+    out = {}
+    for case in sorted(cases or ALL_SQL):
+        st = db.prepare(ALL_SQL[case])
+        res = st.execute(binds_for(case, cat, radius))
+        out[case] = {"data": ser_tree(res.data),
+                     "trace_counts": {str(k): v for k, v
+                                      in st.executor.trace_counts.items()},
+                     "aot_loaded": {str(k): v for k, v
+                                    in st.executor.aot_loaded.items()}}
+    return out
+
+
+def child_main(aot_dir: str, out_path: str) -> None:
+    """Subprocess entry: build the deterministic env, prepare + execute
+    Q1-Q6 under ``aot_cache_path``, dump results + executor state."""
+    cat, radius = build_env()
+    db = connect(cat, _options(), aot_cache_path=aot_dir)
+    results = _run_all(db, cat, radius)
+    with open(out_path, "w") as f:
+        json.dump({"results": results, "aot": db.cache_info().aot}, f)
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def env():
+    return build_env()
+
+
+@pytest.fixture()
+def aot_dir(tmp_path):
+    return str(tmp_path / "aotcache")
+
+
+def _spawn_child(aot_dir: str, out_path: str) -> None:
+    src = os.path.join(os.path.dirname(__file__), "..", "src")
+    child_env = dict(os.environ)
+    child_env["PYTHONPATH"] = (os.path.abspath(src) + os.pathsep
+                               + child_env.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--child",
+         aot_dir, out_path],
+        env=child_env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, (
+        f"child failed:\nstdout:\n{proc.stdout}\nstderr:\n{proc.stderr}")
+
+
+# ---------------------------------------------------------------------------
+# cross-process warm restart (the tentpole's acceptance test)
+# ---------------------------------------------------------------------------
+
+def test_cross_process_warm_restart(env, aot_dir, tmp_path):
+    """Process A persists Q1-Q6; fresh process B loads every bucket with
+    ZERO retraces and bit-identical results; the in-process no-cache cold
+    compile agrees bit-for-bit with both."""
+    out_a = str(tmp_path / "a.json")
+    out_b = str(tmp_path / "b.json")
+    _spawn_child(aot_dir, out_a)
+    _spawn_child(aot_dir, out_b)
+    with open(out_a) as f:
+        a = json.load(f)
+    with open(out_b) as f:
+        b = json.load(f)
+
+    # A compiled cold (one trace per case) and persisted every bucket
+    for case, rep in a["results"].items():
+        assert sum(rep["trace_counts"].values()) == 1, (case, rep)
+        assert rep["aot_loaded"] == {}, case
+    assert a["aot"]["saves"] == len(ALL_SQL)
+    assert a["aot"]["hits"] == 0
+
+    # B restored every bucket from disk: zero traces anywhere
+    for case, rep in b["results"].items():
+        assert all(v == 0 for v in rep["trace_counts"].values()), (case, rep)
+        assert sum(rep["aot_loaded"].values()) == 1, (case, rep)
+    assert b["aot"]["hits"] == len(ALL_SQL)
+    assert b["aot"]["corrupt"] == b["aot"]["stale"] == 0
+
+    # bit-identical across the restart
+    for case in ALL_SQL:
+        assert a["results"][case]["data"] == b["results"][case]["data"], case
+
+    # ... and bit-identical to an in-process cold compile with NO cache
+    cat, radius = env
+    ref = _run_all(connect(cat, _options()), cat, radius)
+    for case in ALL_SQL:
+        assert ref[case]["data"] == a["results"][case]["data"], case
+
+
+def test_in_process_restart_zero_traces(env, aot_dir):
+    """Two sessions over one catalog: the second loads from disk (zero
+    traces, bit-parity) — the cheap single-process restart proxy."""
+    cat, radius = env
+    cases = ("q1", "q5")
+    first = _run_all(connect(cat, _options(), aot_cache_path=aot_dir),
+                     cat, radius, cases)
+    db2 = connect(cat, _options(), aot_cache_path=aot_dir)
+    second = _run_all(db2, cat, radius, cases)
+    for case in cases:
+        assert first[case]["data"] == second[case]["data"]
+        assert all(v == 0 for v in second[case]["trace_counts"].values())
+        assert sum(second[case]["aot_loaded"].values()) == 1
+    assert db2.cache_info().aot["hits"] == len(cases)
+
+
+def test_eviction_to_disk_round_trip(env, aot_dir):
+    """An LRU-evicted plan re-prepared later restores its bucket executable
+    from disk: eviction evicts to disk, not to nothing."""
+    cat, radius = env
+    db = connect(cat, _options(), max_cached_plans=1,
+                 aot_cache_path=aot_dir)
+    st1 = db.prepare(Q1)
+    want = ser_tree(st1.execute(binds_for("q1", cat, radius)).data)
+    db.prepare(Q5).execute(binds_for("q5", cat, radius))   # evicts Q1
+    assert db.cache_info().evictions >= 1
+
+    st1b = db.prepare(Q1)                                  # re-prepare
+    got = st1b.execute(binds_for("q1", cat, radius))
+    assert ser_tree(got.data) == want
+    assert all(v == 0 for v in st1b.executor.trace_counts.values()), (
+        st1b.executor.trace_counts)
+    assert sum(st1b.executor.aot_loaded.values()) == 1
+
+
+# ---------------------------------------------------------------------------
+# invalidation: catalog structural drift kills the DISK entry
+# ---------------------------------------------------------------------------
+
+def test_catalog_bump_invalidates_persisted_entry(aot_dir):
+    """Re-registering a table after persisting invalidates the disk entry
+    (stale counter, typed warning), and the recompiled plan sees the NEW
+    data — never the frozen closure a poisoned hit would resurface."""
+    from repro.core.schema import Table
+    cat, radius = build_env()
+    db = connect(cat, _options(), aot_cache_path=aot_dir)
+    db.prepare(Q1).execute(binds_for("q1", cat, radius))
+    assert db.cache_info().aot["saves"] == 1
+
+    # re-register the plan's scan table with a shifted price column:
+    # structural drift the catalog clock tracks (predicate columns are
+    # baked into the trace, so the persisted executable is now wrong)
+    tab = cat.table("products")
+    cols = {n: tab[n] for n in tab.schema.names()}
+    cols["price"] = cols["price"] + np.float32(1000.0)
+    cat.register("products", Table(tab.schema, cols))
+
+    db2 = connect(cat, _options(), aot_cache_path=aot_dir)
+    st = db2.prepare(Q1)
+    with pytest.warns(AOTCacheWarning, match="stale"):
+        res = st.execute(binds_for("q1", cat, radius))
+    assert db2.cache_info().aot["stale"] == 1
+    # every price now exceeds the bind threshold: no rows can match
+    assert not np.asarray(res["valid"]).any()
+    # the recompile re-persisted a fresh entry for the new catalog state
+    assert db2.cache_info().aot["saves"] == 1
+    db3 = connect(cat, _options(), aot_cache_path=aot_dir)
+    st3 = db3.prepare(Q1)
+    res3 = st3.execute(binds_for("q1", cat, radius))
+    assert all(v == 0 for v in st3.executor.trace_counts.values())
+    assert ser_tree(res3.data) == ser_tree(res.data)
+
+
+# ---------------------------------------------------------------------------
+# cache poisoning: every corruption degrades to a clean cold miss
+# ---------------------------------------------------------------------------
+
+def _entry_files(aot_dir):
+    return sorted(os.path.join(aot_dir, f) for f in os.listdir(aot_dir)
+                  if f.endswith(".aot"))
+
+
+def _rewrite_header(path: str, **fields) -> None:
+    """Rewrite header fields of an entry file, keeping the framing and the
+    payload checksums valid — isolates the identity/token checks."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    off = len(MAGIC)
+    (hlen,) = struct.unpack(">I", blob[off:off + 4])
+    header = json.loads(blob[off + 4:off + 4 + hlen].decode())
+    header.update(fields)
+    hj = json.dumps(header, sort_keys=True).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC + struct.pack(">I", len(hj)) + hj
+                + blob[off + 4 + hlen:])
+
+
+POISONS = {
+    "truncated": ("corrupt",
+                  lambda p: open(p, "r+b").truncate(
+                      os.path.getsize(p) // 2)),
+    "garbage": ("corrupt",
+                lambda p: open(p, "wb").write(b"\x00garbage" * 64)),
+    "jax_version_skew": ("stale",
+                         lambda p: _rewrite_header(p, jax_version="0.0.0")),
+    "catalog_token": ("stale",
+                      lambda p: _rewrite_header(
+                          p, catalog_token="deadbeef" * 8)),
+}
+
+
+@pytest.mark.parametrize("poison", sorted(POISONS))
+def test_poisoned_entry_is_clean_cold_miss(env, aot_dir, poison):
+    cat, radius = env
+    counter, mutate = POISONS[poison]
+    want = ser_tree(connect(cat, _options(), aot_cache_path=aot_dir)
+                    .prepare(Q1).execute(binds_for("q1", cat, radius)).data)
+    (path,) = _entry_files(aot_dir)
+    mutate(path)
+
+    db = connect(cat, _options(), aot_cache_path=aot_dir)
+    st = db.prepare(Q1)
+    with pytest.warns(AOTCacheWarning, match=counter):
+        res = st.execute(binds_for("q1", cat, radius))
+    info = db.cache_info()
+    assert info.aot[counter] == 1, (poison, info.aot)
+    # degraded to a cold compile: traced once, results bit-identical
+    assert sum(st.executor.trace_counts.values()) == 1
+    assert ser_tree(res.data) == want
+    # the bad file was removed and a fresh entry re-persisted
+    assert info.aot["saves"] == 1
+    assert len(_entry_files(aot_dir)) == 1
+
+
+def test_unserializable_plan_falls_back(env, aot_dir, monkeypatch):
+    """An export failure restores the trace-count snapshot, warns, bumps
+    ``errors``, and the plain jit path still returns correct results."""
+    import repro.core.aot as aot_mod
+    cat, radius = env
+    want = ser_tree(connect(cat, _options())
+                    .prepare(Q1).execute(binds_for("q1", cat, radius)).data)
+
+    def boom(flat_fn, leaves):
+        raise TypeError("synthetic: plan not exportable")
+
+    monkeypatch.setattr(aot_mod, "export_flat", boom)
+    db = connect(cat, _options(), aot_cache_path=aot_dir)
+    st = db.prepare(Q1)
+    with pytest.warns(AOTCacheWarning, match="not serializable"):
+        res = st.execute(binds_for("q1", cat, radius))
+    assert db.cache_info().aot["errors"] == 1
+    assert db.cache_info().aot["saves"] == 0
+    assert sum(st.executor.trace_counts.values()) == 1   # snapshot honest
+    assert ser_tree(res.data) == want
+    assert _entry_files(aot_dir) == []
+
+
+def test_explain_reports_aot_line(env, aot_dir):
+    cat, radius = env
+    db = connect(cat, _options(), aot_cache_path=aot_dir)
+    st = db.prepare(Q1)
+    res = st.execute(binds_for("q1", cat, radius))
+    rep = res.explain()
+    assert rep.aot is not None and rep.aot["saves"] == 1
+    assert any(line.startswith("-- aot:") for line
+               in rep.render().splitlines())
+    # no cache attached -> no line
+    res2 = connect(cat, _options()).prepare(Q1).execute(
+        binds_for("q1", cat, radius))
+    assert res2.explain().aot is None
+
+
+def test_cache_dir_is_created_and_shared(tmp_path):
+    nested = str(tmp_path / "deep" / "aot")
+    cache = AOTPlanCache(nested)
+    assert os.path.isdir(nested)
+    assert cache.stats() == {"hits": 0, "misses": 0, "corrupt": 0,
+                             "stale": 0, "errors": 0, "saves": 0}
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 4 and sys.argv[1] == "--child":
+        child_main(sys.argv[2], sys.argv[3])
+    else:
+        raise SystemExit("usage: test_aot_cache.py --child AOT_DIR OUT_JSON")

@@ -35,7 +35,16 @@ from repro.kernels.ops import (fused_range_scan, fused_range_topk_batch,
 from repro.kernels.quant import (fused_range_topk_batch_q,
                                  fused_scan_topk_batch_q)
 
-pytestmark = pytest.mark.slow
+# slow-marked AND backend-gated at module level: off-TPU runs show the
+# explicit skip reason in the `-ra` summary instead of silently passing by
+pytestmark = [
+    pytest.mark.slow,
+    pytest.mark.skipif(
+        jax.default_backend() != "tpu",
+        reason="no TPU backend attached (default_backend="
+               f"{jax.default_backend()!r}): Mosaic compile-check needs "
+               "real hardware; interpret-mode coverage runs in tier-1"),
+]
 
 N, D, QN, K, CAP = 4096, 128, 128, 8, 16
 
